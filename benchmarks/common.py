@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: timing, CSV rows, dataset sampling."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timed(fn, *args, repeats: int = 3, **kwargs):
+    """(result, best_seconds) with a warmup call (excludes compile)."""
+    out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+class Report:
+    """Collects (benchmark, metric, value) rows; prints CSV at the end."""
+
+    def __init__(self):
+        self.rows: list[tuple[str, str, float]] = []
+
+    def add(self, bench: str, metric: str, value) -> None:
+        self.rows.append((bench, metric, float(value)))
+        print(f"  {bench},{metric},{value:.4g}", flush=True)
+
+    def csv(self) -> str:
+        lines = ["benchmark,metric,value"]
+        lines += [f"{b},{m},{v:.6g}" for b, m, v in self.rows]
+        return "\n".join(lines)
+
+
+def pct(before, after) -> float:
+    before = float(np.maximum(before, 1))
+    return 100.0 * (float(before) - float(after)) / before

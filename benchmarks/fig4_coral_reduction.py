@@ -1,0 +1,30 @@
+"""Paper Fig 4: CoralTDA vertex reduction on graph/node classification
+datasets, for PD_k with k = 1..5 (reduction = 100·(|V|-|V^{k+1}|)/|V|)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Report
+from repro.core.api import reduction_stats
+from repro.data import graphs as gdata
+
+DATASETS = ("DHFR", "ENZYMES", "NCI1", "PROTEINS", "SYNNEW", "OHSU",
+            "TWITTER", "FACEBOOK", "CORA", "CITESEER")
+
+
+def run(report: Report, batch: int = 32, ks=(1, 2, 3, 4, 5)) -> None:
+    key = jax.random.PRNGKey(42)
+    for name in DATASETS:
+        g = gdata.load_dataset(name, key, batch=batch)
+        for k in ks:
+            st = reduction_stats(g, dim=k, method="coral")
+            v = float(jnp.mean(st.v_reduction_pct()))
+            report.add("fig4_coral", f"{name}_k{k}_vertex_reduction_pct", v)
+
+
+if __name__ == "__main__":
+    r = Report()
+    run(r)
+    print(r.csv())

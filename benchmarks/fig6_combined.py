@@ -1,0 +1,26 @@
+"""Paper Fig 6: combined PrunIT + CoralTDA vertex reduction on the large
+networks, for cores k = 2..5 (PD_{k-1})."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Report
+from repro.core.api import reduction_stats
+from repro.data import graphs as gdata
+
+
+def run(report: Report, n_pad: int = 1024, cores=(2, 3, 4, 5)) -> None:
+    key = jax.random.PRNGKey(13)
+    for name in gdata.TABLE1:
+        g = gdata.load_large_network(name, jax.random.fold_in(key, 2), n_pad=n_pad)
+        for k in cores:
+            st = reduction_stats(g, dim=k - 1, method="both", sublevel=False)
+            report.add("fig6_combined", f"{name}_core{k}_V_reduction_pct",
+                       float(jnp.mean(st.v_reduction_pct())))
+
+
+if __name__ == "__main__":
+    r = Report()
+    run(r)
+    print(r.csv())

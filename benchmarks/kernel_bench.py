@@ -1,0 +1,36 @@
+"""Kernel-level microbenchmarks: Pallas (interpret on CPU) vs pure-jnp
+reference, plus the jnp path that production uses on CPU.  On TPU the same
+harness times the compiled kernels.  Shapes swept over the regimes the TDA
+pipeline uses (B small-N graphs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Report, timed
+from repro.core.prunit import domination_matrix
+from repro.core.kcore import kcore_mask
+from repro.data import graphs as gdata
+from repro.kernels import ops, ref
+
+
+def run(report: Report) -> None:
+    key = jax.random.PRNGKey(5)
+    for (b, n) in ((32, 128), (8, 256)):
+        g = gdata.erdos_renyi(key, b, n, n, 0.08)
+        _, t_jnp = timed(jax.jit(domination_matrix), g.adj, g.mask)
+        report.add("kernel_domination", f"B{b}_N{n}_jnp_s", t_jnp)
+        _, t_pal = timed(lambda a, m: ops.domination(a, m), g.adj, g.mask)
+        report.add("kernel_domination", f"B{b}_N{n}_pallas_interp_s", t_pal)
+
+        _, t_kc = timed(jax.jit(lambda a, m: kcore_mask(a, m, 3)), g.adj, g.mask)
+        report.add("kernel_kcore", f"B{b}_N{n}_jnp_s", t_kc)
+
+        _, t_cn = timed(lambda a: ops.common_neighbors(a), g.adj)
+        report.add("kernel_common_neighbors", f"B{b}_N{n}_pallas_interp_s", t_cn)
+
+
+if __name__ == "__main__":
+    r = Report()
+    run(r)
+    print(r.csv())

@@ -1,0 +1,59 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig4,table1] [--quick]
+
+Writes results/bench.csv and prints per-row CSV as it goes.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+import traceback
+
+from benchmarks.common import Report
+
+SUITES = {
+    "fig4": ("benchmarks.fig4_coral_reduction", "CoralTDA vertex reduction (Fig 4)"),
+    "fig5a": ("benchmarks.fig5_prunit", "PrunIT vertex reduction (Fig 5a)"),
+    "fig5b": ("benchmarks.fig5b_ego_time", "PrunIT ego-net PD0 time (Fig 5b)"),
+    "table1": ("benchmarks.table1_large_networks", "PrunIT on large networks (Table 1)"),
+    "fig6": ("benchmarks.fig6_combined", "PrunIT+CoralTDA combined (Fig 6)"),
+    "fig7_9": ("benchmarks.fig7_9_secondary", "clique/time/edge reduction (Figs 7-9)"),
+    "table3": ("benchmarks.table3_strong_collapse", "PrunIT vs Strong Collapse (Table 3)"),
+    "fig2": ("benchmarks.fig2_clustering", "clustering coeff vs higher PDs (Fig 2/10)"),
+    "kernels": ("benchmarks.kernel_bench", "Pallas kernel microbenchmarks"),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite keys (default: all)")
+    ap.add_argument("--out", default="results/bench.csv")
+    args = ap.parse_args()
+
+    keys = args.only.split(",") if args.only else list(SUITES)
+    report = Report()
+    failures = []
+    for k in keys:
+        mod_name, desc = SUITES[k]
+        print(f"[bench] {k}: {desc}", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run(report)
+            print(f"[bench] {k} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(k)
+            traceback.print_exc()
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(report.csv() + "\n")
+    print(f"\nwrote {args.out} ({len(report.rows)} rows)")
+    if failures:
+        raise SystemExit(f"failed suites: {failures}")
+
+
+if __name__ == "__main__":
+    main()

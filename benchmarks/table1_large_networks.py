@@ -1,0 +1,27 @@
+"""Paper Table 1: PrunIT vertex/edge reduction on SNAP large networks
+(scaled surrogates matched on family + average degree; see DESIGN.md §8)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Report
+from repro.core.api import reduction_stats
+from repro.data import graphs as gdata
+
+
+def run(report: Report, n_pad: int = 1024) -> None:
+    key = jax.random.PRNGKey(11)
+    for name in gdata.TABLE1:
+        g = gdata.load_large_network(name, jax.random.fold_in(key, 1), n_pad=n_pad)
+        st = reduction_stats(g, dim=0, method="prunit", sublevel=False)
+        report.add("table1_large", f"{name}_V_reduction_pct",
+                   float(jnp.mean(st.v_reduction_pct())))
+        report.add("table1_large", f"{name}_E_reduction_pct",
+                   float(jnp.mean(st.e_reduction_pct())))
+
+
+if __name__ == "__main__":
+    r = Report()
+    run(r)
+    print(r.csv())

@@ -1,0 +1,73 @@
+"""TDA as a model-analysis pass: persistence diagrams of attention graphs.
+
+Train a tiny LM for a few steps, threshold its attention matrices into
+graphs, and compute their PDs with the paper's reductions — topology of the
+attention pattern as a training diagnostic (DESIGN.md §4).
+
+  PYTHONPATH=src python examples/attention_topology.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.core.api import reduction_stats, topological_signature
+from repro.core.graph import canonicalize
+from repro.data.tokens import TokenStream
+from repro.models import transformer as tf
+
+
+def attention_graph(params, cfg, tokens, threshold=0.06):
+    """(B, S, S) bool graphs from the average attention of the first block."""
+    d = cfg.d_model
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    seg = next(iter(params["segments"].values()))
+    p = jax.tree.map(lambda a: a[0], seg)  # first layer of the first segment
+    from repro.models.layers import rmsnorm, rope_tables
+
+    xn = rmsnorm(x, p["ln1"], cfg.rms_eps)
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    ap = p["attn"]
+    q = (xn @ ap["w_q"].astype(jnp.bfloat16)).reshape(b, s, cfg.q_heads, dh)
+    k = (xn @ ap["w_k"].astype(jnp.bfloat16)).reshape(b, s, cfg.kv_heads, dh)
+    rep = cfg.q_heads // cfg.kv_heads
+    k = jnp.repeat(k, rep, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k) / jnp.sqrt(dh)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    attn = jax.nn.softmax(jnp.where(causal, scores.astype(jnp.float32), -1e9), -1)
+    a_mean = attn.mean(axis=1)  # (B, S, S) head-averaged
+    sym = jnp.maximum(a_mean, jnp.swapaxes(a_mean, -1, -2))
+    return sym > threshold
+
+
+def main():
+    cfg = reduced_config("qwen3-1.7b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    stream = TokenStream(vocab_size=cfg.vocab_size, batch=8, seq_len=48)
+    tokens = stream.batch_at(jnp.int32(0))["tokens"]
+
+    adj = attention_graph(params, cfg, tokens)
+    mask = jnp.ones(adj.shape[:2], bool)
+    # filtration: token position (sublevel = prefix growth of the context)
+    f = jnp.broadcast_to(jnp.arange(adj.shape[1], dtype=jnp.float32),
+                         adj.shape[:2])
+    g = canonicalize(adj, mask, f)
+
+    st = reduction_stats(g, dim=1, method="coral")
+    coral_red = np.asarray(st.v_reduction_pct())
+    print("CoralTDA 2-core reduction %:", coral_red.round(1))
+    if (coral_red == 100.0).all():
+        print("  -> 2-cores are empty: Thm 2 PROVES PD1 is trivial for every "
+              "attention graph without computing any PD.")
+    # PD0/PD1 via PrunIT (valid at every dimension, Thm 7)
+    d = topological_signature(g, dim=1, method="prunit",
+                              edge_cap=256, tri_cap=128)
+    print("attention-graph betti_0 (clusters of attended positions):",
+          np.asarray(d.betti(0)))
+    print("attention-graph PD1 feature count (attention cycles):",
+          np.asarray(d.count(1)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""The paper's §6.2 workload at framework scale: per-vertex ego-net
+persistence diagrams for node classification (TRL-style), with PrunIT
+reduction, vmapped over all egos and ready to pjit-shard over a pod mesh.
+
+  PYTHONPATH=src python examples/ego_pipeline.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import topological_signature
+from repro.data import graphs as gdata
+from repro.data.ego import ego_batch
+from repro.topo.features import feature_vector
+
+
+def main():
+    # OGB-arxiv-regime host surrogate: preferential-attachment citation graph
+    key = jax.random.PRNGKey(0)
+    host = gdata.barabasi_albert(key, 1, 256, 256, 3)
+    f = host.degrees()[0].astype(jnp.float32)
+
+    # one ego net per vertex -> (256, 48, 48) padded batch
+    egos = ego_batch(host.adj[0], f, n_pad=48)
+    print(f"{egos.batch} ego nets, padded order {egos.n}")
+
+    # per-ego PD0/PD1 with PrunIT (superlevel, degree filtration: every
+    # dominated vertex is removable -> maximal reduction, paper Remark 8)
+    t0 = time.time()
+    d = topological_signature(egos, dim=1, method="prunit", sublevel=False,
+                              edge_cap=160, tri_cap=64)
+    feats = feature_vector(d, max_dim=1, res=4)
+    jax.block_until_ready(feats)
+    print(f"PDs + features for all egos in {time.time()-t0:.2f}s "
+          f"(feature dim {feats.shape[-1]})")
+
+    b0 = np.asarray(d.betti(0))
+    print("betti_0 quantiles (ego connectivity):",
+          np.quantile(b0, [0.1, 0.5, 0.9]).round(1))
+    # downstream: feats feeds any per-node classifier; on a pod mesh the
+    # same call is sharded with
+    #   jax.jit(pipeline, in_shardings=NamedSharding(mesh, P(("pod","data"))))
+    # — see repro/launch/dryrun.py::tda_input_specs (the dry-run proves the
+    # 512-chip lowering).
+
+
+if __name__ == "__main__":
+    main()

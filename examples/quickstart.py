@@ -1,0 +1,52 @@
+"""Quickstart: exact persistence diagrams of graphs with the paper's
+reductions (CoralTDA Thm 2 + PrunIT Thm 7), end to end in ~20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import networkx as nx
+
+from repro.core.api import reduce_graphs, reduction_stats, topological_signature
+from repro.core.graph import from_networkx
+from repro.core.persistence_ref import persistence_diagrams
+import numpy as np
+
+
+def main():
+    # a batch of graphs: a 6-cycle (one 1-dim hole), a clique (none),
+    # a Petersen graph, and a random ego-net-like graph
+    graphs = [
+        nx.cycle_graph(6),
+        nx.complete_graph(6),
+        nx.petersen_graph(),
+        nx.barabasi_albert_graph(24, 2, seed=1),
+    ]
+    g = from_networkx(graphs, n_pad=32)  # degree filtration by default
+
+    # 1. the paper's reductions — how much graph do we NOT have to process?
+    st = reduction_stats(g, dim=1, method="both")
+    print("vertex reduction % per graph:",
+          np.asarray(st.v_reduction_pct()).round(1))
+    print("edge   reduction % per graph:",
+          np.asarray(st.e_reduction_pct()).round(1))
+
+    # 2. exact PDs on the reduced graphs (identical to the full computation)
+    d = topological_signature(g, dim=1, method="both",
+                              edge_cap=128, tri_cap=128)
+    print("betti_1 per graph:", np.asarray(d.betti(1)))
+
+    # 3. cross-check graph 0 against the NumPy oracle on the UNREDUCED graph
+    full = persistence_diagrams(np.asarray(g.adj[0]),
+                                np.asarray(g.f[0]),
+                                np.asarray(g.mask[0]), max_dim=1)
+    from repro.core.persistence_jax import diagrams_to_numpy
+    ours = diagrams_to_numpy(d, 0, max_dim=1)
+    print("C6 PD1 (reduced pipeline):", ours[1])
+    print("C6 PD1 (oracle, full)    :", full[1])
+    assert ours[1] == full[1], "Theorem 2/7 exactness violated!"
+    print("exactness check passed — reductions are lossless.")
+
+
+if __name__ == "__main__":
+    main()

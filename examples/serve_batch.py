@@ -1,0 +1,36 @@
+"""Batched serving example: prefill a batch of prompts, decode new tokens
+with a KV cache, across three different architecture families (dense GQA,
+MoE, RWKV6) through the same serve API.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.data.tokens import TokenStream
+from repro.models import transformer as tf
+from repro.serve.serve_step import generate
+
+
+def main():
+    for arch in ("qwen3-1.7b", "olmoe-1b-7b", "rwkv6-1.6b"):
+        cfg = reduced_config(arch)
+        params = tf.init_params(cfg, jax.random.PRNGKey(0))
+        stream = TokenStream(vocab_size=cfg.vocab_size, batch=4, seq_len=12)
+        prompts = stream.batch_at(jnp.int32(0))["tokens"]
+        t0 = time.time()
+        out = generate(params, cfg, prompts, max_new=16, s_kv=48,
+                       temperature=0.8, rng=jax.random.PRNGKey(1))
+        jax.block_until_ready(out)
+        dt = time.time() - t0
+        new = np.asarray(out)[:, prompts.shape[1]:]
+        print(f"{arch:14s} [{cfg.family}] batch=4, 16 new tokens in {dt:5.1f}s"
+              f" -> sample: {new[0][:8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

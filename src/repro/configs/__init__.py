@@ -1,0 +1,4 @@
+"""One config module per assigned architecture (+ the paper's own workload)."""
+from repro.configs.registry import ARCHS, get_config
+
+__all__ = ["ARCHS", "get_config"]

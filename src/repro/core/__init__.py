@@ -1,0 +1,34 @@
+"""TopoPipe core: CoralTDA + PrunIT exact reductions and persistence."""
+from repro.core.api import (
+    ReductionStats,
+    reduce_graphs,
+    reduction_stats,
+    topological_signature,
+)
+from repro.core.graph import GraphBatch, canonicalize, degree_filtration, from_edge_lists, from_networkx
+from repro.core.kcore import coral_reduce, coreness, degeneracy, kcore, kcore_mask
+from repro.core.persistence_jax import Diagrams, persistence_diagrams_batched
+from repro.core.prunit import domination_matrix, prunit, prunit_mask, prunit_then_coral
+
+__all__ = [
+    "Diagrams",
+    "GraphBatch",
+    "ReductionStats",
+    "canonicalize",
+    "coral_reduce",
+    "coreness",
+    "degeneracy",
+    "degree_filtration",
+    "domination_matrix",
+    "from_edge_lists",
+    "from_networkx",
+    "kcore",
+    "kcore_mask",
+    "persistence_diagrams_batched",
+    "prunit",
+    "prunit_mask",
+    "prunit_then_coral",
+    "reduce_graphs",
+    "reduction_stats",
+    "topological_signature",
+]

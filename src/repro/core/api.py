@@ -1,0 +1,131 @@
+"""High-level TopoPipe API: reduce -> filter -> persist, batched & shardable.
+
+This is the paper's contribution packaged as a composable JAX module: feed a
+GraphBatch, choose a reduction (coral / prunit / both / none), get exact
+persistence diagrams.  All functions are jit/vmap/pjit friendly; the launch
+layer shards batches over the ("pod", "data") mesh axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GraphBatch
+from repro.core.kcore import coral_reduce, kcore
+from repro.core.persistence_jax import Diagrams, persistence_diagrams_batched
+from repro.core.prunit import prunit
+
+
+REDUCTIONS = ("none", "coral", "prunit", "both")
+
+
+def reduce_graphs(g: GraphBatch, dim: int, method: str = "both",
+                  sublevel: bool = True) -> GraphBatch:
+    """Apply the paper's reduction(s) for computing PD_dim."""
+    if method not in REDUCTIONS:
+        raise ValueError(f"unknown reduction {method!r}; want one of {REDUCTIONS}")
+    if method in ("prunit", "both"):
+        g = prunit(g, sublevel=sublevel)
+    if method in ("coral", "both"):
+        g = coral_reduce(g, dim)
+    return g
+
+
+@partial(jax.jit, static_argnames=("dim", "method", "sublevel", "edge_cap",
+                                   "tri_cap", "quad_cap", "reducer"))
+def topological_signature(
+    g: GraphBatch,
+    dim: int = 1,
+    method: str = "both",
+    sublevel: bool = True,
+    edge_cap: int = 256,
+    tri_cap: int = 512,
+    quad_cap: int = 0,
+    reducer: str = "jnp",
+) -> Diagrams:
+    """End-to-end: reduce with the paper's algorithms, then exact PDs.
+
+    The returned Diagrams cover dimensions 0..dim.  (Coral reduction is only
+    exact for dimensions >= dim's core level, so when ``method`` includes
+    coral, read out only dimension ``dim`` — or use method="prunit" for all
+    dims at once.)
+    """
+    gr = reduce_graphs(g, dim, method, sublevel)
+    return persistence_diagrams_batched(
+        gr, max_dim=dim, edge_cap=edge_cap, tri_cap=tri_cap, quad_cap=quad_cap,
+        sublevel=sublevel, reducer=reducer,
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ReductionStats:
+    """Per-graph reduction accounting (the paper's evaluation metric)."""
+
+    v_before: jax.Array
+    v_after: jax.Array
+    e_before: jax.Array
+    e_after: jax.Array
+
+    def v_reduction_pct(self) -> jax.Array:
+        v0 = jnp.maximum(self.v_before, 1)
+        return 100.0 * (self.v_before - self.v_after) / v0
+
+    def e_reduction_pct(self) -> jax.Array:
+        e0 = jnp.maximum(self.e_before, 1)
+        return 100.0 * (self.e_before - self.e_after) / e0
+
+
+def topological_signature_sharded(
+    g: GraphBatch,
+    mesh,
+    dim: int = 1,
+    method: str = "both",
+    sublevel: bool = True,
+    edge_cap: int = 256,
+    tri_cap: int = 512,
+    quad_cap: int = 0,
+    reducer: str = "jnp",
+) -> Diagrams:
+    """``topological_signature`` under shard_map over every mesh axis.
+
+    The workload is embarrassingly parallel over graphs, but under plain pjit
+    GSPMD cannot partition the vmapped scatter/gather/top-k ops inside the
+    pipeline and inserts batch all-gathers (measured: 0.6-3 GB/device on a
+    256-chip mesh).  shard_map pins the whole pipeline per-device, so the
+    collective term is exactly zero (§Perf iteration 5).  The global batch
+    must divide the mesh size.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    spec = P(axes)
+
+    def per_device(adj, mask, f):
+        gb = GraphBatch(adj=adj, mask=mask, f=f)
+        return topological_signature(
+            gb, dim=dim, method=method, sublevel=sublevel,
+            edge_cap=edge_cap, tri_cap=tri_cap, quad_cap=quad_cap,
+            reducer=reducer,
+        )
+
+    return shard_map(
+        per_device, mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=Diagrams(birth=spec, death=spec, dim=spec, valid=spec),
+        check_rep=False,
+    )(g.adj, g.mask, g.f)
+
+
+@partial(jax.jit, static_argnames=("dim", "method", "sublevel"))
+def reduction_stats(g: GraphBatch, dim: int, method: str = "both",
+                    sublevel: bool = True) -> ReductionStats:
+    gr = reduce_graphs(g, dim, method, sublevel)
+    return ReductionStats(
+        v_before=g.n_vertices(), v_after=gr.n_vertices(),
+        e_before=g.n_edges(), e_after=gr.n_edges(),
+    )

@@ -1,0 +1,119 @@
+r"""PrunIT: dominated-vertex pruning that preserves every persistence diagram.
+
+Paper Theorem 7: if ``u`` is dominated by ``v`` (closed neighborhoods,
+``N[u] ⊆ N[v]``) and ``f(u) >= f(v)`` (sublevel filtration; reversed for
+superlevel), then ``PD_k(G, f) = PD_k(G - {u}, f)`` for all k >= 0.
+
+Domination as linear algebra (DESIGN.md §3, paper Remark 9 rewritten for the
+MXU): with ``Nc = A ∨ I`` the closed-neighborhood matrix,
+
+    viol[u, v] = Σ_w Nc[u, w] · (1 − Nc[v, w]) = |N[u] \\ N[v]|
+
+so ``viol[u, v] == 0  ⟺  v dominates u``.  ``viol`` is one (B, N, N) matmul.
+Note u != v and viol==0 forces A[u,v]=1 (u ∈ N[u] ⊆ N[v]), so dominated
+vertices are always adjacent to a dominator.
+
+Batch-removal safety.  The paper removes one dominated vertex at a time.  We
+remove a whole independent-of-conflicts batch per round:
+
+    remove u  ⟺  ∃v:  elig(u→v)  ∧  ( ¬elig(v→u)  ∨  v < u )
+
+where ``elig(u→v) = dom(u by v) ∧ f(u) >= f(v) ∧ u != v``.  Soundness: give
+every removed u a witness v from the rule.  (i) Domination (and the f
+condition) is preserved by deleting any *other* vertex z ∉ {u, v}: N[u]\{z} ⊆
+N[v]\{z}.  (ii) Witness chains u → v → w … cannot cycle: elig is transitive on
+its dom component (⊆ is transitive) and f is non-increasing along a chain; a
+cycle forces all dominations mutual with equal f, and then the index tiebreak
+(v < u) makes the witness edge strictly index-decreasing.  So chains end at a
+survivor, and deleting each round's batch in reverse chain order is a valid
+sequential PrunIT execution.  Hence the batch removal is exact.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.graph import GraphBatch
+
+
+def domination_matrix(adj: jax.Array, mask: jax.Array) -> jax.Array:
+    """(B, N, N) bool D with D[u, v] = "v dominates u" (closed nbhd, u != v).
+
+    Pure-jnp reference path; the Pallas kernel in repro/kernels/domination.py
+    computes the same thing tiled in VMEM.
+    """
+    n = adj.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    live = mask[..., None, :] & mask[..., :, None]
+    nc = (adj | eye) & live & mask[..., :, None]  # closed nbhd rows of live u
+    nc_f = nc.astype(jnp.float32)
+    # viol[u, v] = sum_w nc[u, w] * (1 - nc[v, w]); only count live w.
+    not_ncv = (~nc).astype(jnp.float32) * mask[..., None, :].astype(jnp.float32)
+    viol = jnp.einsum("buw,bvw->buv", nc_f, not_ncv)
+    dom = (viol == 0) & ~eye & live
+    return dom
+
+
+def prune_round_mask(
+    adj: jax.Array,
+    mask: jax.Array,
+    f: jax.Array,
+    sublevel: bool = True,
+    dom_fn=domination_matrix,
+) -> jax.Array:
+    """One parallel PrunIT round: the mask of vertices that survive."""
+    dom = dom_fn(adj, mask)  # dom[u, v]: v dominates u
+    if sublevel:
+        f_ok = f[..., :, None] >= f[..., None, :]  # f(u) >= f(v)
+    else:
+        f_ok = f[..., :, None] <= f[..., None, :]
+    elig = dom & f_ok  # elig[u, v]
+    elig_t = jnp.swapaxes(elig, -1, -2)  # elig[v, u]
+    n = adj.shape[-1]
+    idx = jnp.arange(n)
+    v_lt_u = idx[None, :] < idx[:, None]  # [u, v]: v < u
+    removable_by = elig & (~elig_t | v_lt_u)
+    removed = jnp.any(removable_by, axis=-1)
+    return mask & ~removed
+
+
+@partial(jax.jit, static_argnames=("sublevel", "max_rounds"))
+def prunit_mask(
+    adj: jax.Array,
+    mask: jax.Array,
+    f: jax.Array,
+    sublevel: bool = True,
+    max_rounds: int | None = None,
+) -> jax.Array:
+    """Iterate parallel prune rounds to a fixed point; returns surviving mask."""
+
+    def cond(state):
+        m, changed, r = state
+        ok = changed
+        if max_rounds is not None:
+            ok = ok & (r < max_rounds)
+        return ok
+
+    def body(state):
+        m, _, r = state
+        adj_m = adj & m[..., None, :] & m[..., :, None]
+        new = prune_round_mask(adj_m, m, jnp.where(m, f, jnp.inf), sublevel)
+        return new, jnp.any(new != m), r + 1
+
+    m, _, _ = lax.while_loop(cond, body, (mask, jnp.array(True), jnp.array(0)))
+    return m
+
+
+def prunit(g: GraphBatch, sublevel: bool = True, max_rounds: int | None = None) -> GraphBatch:
+    """PrunIT-reduce every graph in the batch (exact for all PD_k)."""
+    return g.with_mask(prunit_mask(g.adj, g.mask, g.f, sublevel, max_rounds))
+
+
+def prunit_then_coral(g: GraphBatch, dim: int, sublevel: bool = True) -> GraphBatch:
+    """Combined reduction of §5.1: PD_k(G) = PD_k((G')^{k+1})."""
+    from repro.core.kcore import coral_reduce
+
+    return coral_reduce(prunit(g, sublevel=sublevel), dim)

@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic token streams + graph dataset generators."""

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot spots (+ jnp oracles)."""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,60 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else they run in
+``interpret=True`` mode (the kernel body executed with real JAX ops on CPU),
+which is how correctness is validated in this container (see tests/).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common_neighbors import common_neighbors_pallas
+from repro.kernels.domination import domination_pallas
+from repro.kernels.gf2_reduce import gf2_reduce_pallas
+from repro.kernels.kcore_peel import kcore_peel_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def domination(adj: jax.Array, mask: jax.Array, tile: int = 128) -> jax.Array:
+    """(B, N, N) dom[u, v] = "v dominates u" (closed neighborhoods)."""
+    return domination_pallas(
+        adj, mask, tile_u=tile, tile_v=tile, tile_w=tile, interpret=_interpret()
+    )
+
+
+def kcore_peel(adj: jax.Array, alive: jax.Array, k, tile: int = 128) -> jax.Array:
+    """One k-core peel sweep over a (B, N, N) batch."""
+    return kcore_peel_pallas(
+        adj, alive, k, tile_u=tile, tile_w=tile, interpret=_interpret()
+    )
+
+
+def common_neighbors(adj: jax.Array, tile: int = 128) -> jax.Array:
+    """(B, N, N) i32 common-neighbor counts restricted to edges."""
+    return common_neighbors_pallas(adj, tile=tile, interpret=_interpret())
+
+
+def gf2_reduce(b: jax.Array, n_rows: int | None = None):
+    """Reduce one (S, W) packed boundary matrix -> (owner, positive).
+
+    n_rows sizes the owner vector for rectangular per-dimension blocks
+    (defaults to the square case).
+    """
+    _, owner, positive = gf2_reduce_pallas(
+        b, interpret=_interpret(), n_rows=n_rows)
+    return owner, positive
+
+
+def clustering_coefficients(adj: jax.Array, mask: jax.Array, tile: int = 128) -> jax.Array:
+    """(B, N) local clustering coefficients via the common-neighbors kernel."""
+    adj = adj & mask[:, None, :] & mask[:, :, None]
+    cn = common_neighbors(adj, tile=tile)
+    tri2 = jnp.sum(cn, axis=-1)  # 2 * triangles through u ... per row
+    deg = jnp.sum(adj, axis=-1).astype(jnp.float32)
+    denom = deg * (deg - 1.0)
+    cc = jnp.where(denom > 0, tri2.astype(jnp.float32) / denom, 0.0)
+    return jnp.where(mask, cc, 0.0)

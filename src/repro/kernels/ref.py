@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are asserted against
+(tests sweep shapes/dtypes with assert_allclose / exact equality).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def domination_ref(adj: jax.Array, mask: jax.Array) -> jax.Array:
+    """dom[u, v] = "v dominates u" with closed neighborhoods, u != v.
+
+    adj: (N, N) bool symmetric, mask: (N,) bool.  (vmap for batches.)
+    """
+    n = adj.shape[-1]
+    eye = jnp.eye(n, dtype=bool)
+    live = mask[None, :] & mask[:, None]
+    nc = (adj | eye) & live & mask[:, None]
+    nc_f = nc.astype(jnp.float32)
+    not_ncv = (~nc).astype(jnp.float32) * mask[None, :].astype(jnp.float32)
+    viol = nc_f @ not_ncv.T
+    return (viol == 0) & ~eye & live
+
+
+def kcore_peel_ref(adj: jax.Array, alive: jax.Array, k: jax.Array | int) -> jax.Array:
+    """One Jacobi peel sweep: alive & (deg_within_alive >= k)."""
+    deg = jnp.einsum(
+        "uw,w->u", adj.astype(jnp.float32), alive.astype(jnp.float32)
+    )
+    return alive & (deg >= jnp.asarray(k, jnp.float32))
+
+
+def common_neighbors_ref(adj: jax.Array) -> jax.Array:
+    """cn[u, v] = |N(u) ∩ N(v)| restricted to edges: (A @ A) ⊙ A. (N,N) i32."""
+    a = adj.astype(jnp.float32)
+    return ((a @ a) * a).astype(jnp.int32)
+
+
+def gf2_reduce_ref(b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Bit-packed GF(2) boundary reduction (delegates to the core module)."""
+    from repro.core.persistence_jax import reduce_packed
+
+    return reduce_packed(b)

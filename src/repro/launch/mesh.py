@@ -1,0 +1,30 @@
+"""Production meshes.  Functions, not module constants: importing this module
+never touches jax device state (the dry-run forces 512 host devices *before*
+any jax import; tests/benches see the single real device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod ("data","model"); 2 pods when multi_pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(1, 1), axes=("data", "model")):
+    """Degenerate mesh over whatever devices exist (CPU tests)."""
+    n = 1
+    for s in shape:
+        n *= s
+    assert n <= len(jax.devices()), (shape, len(jax.devices()))
+    return jax.make_mesh(shape, axes)
+
+
+# Hardware constants (TPU v5e class, per chip) used by the roofline.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW_PER_LINK = 50e9  # B/s
+CHIPS_PER_POD = 256

@@ -1,0 +1,146 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms (seconds, per step, per device — the SPMD-partitioned HLO is the
+per-device program):
+
+  compute    = HLO_FLOPs / peak_FLOP/s
+  memory     = HLO_bytes_accessed / HBM_bw
+  collective = Σ effective collective bytes / ICI link bw
+
+cost_analysis() supplies FLOPs/bytes; collective bytes are parsed from the
+compiled HLO text (result-type of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute, with the standard ring
+traffic model: all-reduce moves ~2x its payload, the others ~1x).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+# ring traffic multipliers (bytes moved per device per payload byte)
+_TRAFFIC = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, dict[str, float]]:
+    """{op_kind: {"count": n, "bytes": payload, "traffic": effective}}."""
+    out: dict[str, dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "bytes": 0.0, "traffic": 0.0}
+    )
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(type_str)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+        out[kind]["traffic"] += b * _TRAFFIC[kind]
+    return dict(out)
+
+
+# ops that actually move HBM bytes on a fused TPU pipeline.  Elementwise /
+# convert / broadcast chains fuse into their consumers; sub-computation
+# `parameter` declarations and tuple plumbing move nothing.  The
+# fusion-adjusted memory term counts 2x the output bytes (read + write,
+# coarse) of just the movers.
+_MOVER = (
+    "dot|fusion|scatter|gather|dynamic-slice|dynamic-update-slice|slice|"
+    "sort|copy|transpose|concatenate|pad|reduce|reduce-window|"
+    "all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute"
+)
+_OP_RE = re.compile(r"^\s*(?:ROOT )?%?\S+ = (\S+?) ([a-z0-9-]+)[.(]", re.M)
+_MOVER_RE = re.compile(f"^({_MOVER})$")
+
+
+def fusion_adjusted_bytes(hlo_text: str) -> float:
+    """Estimated HBM traffic if elementwise chains fuse (TPU behaviour)."""
+    total = 0.0
+    for m in _OP_RE.finditer(hlo_text):
+        shape, op = m.group(1), m.group(2)
+        if _MOVER_RE.match(op):
+            total += 2.0 * _shape_bytes(shape)
+    return total
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    collectives: dict[str, dict[str, float]],
+    model_flops_global: float = 0.0,
+    chips: int = 256,
+) -> dict:
+    coll_traffic = sum(v["traffic"] for v in collectives.values())
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_traffic / ICI_BW_PER_LINK
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_accessed,
+        "collective_traffic_per_device": coll_traffic,
+        "collectives": collectives,
+    }
+    dom = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )
+    terms["dominant"] = dom[0]
+    terms["bound_s"] = dom[1]
+    if model_flops_global:
+        terms["model_flops_global"] = model_flops_global
+        terms["model_flops_per_device"] = model_flops_global / chips
+        terms["useful_flop_ratio"] = (
+            model_flops_global / chips / flops if flops else 0.0
+        )
+        # roofline fraction: useful model FLOP/s achieved at the bound
+        terms["roofline_fraction"] = (
+            (model_flops_global / chips / PEAK_FLOPS_BF16) / dom[1]
+            if dom[1] > 0 else 0.0
+        )
+    return terms
+
+
+def model_flops_for(cfg, shape_cfg) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N_active·D inference (global, per step)."""
+    n_active = cfg.active_param_count()
+    if shape_cfg.kind == "train":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 6.0 * n_active * tokens
+    if shape_cfg.kind == "prefill":
+        tokens = shape_cfg.global_batch * shape_cfg.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape_cfg.global_batch

@@ -1,0 +1,153 @@
+"""Partitioning rules: params (FSDP+TP), optimizer state, inputs, KV caches.
+
+Axis meaning (DESIGN.md §6):
+  "pod"   — pure DP across pods (slow links: gradient all-reduce only)
+  "data"  — DP for activations, FSDP shard axis for params/optimizer
+  "model" — TP: heads / d_ff / experts / vocab; SP fallback for KV seq
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# trailing-dims spec per leaf name; extra leading (scan/stack) dims get None.
+_RULES: dict[str, tuple] = {
+    # embeddings
+    "embed": ("model", "data"),
+    "unembed": ("data", "model"),
+    # attention
+    "w_q": ("data", "model"),
+    "w_k": ("data", "model"),
+    "w_v": ("data", "model"),
+    "w_o": ("model", "data"),
+    "b_q": ("model",),
+    "b_k": ("model",),
+    "b_v": ("model",),
+    # dense mlp
+    "w_gate": ("data", "model"),
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),
+    # moe (experts over "model" = EP)
+    "moe_gate": ("data", None),
+    "moe_wg": ("model", "data", None),
+    "moe_wu": ("model", "data", None),
+    "moe_wd": ("model", None, "data"),
+    # mamba2
+    "in_proj": ("data", "model"),
+    "conv_w": (None, "model"),
+    "A_log": ("model",),
+    "D_skip": ("model",),
+    "dt_bias": ("model",),
+    "ssm_norm": ("model",),
+    "out_proj": ("model", "data"),
+    # rwkv6
+    "w_r": ("data", "model"),
+    "w_g": ("data", "model"),
+    "w_lora_a": ("data", None),
+    "w_lora_b": (None, "data"),
+    "u_bonus": ("model", None),
+    "cw_k": ("data", "model"),
+    "cw_v": ("model", "data"),
+    "cw_r": ("data", "model"),
+}
+_REPLICATED_HINTS = (
+    "ln", "norm", "scale", "mu_", "cmu_", "w0", "final", "b_", "q_norm",
+    "k_norm", "step",
+)
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+        if hasattr(entry, "name"):
+            return str(entry.name)
+    return ""
+
+
+def spec_for_leaf(path, leaf) -> P:
+    name = _leaf_name(path)
+    rule = _RULES.get(name)
+    if rule is None:
+        return P()  # replicated (norm scales, small mixing vectors, scalars)
+    extra = leaf.ndim - len(rule)
+    if extra < 0:
+        return P()
+    return P(*((None,) * extra + tuple(rule)))
+
+
+def param_specs(params) -> Any:
+    return jax.tree_util.tree_map_with_path(spec_for_leaf, params)
+
+
+def opt_specs(params_specs) -> Any:
+    """AdamW m/v mirror the param sharding; step is replicated."""
+    from repro.train.optimizer import AdamWState
+
+    return AdamWState(step=P(), m=params_specs, v=params_specs)
+
+
+def batch_spec(global_batch: int, mesh: Mesh) -> P:
+    """Shard the batch over ("pod","data") when divisible, else best effort."""
+    dp_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    size = 1
+    use = []
+    for a in dp_axes:
+        if global_batch % (size * mesh.shape[a]) == 0:
+            use.append(a)
+            size *= mesh.shape[a]
+    return P(tuple(use) if use else None)
+
+
+def cache_specs(caches, cfg, mesh: Mesh, batch: int) -> Any:
+    """KV/state cache sharding with head-vs-sequence fallback (DESIGN §6).
+
+    * batch axis over ("pod","data") when divisible; otherwise the sequence
+      axis takes "data" (long-context, batch=1).
+    * kv-head axis over "model" when divisible; otherwise the sequence axis
+      takes "model" (sequence-parallel attention, psum over seq inserted by
+      SPMD).
+    """
+    tp = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    batch_ok = batch % dp == 0 and batch >= dp
+
+    def leaf_spec(path, leaf):
+        name = _leaf_name(path)
+        b_ax = dp_axes if batch_ok else None
+        if name in ("k", "v"):  # (B, S, KV, dh)
+            kv = leaf.shape[-2]
+            if kv % tp == 0:
+                seq_ax = None if batch_ok else "data"
+                return P(*_pad(leaf, (b_ax, seq_ax, "model", None)))
+            seq_ax = "model" if batch_ok else ("data", "model")
+            return P(*_pad(leaf, (b_ax, seq_ax, None, None)))
+        if name == "conv":  # (B, W-1, C)
+            return P(*_pad(leaf, (b_ax, None, "model")))
+        if name == "ssm":  # (B, H, N, P)
+            return P(*_pad(leaf, (b_ax, "model", None, None)))
+        if name == "tm_state":  # (B, H, P, P)
+            return P(*_pad(leaf, (b_ax, "model", None, None)))
+        if name in ("tm_xprev", "cm_xprev"):  # (B, D)
+            return P(*_pad(leaf, (b_ax, "model")))
+        return P()
+
+    def _pad(leaf, trailing):
+        extra = leaf.ndim - len(trailing)
+        return (None,) * extra + tuple(trailing)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)
+
+
+def to_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,1 @@
+"""Assigned-architecture model zoo (dense/MoE/hybrid/SSM/enc-dec/VLM)."""

@@ -1,0 +1,305 @@
+"""Shared NN layers: norms, RoPE/M-RoPE, GQA attention (train + decode),
+gated MLP, capacity-based MoE.
+
+Conventions:
+* params are plain nested dicts of f32 arrays; compute is bf16 (norms and
+  softmax accumulate in f32).
+* every apply function is shape-polymorphic over batch and works under scan
+  (no python-side state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _init(key, shape, scale=0.02):
+    return (scale * jax.random.normal(key, shape)).astype(jnp.float32)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- RoPE ----
+def rope_tables(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) int -> cos/sin (..., dim//2) f32."""
+    half = dim // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_tables(positions: jax.Array, dim: int, theta: float,
+                 sections: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
+    """M-RoPE (Qwen2-VL): positions (..., 3) [t, h, w]; per-frequency section
+    selects which position stream drives the angle."""
+    half = dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    sec_id = jnp.concatenate(
+        [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)]
+    )
+    pos_sel = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )
+    ang = pos_sel * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., H, dh); cos/sin broadcastable to (..., 1, dh//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ----------------------------------------------------------- attention ----
+def attn_init(key, cfg) -> Params:
+    d, dh = cfg.d_model, cfg.head_dim
+    h, kv = cfg.q_heads, cfg.kv_heads
+    ks = jax.random.split(key, 6)
+    p = {
+        "w_q": _init(ks[0], (d, h * dh)),
+        "w_k": _init(ks[1], (d, kv * dh)),
+        "w_v": _init(ks[2], (d, kv * dh)),
+        "w_o": _init(ks[3], (h * dh, d)),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * dh,), jnp.float32)
+        p["b_k"] = jnp.zeros((kv * dh,), jnp.float32)
+        p["b_v"] = jnp.zeros((kv * dh,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def _qkv(p: Params, x: jax.Array, cfg, cos, sin):
+    b = x.shape[0]
+    s = x.shape[1]
+    h, kv, dh = cfg.q_heads, cfg.kv_heads, cfg.head_dim
+    q = dense(x, p["w_q"], p.get("b_q")).reshape(b, s, h, dh)
+    k = dense(x, p["w_k"], p.get("b_k")).reshape(b, s, kv, dh)
+    v = dense(x, p["w_v"], p.get("b_v")).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.rms_eps)
+    if cos is not None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, dh):
+    """q (B,Sq,H,dh), k/v (B,Sk,KV,dh), mask (B|1, Sq, Sk) bool keep.
+
+    §Perf gemma iteration 1 (REFUTED, reverted): a manual bf16-probs
+    softmax was hypothesized to halve the (Sq, Sk) score traffic; measured
+    +3% bytes instead — XLA's fused softmax already avoids the extra
+    materializations the manual version introduced.  See EXPERIMENTS.md.
+    """
+    bq, sq, h, _ = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qg = q.reshape(bq, sq, kv, rep, dh)
+    scores = jnp.einsum("bqkrd,bskd->bkrqs", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkrqs,bskd->bqkrd", probs, v)
+    return out.reshape(bq, sq, h * dh)
+
+
+def attn_train(p: Params, x: jax.Array, cfg, cos, sin,
+               window: int = 0, causal: bool = True) -> jax.Array:
+    """Full-sequence attention, query-chunked when the sequence is long."""
+    b, s, _ = x.shape
+    dh = cfg.head_dim
+    q, k, v = _qkv(p, x, cfg, cos, sin)
+    pos = jnp.arange(s)
+
+    chunk = cfg.attn_chunk
+    if s <= 2 * chunk or s % chunk != 0:
+        mask = jnp.ones((1, s, s), bool)
+        if causal:
+            mask = mask & (pos[None, :, None] >= pos[None, None, :])
+        if window:
+            mask = mask & (pos[None, :, None] - pos[None, None, :] < window)
+        out = _sdpa(q, k, v, mask, dh)
+    elif window and window <= chunk and causal:
+        # §Perf gemma iteration 2 — banded sliding-window attention: a
+        # causal query chunk only sees keys in [c*chunk - window + 1,
+        # c*chunk + chunk), so slice a (window + chunk) K/V band instead of
+        # computing (chunk, S) scores and masking.  Score traffic and flops
+        # per local layer drop by S / (window + chunk) (2x for gemma3's
+        # S=4096, window=chunk=1024).  Front-pad K/V so the band never
+        # clamps; padded keys carry kpos < 0 and are masked out.
+        n_chunks = s // chunk
+        band = window + chunk
+        kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+
+        def one_chunk(c):
+            q0 = c * chunk
+            qpos = q0 + jnp.arange(chunk)
+            kpos = q0 - window + jnp.arange(band)
+            qc = lax.dynamic_slice_in_dim(q, q0, chunk, axis=1)
+            kc = lax.dynamic_slice_in_dim(kp, q0, band, axis=1)
+            vc = lax.dynamic_slice_in_dim(vp, q0, band, axis=1)
+            mask = ((qpos[None, :, None] >= kpos[None, None, :])
+                    & (qpos[None, :, None] - kpos[None, None, :] < window)
+                    & (kpos[None, None, :] >= 0))
+            return _sdpa(qc, kc, vc, mask, dh)
+
+        out = lax.map(one_chunk, jnp.arange(n_chunks))
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, -1)
+    else:
+        n_chunks = s // chunk
+
+        def one_chunk(c):
+            qpos = c * chunk + jnp.arange(chunk)
+            qc = lax.dynamic_slice_in_dim(q, c * chunk, chunk, axis=1)
+            mask = jnp.ones((1, chunk, s), bool)
+            if causal:
+                mask = mask & (qpos[None, :, None] >= pos[None, None, :])
+            if window:
+                mask = mask & (qpos[None, :, None] - pos[None, None, :] < window)
+            return _sdpa(qc, k, v, mask, dh)
+
+        out = lax.map(one_chunk, jnp.arange(n_chunks))  # (C, B, chunk, H*dh)
+        out = jnp.moveaxis(out, 0, 1).reshape(b, s, -1)
+    return dense(out, p["w_o"])
+
+
+def attn_decode(p: Params, x: jax.Array, cache: Params, pos: jax.Array, cfg,
+                cos, sin, window: int = 0) -> tuple[jax.Array, Params]:
+    """One-token decode against a fixed-capacity KV cache.
+
+    x (B,1,D); cache {k,v}: (B,Skv,KV,dh); pos scalar i32 (current index).
+    """
+    b = x.shape[0]
+    dh = cfg.head_dim
+    q, k_new, v_new = _qkv(p, x, cfg, cos, sin)
+    ck = lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1
+    )
+    cv = lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1
+    )
+    s_kv = ck.shape[1]
+    idx = jnp.arange(s_kv)
+    keep = idx <= pos
+    if window:
+        keep = keep & (idx > pos - window)
+    mask = jnp.broadcast_to(keep[None, None, :], (1, 1, s_kv))
+    out = _sdpa(q, ck, cv, mask, dh)
+    return dense(out, p["w_o"]), {"k": ck, "v": cv}
+
+
+def attn_cache_init(cfg, batch: int, s_kv: int, dtype=COMPUTE_DTYPE) -> Params:
+    kv, dh = cfg.kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, s_kv, kv, dh), dtype),
+        "v": jnp.zeros((batch, s_kv, kv, dh), dtype),
+    }
+
+
+# ----------------------------------------------------------------- MLP ----
+def mlp_init(key, cfg) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.gated_mlp:
+        return {
+            "w_gate": _init(ks[0], (d, f)),
+            "w_up": _init(ks[1], (d, f)),
+            "w_down": _init(ks[2], (f, d)),
+        }
+    return {"w_up": _init(ks[0], (d, f)), "w_down": _init(ks[1], (f, d))}
+
+
+def mlp_apply(p: Params, x: jax.Array, cfg) -> jax.Array:
+    if "w_gate" in p:
+        h = jax.nn.silu(dense(x, p["w_gate"])) * dense(x, p["w_up"])
+    else:
+        h = jax.nn.gelu(dense(x, p["w_up"]))
+    return dense(h, p["w_down"])
+
+
+# ----------------------------------------------------------------- MoE ----
+def moe_init(key, cfg) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "moe_gate": _init(ks[0], (d, e)),
+        "moe_wg": _init(ks[1], (e, d, f)),
+        "moe_wu": _init(ks[2], (e, d, f)),
+        "moe_wd": _init(ks[3], (e, f, d)),
+    }
+
+
+def moe_apply(p: Params, x: jax.Array, cfg) -> jax.Array:
+    """Capacity-based top-k MoE with one-hot dispatch einsums (EP-shardable).
+
+    Routing is *block-local* (``cfg.moe_group`` tokens per group, the
+    GSPMD-MoE / Switch "group size"): capacity applies within each group, so
+    the dispatch/combine tensors are (G, TB, E, CB) with CB proportional to
+    TB — dispatch flops are linear in total tokens instead of quadratic, and
+    when the group boundary aligns with the data shard the whole MoE layer
+    partitions with NO cross-data collectives (the group axis is batch-like).
+    §Perf olmoe iterations 1-2; ``moe_group=0`` recovers the naive
+    one-global-group baseline.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.moe_top_k
+    grp = getattr(cfg, "moe_group", 0)
+    tb = grp if grp and t % grp == 0 else t
+    g = t // tb
+    cap = max(1, int(cfg.capacity_factor * tb * k / e))
+    xt = x.reshape(g, tb, d)
+
+    logits = dense(xt, p["moe_gate"]).astype(jnp.float32)  # (G, TB, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = lax.top_k(probs, k)  # (G, TB, K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # position of each (token, rank) within its expert queue (per group)
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)  # (G, TB, K, E)
+    flat = onehot.reshape(g, tb * k, e)
+    pos_in_e = (jnp.cumsum(flat, axis=1) - flat).reshape(g, tb, k, e)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)  # (G, TB, K)
+    keep = pos < cap
+    gate = jnp.where(keep, top_p, 0.0)  # (G, TB, K)
+
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot * keep[..., None], cap_oh)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot, cap_oh, gate)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+    hg = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["moe_wg"].astype(x.dtype)))
+    hu = jnp.einsum("gecd,edf->gecf", xe, p["moe_wu"].astype(x.dtype))
+    ye = jnp.einsum("gecf,efd->gecd", hg * hu, p["moe_wd"].astype(x.dtype))
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ye)
+    return y.reshape(b, s, d)

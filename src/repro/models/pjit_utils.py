@@ -1,0 +1,42 @@
+"""Sharding-constraint plumbing for model code.
+
+Model code is mesh-agnostic; the launch layer activates an "axis environment"
+(`set_axis_env`) and the model sprinkles `constrain(x, ...)` hints that become
+`with_sharding_constraint` when active and no-ops otherwise (CPU tests).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_ACTIVE: dict | None = None
+
+
+def set_axis_env(dp: Sequence[str] = ("data",), tp: str = "model") -> None:
+    global _ACTIVE
+    _ACTIVE = {"dp": tuple(dp), "tp": tp}
+
+
+def clear_axis_env() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def axis_env() -> dict | None:
+    return _ACTIVE
+
+
+def constrain(x: jax.Array, *dims: str | None) -> jax.Array:
+    """dims use logical names: "dp" (batch), "tp" (tensor), None.
+
+    Example: constrain(x, "dp", None, None) for (B, S, D) activations.
+    """
+    if _ACTIVE is None:
+        return x
+    spec = tuple(
+        _ACTIVE["dp"] if d == "dp" else (_ACTIVE["tp"] if d == "tp" else None)
+        for d in dims
+    )
+    return jax.lax.with_sharding_constraint(x, P(*spec))

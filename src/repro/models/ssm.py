@@ -1,0 +1,168 @@
+"""Mamba2 (SSD) block: chunked matmul-form scan for training/prefill, O(1)
+recurrent state for decode.  Used by zamba2 (hybrid family).
+
+Chunked SSD follows the Mamba2 paper: within a chunk the state update is
+expressed as masked matmuls (MXU-friendly); across chunks a short lax.scan
+carries the (H, N, P) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import Params, _init, dense, rmsnorm
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_ssm_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def mamba_init(key, cfg) -> Params:
+    d = cfg.d_model
+    din = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    conv_ch = din + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * din + 2 * n + h)),
+        "conv_w": _init(ks[1], (cfg.ssm_conv_width, conv_ch), scale=0.2),
+        "A_log": jnp.zeros((h,), jnp.float32),  # a = -exp(A_log) = -1
+        "D_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "ssm_norm": jnp.zeros((din,), jnp.float32),
+        "out_proj": _init(ks[2], (din, d)),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W.  xbc (B,S,C), w (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(width):
+        out = out + pad[:, i : i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+    return out
+
+
+def _split_proj(cfg, proj):
+    din = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    z, xs, bmat, cmat, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1
+    )
+    return z, xs, bmat, cmat, dt
+
+
+def mamba_train(p: Params, x: jax.Array, cfg) -> jax.Array:
+    b, s, d = x.shape
+    din = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    pdim = cfg.ssm_head_dim
+    lc = min(cfg.ssm_chunk, s)
+    assert s % lc == 0, (s, lc)
+    g = s // lc
+
+    proj = dense(x, p["in_proj"])
+    z, xs, bm, cm, dt = _split_proj(cfg, proj)
+    xbc = _causal_conv(jnp.concatenate([xs, bm, cm], -1), p["conv_w"])
+    xbc = jax.nn.silu(xbc)
+    xs, bm, cm = jnp.split(xbc, [din, din + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])  # (H,)
+    xs = xs.reshape(b, g, lc, h, pdim)
+    bm = bm.reshape(b, g, lc, n).astype(jnp.float32)
+    cm = cm.reshape(b, g, lc, n).astype(jnp.float32)
+    dt = dt.reshape(b, g, lc, h)
+
+    da = dt * a  # (B,G,Lc,H) negative
+    cum = jnp.cumsum(da, axis=2)  # inclusive
+    xf = xs.astype(jnp.float32)
+
+    # ---- intra-chunk ----
+    cb = jnp.einsum("bgln,bgsn->bgls", cm, bm)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,G,L,S,H)
+    tri = jnp.tril(jnp.ones((lc, lc), bool))
+    att = jnp.where(tri[None, None, :, :, None], decay, 0.0)
+    att = att * cb[..., None] * dt[:, :, None, :, :]
+    y_intra = jnp.einsum("bglsh,bgshp->bglhp", att, xf)
+
+    # ---- chunk states ----
+    last = cum[:, :, -1:, :]  # (B,G,1,H)
+    sdecay = jnp.exp(last - cum) * dt  # (B,G,Lc,H)
+    states = jnp.einsum("bgsh,bgsn,bgshp->bghnp", sdecay, bm, xf)
+
+    # ---- inter-chunk scan ----
+    chunk_decay = jnp.exp(last[:, :, 0, :])  # (B,G,H)
+
+    def step(hprev, inp):
+        st, dcy = inp
+        return dcy[:, :, None, None] * hprev + st, hprev
+
+    h0 = jnp.zeros((b, h, n, pdim), jnp.float32)
+    # NOTE: this inter-chunk recurrence stays SCANNED even under the
+    # cost-exact dry-run unroll (repro.models.unroll): its body is a tiny
+    # elementwise state update, so the counted-once error is negligible,
+    # while unrolling 128 copies explodes compile memory at 32k sequence.
+    _, h_prevs = lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (B,G,H,N,P): state before chunk g
+    y_inter = jnp.einsum(
+        "bgln,bghnp,bglh->bglhp", cm, h_prevs, jnp.exp(cum)
+    )
+
+    y = y_intra + y_inter + xf * p["D_skip"][None, None, None, :, None]
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.rms_eps)
+    return dense(y, p["out_proj"])
+
+
+def mamba_cache_init(cfg, batch: int, dtype=jnp.float32) -> Params:
+    din = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    conv_ch = din + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, cache: Params, cfg) -> tuple[jax.Array, Params]:
+    """x (B,1,D) -> (y, new_cache); O(1) per token."""
+    b = x.shape[0]
+    din = d_inner(cfg)
+    n = cfg.ssm_state
+    h = n_ssm_heads(cfg)
+    pdim = cfg.ssm_head_dim
+
+    proj = dense(x, p["in_proj"])[:, 0]  # (B, ...)
+    z, xs, bm, cm, dt = _split_proj(cfg, proj)
+    xbc_new = jnp.concatenate([xs, bm, cm], -1)  # (B, C)
+    window = jnp.concatenate([cache["conv"], xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xbc = jnp.einsum("bwc,wc->bc", window, w)
+    xbc = jax.nn.silu(xbc)
+    xs, bm, cm = jnp.split(xbc, [din, din + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    xh = xs.reshape(b, h, pdim).astype(jnp.float32)
+    ssm = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bm.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cm.astype(jnp.float32), ssm)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z[:, None, :]), p["ssm_norm"], cfg.rms_eps)
+    return dense(y, p["out_proj"]), {"conv": window[:, 1:], "ssm": ssm}

@@ -1,0 +1,21 @@
+"""Scan-unroll switch for cost-exact dry-runs.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, not
+multiplied by its trip count, so a layer-scanned model under-reports FLOPs /
+bytes / collective traffic by ~n_layers x grad_accum.  The dry-run flips this
+flag to fully unroll every structural scan (layers, grad-accum microbatches,
+SSM chunk recurrences) so the roofline terms are exact.  Training/serving
+keep the scanned form (compile cost = one body per block kind).
+"""
+from __future__ import annotations
+
+_FLAG = {"unroll": False}
+
+
+def set_unroll(value: bool) -> None:
+    _FLAG["unroll"] = bool(value)
+
+
+def scan_unroll() -> bool | int:
+    """Value for the ``unroll=`` argument of ``lax.scan``."""
+    return True if _FLAG["unroll"] else 1

@@ -1,0 +1,1 @@
+"""Topological feature extraction (betti curves, persistence images)."""

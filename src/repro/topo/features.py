@@ -1,0 +1,102 @@
+"""Fixed-size ML features from persistence diagrams.
+
+Turns the variable-content Diagrams tensor into dense vectors usable by a
+classifier or as auxiliary model inputs: Betti curves, persistence
+statistics, persistence images, and landscapes.  Everything is masked
+arithmetic over the fixed-size Diagrams layout, so it vmaps/pjit-shards with
+the rest of the pipeline.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.persistence_jax import Diagrams
+
+
+def _finite_death(d: Diagrams, cap: float) -> jax.Array:
+    # invalid rows carry NaN birth/death; sanitize before masked arithmetic
+    death = jnp.nan_to_num(d.death, nan=0.0, posinf=cap)
+    return jnp.where(d.valid, death, 0.0)
+
+
+def _finite_birth(d: Diagrams) -> jax.Array:
+    return jnp.where(d.valid, jnp.nan_to_num(d.birth), 0.0)
+
+
+def betti_curve(d: Diagrams, k: int, grid: jax.Array) -> jax.Array:
+    """(..., G) number of dim-k classes alive at each grid value."""
+    sel = d.valid & (d.dim == k)
+    b = d.birth[..., :, None]
+    dd = d.death[..., :, None]
+    alive = (grid >= b) & (grid < dd) & sel[..., :, None]
+    return jnp.sum(alive, axis=-2).astype(jnp.float32)
+
+
+def persistence_stats(d: Diagrams, k: int, cap: float = 64.0) -> jax.Array:
+    """(..., 6) [count, betti, total-pers, max-pers, mean-birth, mean-death]."""
+    sel = (d.valid & (d.dim == k)).astype(jnp.float32)
+    n = jnp.sum(sel, axis=-1)
+    nz = jnp.maximum(n, 1.0)
+    death = _finite_death(d, cap)
+    pers = jnp.where(sel > 0, death - d.birth, 0.0)
+    birth = jnp.where(sel > 0, d.birth, 0.0)
+    return jnp.stack([
+        n,
+        jnp.sum(sel * jnp.isinf(d.death), axis=-1),
+        jnp.sum(pers, axis=-1),
+        jnp.max(pers, axis=-1, initial=0.0),
+        jnp.sum(birth, axis=-1) / nz,
+        jnp.sum(jnp.where(sel > 0, death, 0.0), axis=-1) / nz,
+    ], axis=-1)
+
+
+def persistence_image(d: Diagrams, k: int, res: int = 8,
+                      lo: float = 0.0, hi: float = 32.0,
+                      sigma: float = 1.0, cap: float = 64.0) -> jax.Array:
+    """(..., res, res) Gaussian-weighted persistence surface on (birth, pers)."""
+    sel = (d.valid & (d.dim == k)).astype(jnp.float32)
+    death = _finite_death(d, cap)
+    birth0 = _finite_birth(d)
+    pers = jnp.clip(death - birth0, 0.0, hi - lo)
+    birth = jnp.clip(birth0, lo, hi)
+    grid = jnp.linspace(lo, hi, res)
+    gx = grid[None, :]  # birth axis
+    gy = grid[None, :]  # persistence axis
+    wb = jnp.exp(-0.5 * ((birth[..., :, None] - gx) / sigma) ** 2)
+    wp = jnp.exp(-0.5 * ((pers[..., :, None] - gy) / sigma) ** 2)
+    # weight each point by its persistence (standard PI weighting)
+    w = (sel * pers)[..., :, None, None]
+    img = jnp.sum(w * wb[..., :, :, None] * wp[..., :, None, :], axis=-3)
+    return img
+
+
+def persistence_landscape(d: Diagrams, k: int, grid: jax.Array,
+                          n_levels: int = 3, cap: float = 64.0) -> jax.Array:
+    """(..., n_levels, G) landscape functions lambda_1..lambda_n on grid."""
+    sel = d.valid & (d.dim == k)
+    death = _finite_death(d, cap)
+    b = _finite_birth(d)[..., :, None]
+    dd = death[..., :, None]
+    tent = jnp.maximum(jnp.minimum(grid - b, dd - grid), 0.0)
+    tent = jnp.where(sel[..., :, None], tent, -jnp.inf)
+    top = jax.lax.top_k(jnp.swapaxes(tent, -1, -2), n_levels)[0]
+    return jnp.maximum(jnp.swapaxes(top, -1, -2), 0.0)
+
+
+@partial(jax.jit, static_argnames=("max_dim", "res"))
+def feature_vector(d: Diagrams, max_dim: int = 1, res: int = 8,
+                   cap: float = 64.0) -> jax.Array:
+    """Concatenate stats + flattened persistence image per dimension.
+
+    Output: (..., (6 + res*res) * (max_dim+1)) — a drop-in fixed-size
+    topological signature for downstream classifiers.
+    """
+    parts = []
+    for k in range(max_dim + 1):
+        parts.append(persistence_stats(d, k, cap))
+        parts.append(persistence_image(d, k, res=res, cap=cap).reshape(
+            d.birth.shape[:-1] + (res * res,)))
+    return jnp.concatenate(parts, axis=-1)

@@ -1,0 +1,61 @@
+"""Shared test fixtures/helpers.
+
+NOTE: no XLA_FLAGS device-count override here — smoke tests and benches must
+see the real single CPU device; only launch/dryrun.py forces 512 devices.
+"""
+from __future__ import annotations
+
+import numpy as np
+import networkx as nx
+import pytest
+
+from repro.core import from_networkx
+
+
+def random_graphs(kind: str, count: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(count):
+        s = int(rng.integers(0, 2**31 - 1))
+        if kind == "er":
+            n = int(rng.integers(6, 20))
+            p = float(rng.uniform(0.15, 0.6))
+            out.append(nx.gnp_random_graph(n, p, seed=s))
+        elif kind == "ba":
+            n = int(rng.integers(8, 24))
+            m = int(rng.integers(1, 4))
+            out.append(nx.barabasi_albert_graph(n, m, seed=s))
+        elif kind == "plc":
+            n = int(rng.integers(8, 24))
+            out.append(nx.powerlaw_cluster_graph(n, 2, 0.5, seed=s))
+        elif kind == "complete":
+            out.append(nx.complete_graph(int(rng.integers(3, 8))))
+        else:
+            raise ValueError(kind)
+    return out
+
+
+def graphs_to_batch(graphs, n_pad=None, f_mode="degree", seed=0):
+    g = from_networkx(graphs, n_pad=n_pad)
+    if f_mode == "random":
+        rng = np.random.default_rng(seed)
+        import jax.numpy as jnp
+
+        f = rng.integers(0, 7, size=g.f.shape).astype(np.float32)
+        f = np.where(np.asarray(g.mask), f, np.inf)
+        from repro.core.graph import GraphBatch
+
+        g = GraphBatch(adj=g.adj, mask=g.mask, f=jnp.asarray(f))
+    return g
+
+
+@pytest.fixture(scope="session")
+def er_batch():
+    gs = random_graphs("er", 6, seed=1)
+    return gs, graphs_to_batch(gs, n_pad=24)
+
+
+@pytest.fixture(scope="session")
+def ba_batch():
+    gs = random_graphs("ba", 6, seed=2)
+    return gs, graphs_to_batch(gs, n_pad=24)

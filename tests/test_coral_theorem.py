@@ -1,0 +1,69 @@
+"""Property test of the paper's Theorem 2 (CoralTDA exactness).
+
+For random graphs and random integer filtering functions:
+    PD_j(G, f) == PD_j(G^{k+1}, f)   for all j >= k >= 1
+computed with the exact NumPy oracle.
+"""
+import networkx as nx
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphBatch, coral_reduce
+from repro.core.persistence_ref import diagrams_equal, persistence_diagrams
+from tests.conftest import graphs_to_batch
+
+
+@st.composite
+def graph_and_f(draw, n_min=4, n_max=14):
+    n = draw(st.integers(n_min, n_max))
+    p = draw(st.floats(0.2, 0.7))
+    seed = draw(st.integers(0, 2**31 - 1))
+    g = nx.gnp_random_graph(n, p, seed=seed)
+    f = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    return g, np.asarray(f, dtype=np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_and_f(), st.integers(1, 2))
+def test_coral_exact_for_pd_k(gf, k):
+    G, f = gf
+    batch = graphs_to_batch([G])
+    import jax.numpy as jnp
+
+    fv = jnp.where(batch.mask, jnp.asarray(f)[None, : batch.n], jnp.inf)
+    g = GraphBatch(adj=batch.adj, mask=batch.mask, f=fv)
+    gr = coral_reduce(g, k)
+
+    ref = persistence_diagrams(
+        np.asarray(g.adj[0]), np.asarray(g.f[0]), np.asarray(g.mask[0]), max_dim=k
+    )
+    red = persistence_diagrams(
+        np.asarray(gr.adj[0]), np.asarray(gr.f[0]), np.asarray(gr.mask[0]), max_dim=k
+    )
+    # Theorem 2: equality at dimension j = k (and above).
+    assert diagrams_equal({k: ref.get(k, [])}, {k: red.get(k, [])}), (ref, red)
+
+
+@settings(max_examples=10, deadline=None)
+@given(graph_and_f(n_min=5, n_max=11))
+def test_coral_degree_filtration(gf):
+    # The paper's own experimental setting: degree function, sublevel.
+    G, _ = gf
+    g = graphs_to_batch([G])  # degree filtration by default
+    gr = coral_reduce(g, 1)
+    ref = persistence_diagrams(
+        np.asarray(g.adj[0]), np.asarray(g.f[0]), np.asarray(g.mask[0]), max_dim=1
+    )
+    red = persistence_diagrams(
+        np.asarray(gr.adj[0]), np.asarray(gr.f[0]), np.asarray(gr.mask[0]), max_dim=1
+    )
+    assert diagrams_equal({1: ref.get(1, [])}, {1: red.get(1, [])})
+
+
+def test_coral_higher_dims_trivial_on_sparse():
+    # Fig 4's "100% reduction at k>=4" phenomenon: sparse graphs have empty
+    # 5-cores, so PD_4 is trivial — and coral detects it structurally.
+    G = nx.barabasi_albert_graph(40, 2, seed=0)
+    g = graphs_to_batch([G])
+    gr = coral_reduce(g, 4)
+    assert int(np.asarray(gr.n_vertices())[0]) == 0

@@ -1,0 +1,106 @@
+"""JAX bit-packed persistence vs the exact NumPy oracle."""
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphBatch, persistence_diagrams_batched
+from repro.core.persistence_jax import diagrams_to_numpy
+from repro.core.persistence_ref import (
+    betti_numbers,
+    diagrams_equal,
+    persistence_diagrams,
+)
+from tests.conftest import graphs_to_batch, random_graphs
+
+
+def _check_batch(gs, g, max_dim=1, **caps):
+    d = persistence_diagrams_batched(g, max_dim=max_dim, **caps)
+    for i in range(len(gs)):
+        ref = persistence_diagrams(
+            np.asarray(g.adj[i]), np.asarray(g.f[i]), np.asarray(g.mask[i]),
+            max_dim=max_dim,
+        )
+        ours = diagrams_to_numpy(d, i, max_dim)
+        assert diagrams_equal(ref, ours), (i, ref, ours)
+
+
+@pytest.mark.parametrize("kind", ["er", "ba", "plc", "complete"])
+def test_jax_pd_matches_oracle(kind):
+    gs = random_graphs(kind, 5, seed=hash(kind) % 1000)
+    g = graphs_to_batch(gs)
+    _check_batch(gs, g, max_dim=1, edge_cap=128, tri_cap=512)
+
+
+def test_known_diagrams_cycle():
+    # C_6, constant f=0: one essential H0 class, one essential H1 class.
+    g = graphs_to_batch([nx.cycle_graph(6)])
+    g = GraphBatch(adj=g.adj, mask=g.mask, f=g.f * 0.0)
+    d = persistence_diagrams_batched(g, max_dim=1, edge_cap=16, tri_cap=16)
+    assert int(d.betti(0)[0]) == 1
+    assert int(d.betti(1)[0]) == 1
+
+
+def test_known_diagrams_complete():
+    # K_5 is contractible as a clique complex: Betti = (1, 0).
+    g = graphs_to_batch([nx.complete_graph(5)])
+    d = persistence_diagrams_batched(g, max_dim=1, edge_cap=16, tri_cap=16)
+    assert int(d.betti(0)[0]) == 1
+    assert int(d.betti(1)[0]) == 0
+
+
+def test_two_components():
+    G = nx.disjoint_union(nx.cycle_graph(4), nx.path_graph(3))
+    g = graphs_to_batch([G])
+    d = persistence_diagrams_batched(g, max_dim=1, edge_cap=16, tri_cap=16)
+    assert int(d.betti(0)[0]) == 2
+    assert int(d.betti(1)[0]) == 1
+
+
+def test_pd2_with_quads():
+    # The octahedron's clique complex is S^2: Betti = (1, 0, 1).  Its PD_2
+    # needs tetrahedra columns (quad_cap > 0).
+    G = nx.octahedral_graph()
+    g = graphs_to_batch([G])
+    d = persistence_diagrams_batched(
+        g, max_dim=2, edge_cap=16, tri_cap=16, quad_cap=8
+    )
+    assert int(d.betti(0)[0]) == 1
+    assert int(d.betti(1)[0]) == 0
+    assert int(d.betti(2)[0]) == 1
+    ref = betti_numbers(np.asarray(g.adj[0]), max_dim=2)
+    assert ref == {0: 1, 1: 0, 2: 1}
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 12), st.floats(0.2, 0.7), st.integers(0, 2**31 - 1),
+       st.booleans())
+def test_jax_pd_random_f(n, p, seed, sublevel):
+    G = nx.gnp_random_graph(n, p, seed=seed)
+    rng = np.random.default_rng(seed)
+    f = rng.integers(0, 6, size=n).astype(np.float32)
+    g = graphs_to_batch([G])
+    import jax.numpy as jnp
+
+    g = GraphBatch(adj=g.adj, mask=g.mask,
+                   f=jnp.where(g.mask, jnp.asarray(f)[None, :], jnp.inf))
+    d = persistence_diagrams_batched(
+        g, max_dim=1, edge_cap=128, tri_cap=512, sublevel=sublevel
+    )
+    ref = persistence_diagrams(
+        np.asarray(g.adj[0]), f, np.asarray(g.mask[0]), max_dim=1,
+        sublevel=sublevel,
+    )
+    ours = diagrams_to_numpy(d, 0, 1)
+    assert diagrams_equal(ref, ours), (ref, ours)
+
+
+def test_pallas_reducer_path():
+    gs = random_graphs("er", 3, seed=5)
+    g = graphs_to_batch(gs)
+    d1 = persistence_diagrams_batched(g, max_dim=1, edge_cap=96, tri_cap=256,
+                                      reducer="jnp")
+    d2 = persistence_diagrams_batched(g, max_dim=1, edge_cap=96, tri_cap=256,
+                                      reducer="pallas")
+    for i in range(len(gs)):
+        assert diagrams_equal(diagrams_to_numpy(d1, i, 1), diagrams_to_numpy(d2, i, 1))

@@ -1,0 +1,123 @@
+"""Hypothesis property tests on the system's structural invariants
+(fast graph-level properties; the theorem-level PD properties live in
+test_coral_theorem.py / test_prunit_theorem.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.graph import GraphBatch, canonicalize
+from repro.core.kcore import coreness, kcore_mask
+from repro.core.prunit import domination_matrix, prunit
+from repro.topo.features import persistence_stats
+
+
+def _random_batch(seed: int, b: int, n: int, p: float) -> GraphBatch:
+    key = jax.random.PRNGKey(seed)
+    ka, km, kf = jax.random.split(key, 3)
+    adj = jax.random.bernoulli(ka, p, (b, n, n))
+    nv = jax.random.randint(km, (b,), 2, n + 1)
+    mask = jnp.arange(n)[None, :] < nv[:, None]
+    f = jax.random.randint(kf, (b, n), 0, 8).astype(jnp.float32)
+    return canonicalize(adj, mask, f)
+
+
+graph_params = st.tuples(
+    st.integers(0, 2**30), st.integers(1, 4), st.integers(3, 14),
+    st.floats(0.05, 0.7),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_params)
+def test_canonicalize_idempotent(args):
+    g = _random_batch(*args)
+    g2 = canonicalize(g.adj, g.mask, g.f)
+    np.testing.assert_array_equal(np.asarray(g.adj), np.asarray(g2.adj))
+    np.testing.assert_array_equal(np.asarray(g.mask), np.asarray(g2.mask))
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_params)
+def test_kcore_monotone_in_k(args):
+    g = _random_batch(*args)
+    prev = g.mask
+    for k in range(1, 5):
+        cur = kcore_mask(g.adj, g.mask, k)
+        assert not np.any(np.asarray(cur & ~prev)), "k-core must shrink with k"
+        prev = cur
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_params)
+def test_kcore_mask_is_fixed_point(args):
+    """Every vertex of the k-core has degree >= k inside the core."""
+    g = _random_batch(*args)
+    for k in (2, 3):
+        m = np.asarray(kcore_mask(g.adj, g.mask, k))
+        a = np.asarray(g.adj) & m[:, None, :] & m[:, :, None]
+        deg = a.sum(-1)
+        assert np.all(deg[m] >= k)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_params)
+def test_coreness_consistent_with_kcore(args):
+    g = _random_batch(*args)
+    c = np.asarray(coreness(g.adj, g.mask))
+    for k in (1, 2, 3):
+        m = np.asarray(kcore_mask(g.adj, g.mask, k))
+        np.testing.assert_array_equal(m, (c >= k) & np.asarray(g.mask))
+
+
+@settings(max_examples=20, deadline=None)
+@given(graph_params)
+def test_domination_definition(args):
+    """dom[u,v] == (closed nbhd of u) subset of (closed nbhd of v)."""
+    g = _random_batch(*args)
+    dom = np.asarray(domination_matrix(g.adj, g.mask))
+    adj = np.asarray(g.adj)
+    mask = np.asarray(g.mask)
+    b, n = mask.shape
+    eye = np.eye(n, dtype=bool)
+    for i in range(b):
+        nc = (adj[i] | eye) & mask[i][None, :] & mask[i][:, None]
+        for u in range(n):
+            for v in range(n):
+                want = (mask[i, u] and mask[i, v] and u != v
+                        and not np.any(nc[u] & ~nc[v]))
+                assert dom[i, u, v] == want, (i, u, v)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graph_params)
+def test_prunit_only_removes_and_is_idempotent_with_floor(args):
+    g = _random_batch(*args)
+    gp = prunit(g, sublevel=True)
+    # never adds vertices or edges
+    assert not np.any(np.asarray(gp.mask & ~g.mask))
+    assert not np.any(np.asarray(gp.adj & ~g.adj))
+    # surviving vertices keep their original f (paper Remark 1)
+    keep = np.asarray(gp.mask)
+    np.testing.assert_array_equal(np.asarray(gp.f)[keep],
+                                  np.asarray(g.f)[keep])
+    # idempotent: no dominated-with-f-condition vertex remains removable
+    gpp = prunit(gp, sublevel=True)
+    np.testing.assert_array_equal(np.asarray(gp.mask), np.asarray(gpp.mask))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**30))
+def test_feature_vector_permutation_invariant_stats(seed):
+    """Persistence statistics are invariant to vertex relabelling."""
+    from repro.core.api import topological_signature
+
+    g = _random_batch(seed, 1, 10, 0.35)
+    perm = np.asarray(jax.random.permutation(jax.random.PRNGKey(seed ^ 7), 10))
+    adj_p = np.asarray(g.adj)[:, perm][:, :, perm]
+    g2 = canonicalize(jnp.asarray(adj_p), g.mask[:, perm], g.f[:, perm])
+    d1 = topological_signature(g, dim=1, method="both", edge_cap=64, tri_cap=128)
+    d2 = topological_signature(g2, dim=1, method="both", edge_cap=64, tri_cap=128)
+    s1 = np.asarray(persistence_stats(d1, 1))
+    s2 = np.asarray(persistence_stats(d2, 1))
+    np.testing.assert_allclose(s1, s2, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,74 @@
+"""PrunIT domination detection + batch-removal structure."""
+import jax
+import networkx as nx
+import numpy as np
+
+from repro.core import domination_matrix, prunit
+from tests.conftest import graphs_to_batch, random_graphs
+
+
+def naive_domination(adj, mask):
+    n = adj.shape[0]
+    dom = np.zeros((n, n), bool)
+    for u in range(n):
+        if not mask[u]:
+            continue
+        nu = set(np.nonzero(adj[u] & mask)[0]) | {u}
+        for v in range(n):
+            if v == u or not mask[v]:
+                continue
+            nv = set(np.nonzero(adj[v] & mask)[0]) | {v}
+            dom[u, v] = nu <= nv
+    return dom
+
+
+def test_domination_vs_naive():
+    gs = random_graphs("er", 5, seed=3) + random_graphs("ba", 3, seed=4)
+    g = graphs_to_batch(gs)
+    dom = np.asarray(domination_matrix(g.adj, g.mask))
+    for i in range(len(gs)):
+        adj = np.asarray(g.adj[i])
+        mask = np.asarray(g.mask[i])
+        assert (dom[i] == naive_domination(adj, mask)).all()
+
+
+def test_figure3_example():
+    # Paper Fig 3: vertex 3 (0-indexed: 2) dominates vertices 1 and 2 (0, 1).
+    G = nx.Graph([(0, 2), (1, 2), (0, 1), (2, 3), (1, 3)])
+    # construct: N[0]={0,1,2}, N[1]={0,1,2,3}, N[2]={0,1,2,3}, N[3]={1,2,3}
+    g = graphs_to_batch([G])
+    dom = np.asarray(domination_matrix(g.adj, g.mask))[0]
+    assert dom[0, 1] and dom[0, 2]  # 0 dominated by 1 and 2
+    assert dom[3, 1] and dom[3, 2]
+    assert not dom[1, 0] and not dom[2, 3]
+
+
+def test_prunit_star_collapses_to_core():
+    # A star: every leaf is dominated by the hub; superlevel degree filtration
+    # lets all leaves go (Remark 8), leaving hub + one leaf at most.
+    g = graphs_to_batch([nx.star_graph(9)])
+    gp = prunit(g, sublevel=False)
+    assert int(np.asarray(gp.n_vertices())[0]) <= 2
+
+
+def test_prunit_never_removes_below_floor():
+    # Pruning a cycle: no vertex dominates another on C_n (n>=4); nothing
+    # should be removed.
+    g = graphs_to_batch([nx.cycle_graph(8)])
+    gp = prunit(g, sublevel=False)
+    assert int(np.asarray(gp.n_vertices())[0]) == 8
+
+
+def test_prunit_idempotent():
+    gs = random_graphs("ba", 4, seed=9)
+    g = graphs_to_batch(gs)
+    g1 = prunit(g, sublevel=False)
+    g2 = prunit(g1, sublevel=False)
+    assert (np.asarray(g1.mask) == np.asarray(g2.mask)).all()
+
+
+def test_prunit_jit_vmap_composable():
+    gs = random_graphs("er", 3, seed=11)
+    g = graphs_to_batch(gs)
+    out = jax.jit(lambda gb: prunit(gb, sublevel=False).mask)(g)
+    assert out.shape == g.mask.shape

@@ -1,0 +1,82 @@
+"""Property tests of the paper's Theorem 7 / Remark 8 / Theorem 10 (PrunIT).
+
+PrunIT must preserve EVERY persistence diagram (all dims) for sublevel and
+superlevel filtrations, for arbitrary filtering functions — and the combined
+PrunIT-then-Coral pipeline must stay exact at the target dimension.
+"""
+import networkx as nx
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import GraphBatch, prunit, prunit_then_coral
+from repro.core.persistence_ref import (
+    diagrams_equal,
+    persistence_diagrams,
+    power_filtration_diagrams,
+)
+from tests.conftest import graphs_to_batch
+
+
+@st.composite
+def graph_and_f(draw, n_min=4, n_max=14):
+    n = draw(st.integers(n_min, n_max))
+    p = draw(st.floats(0.2, 0.75))
+    seed = draw(st.integers(0, 2**31 - 1))
+    g = nx.gnp_random_graph(n, p, seed=seed)
+    f = draw(st.lists(st.integers(0, 5), min_size=n, max_size=n))
+    return g, np.asarray(f, dtype=np.float32)
+
+
+def _with_f(batch, f):
+    import jax.numpy as jnp
+
+    fv = jnp.where(batch.mask, jnp.asarray(f)[None, : batch.n], jnp.inf)
+    return GraphBatch(adj=batch.adj, mask=batch.mask, f=fv)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_and_f(), st.booleans())
+def test_prunit_preserves_all_diagrams(gf, sublevel):
+    G, f = gf
+    g = _with_f(graphs_to_batch([G]), f)
+    gp = prunit(g, sublevel=sublevel)
+    ref = persistence_diagrams(
+        np.asarray(g.adj[0]), np.asarray(g.f[0]), np.asarray(g.mask[0]),
+        max_dim=1, sublevel=sublevel,
+    )
+    red = persistence_diagrams(
+        np.asarray(gp.adj[0]), np.asarray(gp.f[0]), np.asarray(gp.mask[0]),
+        max_dim=1, sublevel=sublevel,
+    )
+    assert diagrams_equal(ref, red), (ref, red)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graph_and_f(n_min=5, n_max=12), st.integers(1, 2))
+def test_combined_prunit_coral_exact(gf, k):
+    G, f = gf
+    g = _with_f(graphs_to_batch([G]), f)
+    gc = prunit_then_coral(g, k)
+    ref = persistence_diagrams(
+        np.asarray(g.adj[0]), np.asarray(g.f[0]), np.asarray(g.mask[0]), max_dim=k
+    )
+    red = persistence_diagrams(
+        np.asarray(gc.adj[0]), np.asarray(gc.f[0]), np.asarray(gc.mask[0]), max_dim=k
+    )
+    assert diagrams_equal({k: ref.get(k, [])}, {k: red.get(k, [])})
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(5, 10), st.floats(0.3, 0.8), st.integers(0, 2**31 - 1))
+def test_prunit_power_filtration(n, p, seed):
+    # Theorem 10: dominated-vertex removal preserves power-filtration PDs
+    # (k >= 1) on connected graphs — no f-condition needed.
+    G = nx.gnp_random_graph(n, p, seed=seed)
+    if not nx.is_connected(G):
+        G = nx.compose(G, nx.path_graph(n))
+    g = graphs_to_batch([G])
+    # prune with no f restriction: superlevel + degree satisfies Remark 8
+    gp = prunit(g, sublevel=False)
+    ref = power_filtration_diagrams(np.asarray(g.adj[0]), np.asarray(g.mask[0]), max_dim=1)
+    red = power_filtration_diagrams(np.asarray(gp.adj[0]), np.asarray(gp.mask[0]), max_dim=1)
+    assert diagrams_equal({1: ref.get(1, [])}, {1: red.get(1, [])}), (ref, red)
