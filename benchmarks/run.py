@@ -23,6 +23,7 @@ SUITES = {
     "table3": ("benchmarks.table3_strong_collapse", "PrunIT vs Strong Collapse (Table 3)"),
     "fig2": ("benchmarks.fig2_clustering", "clustering coeff vs higher PDs (Fig 2/10)"),
     "kernels": ("benchmarks.kernel_bench", "Pallas kernel microbenchmarks"),
+    "serve": ("benchmarks.serve_bench", "TopoServe throughput/latency + parity"),
 }
 
 

@@ -1,0 +1,124 @@
+"""TopoServe throughput/latency benchmark + served-vs-direct parity check.
+
+Per padding bucket: graphs/s, p50/p99 request latency, executed batches —
+and a bit-identical comparison of every served diagram against a direct
+``topological_signature`` call on the same packed batches (the serve path
+must be a pure scheduling layer, never a numerics layer).
+
+  PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+  PYTHONPATH=src python -m benchmarks.run --only serve
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import Report
+from repro.core.api import plan_cache_info, topological_signature
+from repro.core.persistence_jax import diagrams_bitwise_equal
+from repro.serve import TopoServe, TopoServeConfig
+from repro.serve.topo_serve import pack_requests
+
+
+def _query_stream(n_queries: int, seed: int = 0):
+    """Synthetic ego-net-regime queries spanning the bucket ladder."""
+    import networkx as nx
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_queries):
+        n = int(rng.integers(6, 56))
+        kind = rng.integers(0, 3)
+        if kind == 0:
+            g = nx.gnp_random_graph(n, float(rng.uniform(0.1, 0.3)),
+                                    seed=int(rng.integers(2**31)))
+        elif kind == 1:
+            g = nx.barabasi_albert_graph(n, min(3, n - 1),
+                                         seed=int(rng.integers(2**31)))
+        else:
+            g = nx.powerlaw_cluster_graph(n, min(2, n - 1), 0.4,
+                                          seed=int(rng.integers(2**31)))
+        out.append((list(g.edges()), n))
+    return out
+
+
+def run(report: Report, quick: bool = False) -> None:
+    n_queries = 60 if quick else 400
+    max_batch = 32 if quick else 128
+    # pad_batch_to == max_batch -> every executed batch has ONE shape per
+    # bucket, so after warmup the timed region never recompiles
+    cfg = TopoServeConfig(dim=1, method="prunit", sublevel=False,
+                          max_batch=max_batch, pad_batch_to=max_batch,
+                          record_batches=True)
+    server = TopoServe(cfg)
+    queries = _query_stream(n_queries, seed=11)
+
+    # warmup round: compile every touched bucket out of the timed region
+    warm = [server.submit(edges=e, n_vertices=n) for (e, n) in queries]
+    server.drain()
+    for f in warm:
+        f.result()
+    server.executed_batches.clear()
+
+    t0 = time.perf_counter()
+    futs = [server.submit(edges=e, n_vertices=n) for (e, n) in queries]
+    server.drain()
+    results = [f.result() for f in futs]
+    wall = time.perf_counter() - t0
+
+    report.add("serve", "graphs_per_s", len(futs) / wall)
+    by_bucket: dict = {}
+    for f in futs:
+        by_bucket.setdefault(f.bucket, []).append(f)
+    for bucket, bfuts in sorted(by_bucket.items()):
+        lat = np.array([f.latency_s() for f in bfuts]) * 1e3
+        tag = f"serve_n{bucket.n_pad}"
+        report.add(tag, "graphs", len(bfuts))
+        report.add(tag, "latency_p50_ms", np.percentile(lat, 50))
+        report.add(tag, "latency_p99_ms", np.percentile(lat, 99))
+    report.add("serve", "batches", server.stats["batches"])
+    info = plan_cache_info()
+    report.add("serve", "plan_cache_hits", info["hits"])
+    report.add("serve", "plan_cache_misses", info["misses"])
+
+    # ---- parity: replay the exact executed batches through the direct API
+    import jax
+
+    checked = 0
+    mismatches = 0
+    for bucket, reqs, bfuts in server.executed_batches:
+        g = pack_requests(reqs, bucket)
+        direct = topological_signature(
+            g, dim=cfg.dim, method=cfg.method, sublevel=cfg.sublevel,
+            edge_cap=bucket.edge_cap, tri_cap=bucket.tri_cap,
+            quad_cap=cfg.quad_cap, reducer=cfg.reducer,
+        )
+        for i, fut in enumerate(bfuts):
+            row = jax.tree.map(lambda x: x[i], direct)
+            if not diagrams_bitwise_equal(fut.result(), row):
+                mismatches += 1
+            checked += 1
+    assert checked == len(results), (checked, len(results))
+    report.add("serve", "parity_mismatches", mismatches)
+    if mismatches:
+        raise AssertionError(
+            f"{mismatches}/{len(results)} served diagrams differ from direct "
+            "topological_signature output")
+    print(f"[serve_bench] parity OK: {len(results)} served diagrams "
+          "bit-identical to direct computation")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small stream (CI / CPU smoke)")
+    args = ap.parse_args()
+    report = Report()
+    run(report, quick=args.quick)
+    print(report.csv())
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import topological_signature
+from repro.core.api import make_topo_plan
 from repro.data import graphs as gdata
 from repro.data.ego import ego_batch
 from repro.topo.features import feature_vector
@@ -27,12 +27,16 @@ def main():
     print(f"{egos.batch} ego nets, padded order {egos.n}")
 
     # per-ego PD0/PD1 with PrunIT (superlevel, degree filtration: every
-    # dominated vertex is removable -> maximal reduction, paper Remark 8)
+    # dominated vertex is removable -> maximal reduction, paper Remark 8).
+    # plan->execute: the compiled pipeline is shared with TopoServe /
+    # benchmarks through the process-wide plan cache.
+    plan = make_topo_plan(dim=1, method="prunit", sublevel=False,
+                          edge_cap=160, tri_cap=64)
     t0 = time.time()
-    d = topological_signature(egos, dim=1, method="prunit", sublevel=False,
-                              edge_cap=160, tri_cap=64)
-    feats = feature_vector(d, max_dim=1, res=4)
+    d = plan.execute(egos)
+    feats = feature_vector(d, max_dim=plan.dim, res=4)
     jax.block_until_ready(feats)
+    # (equivalently in one call: repro.topo.features.signature_features)
     print(f"PDs + features for all egos in {time.time()-t0:.2f}s "
           f"(feature dim {feats.shape[-1]})")
 

@@ -1,0 +1,74 @@
+"""TopoServe demo: a synthetic ego-net query stream served in padded buckets.
+
+Simulates the paper's §6.2 regime as online traffic — clients keep asking
+"what is the persistence diagram of THIS vertex's ego net?" — and shows the
+TopoServe scheduler batching those single-graph queries into a bounded set
+of jit signatures while a background thread drains the queues.
+
+  PYTHONPATH=src python examples/serve_topo.py
+"""
+import threading
+import time
+
+import networkx as nx
+import numpy as np
+
+from repro.core.api import plan_cache_info
+from repro.serve import TopoServe, TopoServeConfig
+
+
+def synthetic_ego_queries(n_queries: int, seed: int = 0):
+    """Ego nets of a preferential-attachment host graph, as (edges, n, f)."""
+    host = nx.barabasi_albert_graph(400, 3, seed=seed)
+    deg = dict(host.degree())
+    rng = np.random.default_rng(seed)
+    centers = rng.integers(0, host.number_of_nodes(), size=n_queries)
+    for c in centers:
+        ego = nx.ego_graph(host, int(c), radius=1)
+        nodes = sorted(ego.nodes())
+        if len(nodes) > 64:  # stay inside the default bucket ladder
+            nodes = sorted(nodes, key=lambda u: deg[u], reverse=True)[:64]
+            ego = host.subgraph(nodes)
+            nodes = sorted(ego.nodes())
+        idx = {u: i for i, u in enumerate(nodes)}
+        edges = [(idx[u], idx[v]) for (u, v) in ego.edges()]
+        # paper Remark 1: filtration values come from the HOST graph
+        f = [float(deg[u]) for u in nodes]
+        yield edges, len(nodes), f
+
+
+def main():
+    # pad_batch_to bounds the set of executed batch shapes (-> bounded jit
+    # recompiles) even though the drain thread races the submission loop
+    server = TopoServe(TopoServeConfig(dim=1, method="prunit",
+                                       sublevel=False, max_batch=64,
+                                       pad_batch_to=64))
+    drainer = threading.Thread(target=server.serve_forever, daemon=True)
+    drainer.start()
+
+    futures = []
+    t0 = time.perf_counter()
+    for edges, n, f in synthetic_ego_queries(200, seed=7):
+        futures.append(server.submit(edges=edges, n_vertices=n, f=f))
+    results = [fut.result(timeout=120) for fut in futures]
+    wall = time.perf_counter() - t0
+    server.stop()
+
+    # 1-hop ego nets are cones (H1 of the clique complex is trivial), so the
+    # per-vertex signal lives in PD0: how neighborhood components merge as
+    # the degree filtration sweeps (the TRL feature of the paper's §6.2)
+    h0 = np.array([int(d.count(0)) for d in results])
+    lat = np.array([f.latency_s() for f in futures]) * 1e3
+    print(f"served {len(results)} ego-net queries in {wall:.2f}s "
+          f"({len(results)/wall:.1f} graphs/s)")
+    print(f"latency p50/p99: {np.percentile(lat, 50):.1f} / "
+          f"{np.percentile(lat, 99):.1f} ms")
+    print(f"PD0 features per query: mean {h0.mean():.2f}, max {h0.max()}")
+    per_bucket = {f"n{b.n_pad}": s["served"]
+                  for b, s in server.stats["per_bucket"].items() if s["served"]}
+    print("graphs per bucket:", per_bucket)
+    print("plan cache:", plan_cache_info())
+
+
+if __name__ == "__main__":
+    main()

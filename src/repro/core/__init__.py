@@ -1,6 +1,11 @@
 """TopoPipe core: CoralTDA + PrunIT exact reductions and persistence."""
 from repro.core.api import (
     ReductionStats,
+    TopoPlan,
+    TopoPlanKey,
+    clear_plan_cache,
+    make_topo_plan,
+    plan_cache_info,
     reduce_graphs,
     reduction_stats,
     topological_signature,
@@ -14,7 +19,12 @@ __all__ = [
     "Diagrams",
     "GraphBatch",
     "ReductionStats",
+    "TopoPlan",
+    "TopoPlanKey",
     "canonicalize",
+    "clear_plan_cache",
+    "make_topo_plan",
+    "plan_cache_info",
     "coral_reduce",
     "coreness",
     "degeneracy",

@@ -4,11 +4,23 @@ This is the paper's contribution packaged as a composable JAX module: feed a
 GraphBatch, choose a reduction (coral / prunit / both / none), get exact
 persistence diagrams.  All functions are jit/vmap/pjit friendly; the launch
 layer shards batches over the ("pod", "data") mesh axes.
+
+Compilation is organised as an explicit **plan -> execute** split (see
+docs/ARCHITECTURE.md §Plan/Execute): ``make_topo_plan(...)`` returns a
+``TopoPlan`` — one compiled pipeline per distinct
+``(dim, method, sublevel, caps, reducer, mesh)`` key, held in a process-wide
+LRU cache — and ``topological_signature`` is a thin wrapper over it.  The
+serve layer (repro/serve/topo_serve.py), the feature pipeline
+(repro/topo/features.py) and the benchmarks all go through this one path, so
+a given pipeline shape is compiled exactly once per process.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import OrderedDict
 from functools import partial
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +46,157 @@ def reduce_graphs(g: GraphBatch, dim: int, method: str = "both",
     return g
 
 
-@partial(jax.jit, static_argnames=("dim", "method", "sublevel", "edge_cap",
-                                   "tri_cap", "quad_cap", "reducer"))
+@dataclasses.dataclass(frozen=True)
+class TopoPlanKey:
+    """Hashable identity of one compiled TDA pipeline (the plan-cache key).
+
+    Two calls that agree on every field share one ``TopoPlan`` and therefore
+    one jit cache; anything not in this key (batch size, padded order) is a
+    jit shape specialization *inside* the plan, not a new plan.
+    """
+
+    dim: int
+    method: str
+    sublevel: bool
+    edge_cap: int
+    tri_cap: int
+    quad_cap: int
+    reducer: str
+    mesh: Any = None  # jax.sharding.Mesh (hashable) or None for single-host
+
+    def caps(self) -> tuple[int, int, int]:
+        return (self.edge_cap, self.tri_cap, self.quad_cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoPlan:
+    """A compiled reduce->persist pipeline plus its static metadata.
+
+    ``execute`` (alias ``__call__``) maps a GraphBatch to Diagrams through a
+    single jitted (or shard_mapped, when the plan carries a mesh) program.
+    The plan object is safe to hold across requests — re-executing with the
+    same (B, N) shape never recompiles.
+    """
+
+    key: TopoPlanKey
+    executor: Callable[[GraphBatch], Diagrams]
+
+    def execute(self, g: GraphBatch) -> Diagrams:
+        return self.executor(g)
+
+    def __call__(self, g: GraphBatch) -> Diagrams:
+        return self.executor(g)
+
+    @property
+    def dim(self) -> int:
+        return self.key.dim
+
+    @property
+    def method(self) -> str:
+        return self.key.method
+
+    @property
+    def sublevel(self) -> bool:
+        return self.key.sublevel
+
+
+def _pipeline(g: GraphBatch, key: TopoPlanKey) -> Diagrams:
+    """The one reduce->persist body every execution path compiles."""
+    gr = reduce_graphs(g, key.dim, key.method, key.sublevel)
+    return persistence_diagrams_batched(
+        gr, max_dim=key.dim, edge_cap=key.edge_cap, tri_cap=key.tri_cap,
+        quad_cap=key.quad_cap, sublevel=key.sublevel, reducer=key.reducer,
+    )
+
+
+def _build_executor(key: TopoPlanKey) -> Callable[[GraphBatch], Diagrams]:
+    if key.mesh is None:
+        return jax.jit(partial(_pipeline, key=key))
+
+    # shard_map pins the whole pipeline per-device (zero collectives — under
+    # plain pjit GSPMD cannot partition the vmapped scatter/gather/top-k ops
+    # and inserts 0.6-3 GB/device batch all-gathers on a 256-chip mesh,
+    # §Perf iteration 5).  The global batch must divide the mesh size; the
+    # serve layer pads bucket batches to guarantee this.
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = key.mesh
+    spec = P(tuple(mesh.axis_names))
+
+    def per_device(adj, mask, f):
+        return _pipeline(GraphBatch(adj=adj, mask=mask, f=f), key)
+
+    sharded = shard_map(
+        per_device, mesh=mesh,
+        in_specs=(spec, spec, spec),
+        out_specs=Diagrams(birth=spec, death=spec, dim=spec, valid=spec),
+        check_rep=False,
+    )
+
+    def executor(g: GraphBatch) -> Diagrams:
+        return sharded(g.adj, g.mask, g.f)
+
+    return executor
+
+
+_PLAN_CACHE: "OrderedDict[TopoPlanKey, TopoPlan]" = OrderedDict()
+_PLAN_CACHE_MAXSIZE = 64
+_PLAN_CACHE_LOCK = threading.Lock()
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def make_topo_plan(
+    dim: int = 1,
+    method: str = "both",
+    sublevel: bool = True,
+    edge_cap: int = 256,
+    tri_cap: int = 512,
+    quad_cap: int = 0,
+    reducer: str = "jnp",
+    mesh=None,
+) -> TopoPlan:
+    """Plan step of the plan->execute split: build or fetch a compiled pipeline.
+
+    Returns the process-wide ``TopoPlan`` for this key (LRU-cached, thread
+    safe).  Callers that execute many batches — TopoServe buckets, training
+    epochs, benchmark sweeps — should hold the plan and call it directly.
+    """
+    if method not in REDUCTIONS:
+        raise ValueError(f"unknown reduction {method!r}; want one of {REDUCTIONS}")
+    key = TopoPlanKey(dim=dim, method=method, sublevel=bool(sublevel),
+                      edge_cap=int(edge_cap), tri_cap=int(tri_cap),
+                      quad_cap=int(quad_cap), reducer=reducer, mesh=mesh)
+    with _PLAN_CACHE_LOCK:
+        plan = _PLAN_CACHE.get(key)
+        if plan is not None:
+            _PLAN_CACHE.move_to_end(key)
+            _PLAN_CACHE_STATS["hits"] += 1
+            return plan
+        _PLAN_CACHE_STATS["misses"] += 1
+        plan = TopoPlan(key=key, executor=_build_executor(key))
+        _PLAN_CACHE[key] = plan
+        while len(_PLAN_CACHE) > _PLAN_CACHE_MAXSIZE:
+            _PLAN_CACHE.popitem(last=False)
+            _PLAN_CACHE_STATS["evictions"] += 1
+    return plan
+
+
+def plan_cache_info() -> dict:
+    """Snapshot of the plan cache: hits/misses/evictions/currsize/maxsize."""
+    with _PLAN_CACHE_LOCK:
+        return dict(_PLAN_CACHE_STATS, currsize=len(_PLAN_CACHE),
+                    maxsize=_PLAN_CACHE_MAXSIZE)
+
+
+def clear_plan_cache() -> None:
+    """Drop every cached plan and reset the counters (tests/benchmarks)."""
+    with _PLAN_CACHE_LOCK:
+        _PLAN_CACHE.clear()
+        for k in _PLAN_CACHE_STATS:
+            _PLAN_CACHE_STATS[k] = 0
+
+
 def topological_signature(
     g: GraphBatch,
     dim: int = 1,
@@ -48,16 +209,18 @@ def topological_signature(
 ) -> Diagrams:
     """End-to-end: reduce with the paper's algorithms, then exact PDs.
 
+    Thin wrapper over ``make_topo_plan(...).execute(g)`` — one-shot callers
+    and the serve/train/bench layers all share the same compiled pipelines.
+
     The returned Diagrams cover dimensions 0..dim.  (Coral reduction is only
     exact for dimensions >= dim's core level, so when ``method`` includes
     coral, read out only dimension ``dim`` — or use method="prunit" for all
     dims at once.)
     """
-    gr = reduce_graphs(g, dim, method, sublevel)
-    return persistence_diagrams_batched(
-        gr, max_dim=dim, edge_cap=edge_cap, tri_cap=tri_cap, quad_cap=quad_cap,
-        sublevel=sublevel, reducer=reducer,
-    )
+    plan = make_topo_plan(dim=dim, method=method, sublevel=sublevel,
+                          edge_cap=edge_cap, tri_cap=tri_cap,
+                          quad_cap=quad_cap, reducer=reducer)
+    return plan.execute(g)
 
 
 @jax.tree_util.register_dataclass
@@ -92,33 +255,14 @@ def topological_signature_sharded(
 ) -> Diagrams:
     """``topological_signature`` under shard_map over every mesh axis.
 
-    The workload is embarrassingly parallel over graphs, but under plain pjit
-    GSPMD cannot partition the vmapped scatter/gather/top-k ops inside the
-    pipeline and inserts batch all-gathers (measured: 0.6-3 GB/device on a
-    256-chip mesh).  shard_map pins the whole pipeline per-device, so the
-    collective term is exactly zero (§Perf iteration 5).  The global batch
-    must divide the mesh size.
+    Thin wrapper over ``make_topo_plan(..., mesh=mesh)``; see _build_executor
+    for why shard_map beats plain pjit here.  The global batch must divide
+    the mesh size.
     """
-    from jax.experimental.shard_map import shard_map
-    from jax.sharding import PartitionSpec as P
-
-    axes = tuple(mesh.axis_names)
-    spec = P(axes)
-
-    def per_device(adj, mask, f):
-        gb = GraphBatch(adj=adj, mask=mask, f=f)
-        return topological_signature(
-            gb, dim=dim, method=method, sublevel=sublevel,
-            edge_cap=edge_cap, tri_cap=tri_cap, quad_cap=quad_cap,
-            reducer=reducer,
-        )
-
-    return shard_map(
-        per_device, mesh=mesh,
-        in_specs=(spec, spec, spec),
-        out_specs=Diagrams(birth=spec, death=spec, dim=spec, valid=spec),
-        check_rep=False,
-    )(g.adj, g.mask, g.f)
+    plan = make_topo_plan(dim=dim, method=method, sublevel=sublevel,
+                          edge_cap=edge_cap, tri_cap=tri_cap,
+                          quad_cap=quad_cap, reducer=reducer, mesh=mesh)
+    return plan.execute(g)
 
 
 @partial(jax.jit, static_argnames=("dim", "method", "sublevel"))

@@ -6,6 +6,10 @@ paper's pointer-chasing graph algorithms are re-derived as masked linear
 algebra, and a dense (B, N, N) layout feeds the MXU directly.  Real-world
 inputs (ego networks, TU-style graph datasets) are small-N / huge-B, which is
 exactly the regime where padding overhead is bounded and batching wins.
+
+The padded-batch invariants (mask sentinels, +inf filtration padding, cap
+semantics) every layer relies on are spelled out in docs/ARCHITECTURE.md
+§GraphBatch invariants.
 """
 from __future__ import annotations
 

@@ -274,6 +274,22 @@ def persistence_diagrams_batched(
     return jax.vmap(one)(g.adj, g.mask, g.f)
 
 
+def diagrams_bitwise_equal(a: Diagrams, b: Diagrams) -> bool:
+    """Bit-identical Diagrams comparison (NaN == NaN on invalid rows).
+
+    The serving layer's parity contract (benchmarks/serve_bench.py,
+    tests/test_topo_serve.py): scheduling must never change numerics.
+    """
+    import numpy as np
+
+    return (
+        np.array_equal(np.asarray(a.birth), np.asarray(b.birth), equal_nan=True)
+        and np.array_equal(np.asarray(a.death), np.asarray(b.death), equal_nan=True)
+        and np.array_equal(np.asarray(a.dim), np.asarray(b.dim))
+        and np.array_equal(np.asarray(a.valid), np.asarray(b.valid))
+    )
+
+
 def diagrams_to_numpy(d: Diagrams, batch_index: int, max_dim: int):
     """Extract a {dim: [(birth, death)]} dict matching persistence_ref."""
     import numpy as np

@@ -14,6 +14,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_serve_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
+    """Data-only mesh for TopoServe bucket execution.
+
+    The TDA serve path is embarrassingly parallel over graphs, so it shards
+    over ("pod", "data") only — no "model" axis — and TopoServe pads every
+    bucket batch to a multiple of the mesh size (see
+    repro/serve/topo_serve.py).  Default: every visible device on one axis.
+    """
+    n = n_devices if n_devices is not None else len(jax.devices())
+    if multi_pod:
+        assert n % 2 == 0, f"multi_pod serve mesh needs even device count, got {n}"
+        return jax.make_mesh((2, n // 2), ("pod", "data"))
+    return jax.make_mesh((n,), ("data",))
+
+
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):
     """Degenerate mesh over whatever devices exist (CPU tests)."""
     n = 1

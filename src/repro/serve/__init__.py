@@ -1,1 +1,21 @@
-"""Serving substrate: KV caches, prefill/decode steps."""
+"""Serving substrate: LM prefill/decode steps (serve_step) and the TopoServe
+batched persistence-diagram scheduler (topo_serve) — see docs/ARCHITECTURE.md."""
+from repro.serve.topo_serve import (
+    DEFAULT_BUCKETS,
+    Bucket,
+    TopoFuture,
+    TopoRequest,
+    TopoServe,
+    TopoServeConfig,
+    pack_requests,
+)
+
+__all__ = [
+    "Bucket",
+    "DEFAULT_BUCKETS",
+    "TopoFuture",
+    "TopoRequest",
+    "TopoServe",
+    "TopoServeConfig",
+    "pack_requests",
+]

@@ -1,0 +1,358 @@
+"""TopoServe: batched persistence-diagram serving on padding buckets.
+
+Turns the batch-at-a-time TDA core into a request-serving path (the
+ROADMAP's "serve heavy traffic" direction; docs/ARCHITECTURE.md §TopoServe):
+
+* clients ``submit()`` single graphs (edge list + optional filtering values)
+  and get back a ``TopoFuture``;
+* the scheduler assigns each request to a **padding bucket** — a fixed
+  ``(n_pad, edge_cap, tri_cap)`` shape class — so the number of distinct jit
+  signatures is bounded by the bucket ladder, not by the query distribution;
+* ``drain()`` packs each bucket's queue into a padded GraphBatch, executes
+  the bucket's plan through the process-wide plan cache
+  (``repro.core.api.make_topo_plan``), and resolves the futures with
+  per-graph Diagrams slices.
+
+The loop is deliberately sync-first (``submit``/``drain`` under one lock) so
+it is trivially testable; ``serve_forever`` runs the same drain as a blocking
+loop for a dedicated thread, and ``serve_forever_async`` wraps it for an
+asyncio event loop.  On a multi-device mesh, bucket batches are padded to a
+multiple of the mesh size and sharded over the ("pod", "data") axes via the
+plan's shard_map executor (repro/launch/mesh.py::make_serve_mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.api import TopoPlan, make_topo_plan
+from repro.core.graph import GraphBatch, from_edge_lists
+from repro.core.persistence_jax import Diagrams
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Bucket:
+    """One padding bucket == one jit signature class.
+
+    Every graph routed here is padded to ``n_pad`` vertices and persisted
+    with this bucket's simplex caps, so all its batches share one compiled
+    executable per batch size (and one per (batch,) shape when the server
+    pads batches to a fixed multiple).
+    """
+
+    n_pad: int
+    edge_cap: int
+    tri_cap: int
+
+
+# Default ladder: ego-net-regime graphs (the paper's §6.2 workload).  Caps
+# grow with the vertex budget; a graph lands in the first rung that fits
+# both its order and its edge count.
+DEFAULT_BUCKETS = (
+    Bucket(n_pad=16, edge_cap=64, tri_cap=96),
+    Bucket(n_pad=32, edge_cap=160, tri_cap=256),
+    Bucket(n_pad=64, edge_cap=320, tri_cap=512),
+    Bucket(n_pad=128, edge_cap=768, tri_cap=1024),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoServeConfig:
+    """Scheduler policy + the pipeline parameters shared by every bucket."""
+
+    buckets: tuple[Bucket, ...] = DEFAULT_BUCKETS
+    dim: int = 1
+    method: str = "both"
+    sublevel: bool = True
+    quad_cap: int = 0
+    reducer: str = "jnp"
+    max_batch: int = 256      # largest executed batch per bucket flush
+    pad_batch_to: int = 1     # executed batches padded to a multiple of this
+    record_batches: bool = False  # keep (bucket, requests) per executed batch
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoRequest:
+    """One client graph, host-side (hashable ids only; arrays built at pack)."""
+
+    edges: tuple[tuple[int, int], ...]
+    n_vertices: int
+    f: Optional[tuple[float, ...]] = None  # None -> degree filtration
+
+
+class TopoFuture:
+    """Handle for one submitted graph; resolved by a later ``drain()``.
+
+    ``result()`` blocks (thread-safe) until a drain — possibly on another
+    thread — fulfils it; async callers can ``await asyncio.to_thread(
+    fut.result)`` or poll ``done()``.
+    """
+
+    __slots__ = ("_event", "_value", "_error", "bucket", "submitted_at",
+                 "resolved_at")
+
+    def __init__(self, bucket: Bucket):
+        self._event = threading.Event()
+        self._value: Optional[Diagrams] = None
+        self._error: Optional[BaseException] = None
+        self.bucket = bucket
+        self.submitted_at = time.perf_counter()
+        self.resolved_at: Optional[float] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Diagrams:
+        """Per-graph Diagrams (leaves shaped (S,), no batch axis)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError("TopoFuture not resolved within timeout "
+                               "(is a drain loop running?)")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def latency_s(self) -> float:
+        """submit->resolve wall time; valid once done()."""
+        if self.resolved_at is None:
+            raise RuntimeError("future not resolved yet")
+        return self.resolved_at - self.submitted_at
+
+    def _resolve(self, value: Diagrams) -> None:
+        self._value = value
+        self.resolved_at = time.perf_counter()
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self.resolved_at = time.perf_counter()
+        self._event.set()
+
+
+def pack_requests(reqs: Sequence[TopoRequest], bucket: Bucket) -> GraphBatch:
+    """Pad a bucket's requests into one GraphBatch (shared with benchmarks
+    so served-vs-direct parity checks run the exact same packing)."""
+    if all(r.f is None for r in reqs):
+        f_values = None  # from_edge_lists' vectorized degree-filtration default
+    else:
+        f_values = [r.f if r.f is not None
+                    else _degree_f(r.edges, r.n_vertices) for r in reqs]
+    return from_edge_lists(
+        [list(r.edges) for r in reqs],
+        [r.n_vertices for r in reqs],
+        n_pad=bucket.n_pad,
+        f_values=f_values,
+    )
+
+
+def _degree_f(edges: Sequence[tuple[int, int]], n_vertices: int) -> tuple[float, ...]:
+    # dedupe first: duplicate/bidirectional entries must not inflate degrees
+    # (from_edge_lists' adjacency-based default dedupes implicitly, and the
+    # two paths must agree or co-batching would change a request's numerics)
+    deg = np.zeros(n_vertices, dtype=np.float32)
+    for (u, v) in {(min(u, v), max(u, v)) for (u, v) in edges if u != v}:
+        deg[u] += 1
+        deg[v] += 1
+    return tuple(float(x) for x in deg)
+
+
+def _count_triangles(edge_set, n_vertices: int) -> int:
+    """Host-side triangle count (trace(A^3)/6) for cap-aware routing."""
+    a = np.zeros((n_vertices, n_vertices), dtype=np.int64)
+    for (u, v) in edge_set:
+        a[u, v] = a[v, u] = 1
+    return int(np.trace(a @ a @ a) // 6)
+
+
+class TopoServe:
+    """Bucketed batch scheduler over the plan cache.
+
+    >>> server = TopoServe()
+    >>> fut = server.submit(edges=[(0, 1), (1, 2), (2, 0)], n_vertices=3)
+    >>> server.drain()
+    1
+    >>> int(fut.result().betti(0))
+    1
+    """
+
+    def __init__(self, config: TopoServeConfig | None = None, mesh=None):
+        self.config = config or TopoServeConfig()
+        if not self.config.buckets:
+            raise ValueError("TopoServeConfig.buckets must be non-empty")
+        self.mesh = mesh
+        self._buckets = tuple(sorted(self.config.buckets))
+        pad = max(1, self.config.pad_batch_to)
+        if mesh is not None:
+            # executed batches must DIVIDE the mesh (shard_map contract), so
+            # round pad up to the next multiple of the mesh size
+            n_dev = int(mesh.devices.size)
+            pad = -(-pad // n_dev) * n_dev
+        self._pad_batch_to = pad
+        self._lock = threading.Lock()
+        self._queues: dict[Bucket, deque] = {b: deque() for b in self._buckets}
+        self._stopped = threading.Event()
+        # (bucket, requests, futures) per executed batch when record_batches
+        self.executed_batches: list[tuple] = []
+        self.stats = {
+            "submitted": 0, "served": 0, "failed": 0, "batches": 0,
+            "padded_rows": 0,
+            "per_bucket": {b: {"submitted": 0, "served": 0, "batches": 0}
+                           for b in self._buckets},
+        }
+
+    # ------------------------------------------------------------- routing
+
+    def bucket_for(self, n_vertices: int, n_edges: int,
+                   n_triangles: int = 0) -> Bucket:
+        """Deterministic bucket assignment: the smallest rung (buckets are
+        totally ordered by (n_pad, edge_cap, tri_cap)) whose capacities hold
+        every simplex of the graph — exactness requires caps >= the true
+        counts (docs/ARCHITECTURE.md §GraphBatch invariants), so a
+        triangle-dense graph is promoted past rungs its edge count fits."""
+        for b in self._buckets:
+            if (n_vertices <= b.n_pad and n_edges <= b.edge_cap
+                    and n_triangles <= b.tri_cap):
+                return b
+        raise ValueError(
+            f"graph with {n_vertices} vertices / {n_edges} edges / "
+            f"{n_triangles} triangles exceeds every bucket "
+            f"(largest: {self._buckets[-1]})")
+
+    def plan_for(self, bucket: Bucket) -> TopoPlan:
+        """The bucket's compiled pipeline, via the process-wide plan cache."""
+        c = self.config
+        return make_topo_plan(
+            dim=c.dim, method=c.method, sublevel=c.sublevel,
+            edge_cap=bucket.edge_cap, tri_cap=bucket.tri_cap,
+            quad_cap=c.quad_cap, reducer=c.reducer, mesh=self.mesh,
+        )
+
+    # ------------------------------------------------------------- ingest
+
+    def submit(self, edges: Sequence[tuple[int, int]], n_vertices: int,
+               f: Sequence[float] | None = None) -> TopoFuture:
+        """Enqueue one graph; returns a future resolved by a later drain.
+
+        Malformed requests are rejected HERE (ValueError) so they can never
+        poison a batch and fail co-batched clients' futures at drain time.
+        """
+        req = TopoRequest(
+            edges=tuple((int(u), int(v)) for (u, v) in edges),
+            n_vertices=int(n_vertices),
+            f=None if f is None else tuple(float(x) for x in f),
+        )
+        if req.n_vertices < 1:
+            raise ValueError(f"n_vertices must be >= 1, got {req.n_vertices}")
+        for (u, v) in req.edges:
+            if not (0 <= u < req.n_vertices and 0 <= v < req.n_vertices):
+                raise ValueError(
+                    f"edge ({u}, {v}) out of range for n_vertices="
+                    f"{req.n_vertices}")
+        if req.f is not None and len(req.f) != req.n_vertices:
+            raise ValueError(
+                f"f has {len(req.f)} values for {req.n_vertices} vertices")
+        edge_set = {(min(u, v), max(u, v)) for (u, v) in req.edges if u != v}
+        bucket = self.bucket_for(req.n_vertices, len(edge_set),
+                                 _count_triangles(edge_set, req.n_vertices))
+        fut = TopoFuture(bucket)
+        with self._lock:
+            self._queues[bucket].append((req, fut))
+            self.stats["submitted"] += 1
+            self.stats["per_bucket"][bucket]["submitted"] += 1
+        return fut
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._queues.values())
+
+    # ------------------------------------------------------------- drain
+
+    def drain(self) -> int:
+        """Execute every queued request, bucket by bucket; returns #served.
+
+        Bucket queues are flushed in submission order, chunked at
+        ``max_batch`` and padded (with empty graphs, dropped after execution)
+        to a multiple of ``pad_batch_to`` so sharded plans always see a batch
+        that divides the mesh."""
+        served = 0
+        while True:
+            with self._lock:
+                work = None
+                for b in self._buckets:
+                    q = self._queues[b]
+                    if q:
+                        work = (b, [q.popleft()
+                                    for _ in range(min(len(q),
+                                                       self.config.max_batch))])
+                        break
+            if work is None:
+                return served
+            served += self._execute(*work)
+
+    def _execute(self, bucket: Bucket, items: list) -> int:
+        reqs = tuple(r for (r, _) in items)
+        futs = [f for (_, f) in items]
+        try:
+            g = pack_requests(reqs, bucket)
+            n_pad_rows = (-len(reqs)) % self._pad_batch_to
+            if n_pad_rows:
+                g = _pad_batch(g, n_pad_rows)
+            d = self.plan_for(bucket).execute(g)
+            jax.block_until_ready(d.birth)
+        except Exception as e:  # resolve, don't wedge waiting clients
+            for f in futs:
+                f._fail(e)
+            with self._lock:
+                self.stats["failed"] += len(futs)
+            return 0
+        if self.config.record_batches:
+            self.executed_batches.append((bucket, reqs, tuple(futs)))
+        for i, f in enumerate(futs):
+            f._resolve(jax.tree.map(lambda x: x[i], d))
+        with self._lock:
+            self.stats["served"] += len(futs)
+            self.stats["batches"] += 1
+            self.stats["padded_rows"] += n_pad_rows
+            pb = self.stats["per_bucket"][bucket]
+            pb["served"] += len(futs)
+            pb["batches"] += 1
+        return len(futs)
+
+    # ------------------------------------------------------------- loops
+
+    def serve_forever(self, poll_s: float = 1e-3) -> None:
+        """Blocking drain loop (run on a dedicated thread); stop() exits it."""
+        while not self._stopped.is_set():
+            if self.drain() == 0:
+                self._stopped.wait(poll_s)
+
+    async def serve_forever_async(self, poll_s: float = 1e-3) -> None:
+        """Same loop for an asyncio host.  Each drain (jit dispatch +
+        block_until_ready, potentially hundreds of ms per batch) runs on a
+        worker thread so request-ingestion / health-check coroutines keep
+        interleaving on the event loop."""
+        import asyncio
+
+        while not self._stopped.is_set():
+            if await asyncio.to_thread(self.drain) == 0:
+                await asyncio.sleep(poll_s)
+
+    def stop(self) -> None:
+        self._stopped.set()
+
+
+def _pad_batch(g: GraphBatch, n_rows: int) -> GraphBatch:
+    """Append ``n_rows`` empty graphs (all-padding rows) to a batch."""
+    import jax.numpy as jnp
+
+    def pad(x, fill):
+        pad_shape = (n_rows,) + x.shape[1:]
+        return jnp.concatenate([x, jnp.full(pad_shape, fill, x.dtype)], axis=0)
+
+    return GraphBatch(adj=pad(g.adj, False), mask=pad(g.mask, False),
+                      f=pad(g.f, jnp.inf))

@@ -5,6 +5,11 @@ classifier or as auxiliary model inputs: Betti curves, persistence
 statistics, persistence images, and landscapes.  Everything is masked
 arithmetic over the fixed-size Diagrams layout, so it vmaps/pjit-shards with
 the rest of the pipeline.
+
+The train-side entry point is ``signature_features``, which consumes a
+``TopoPlan`` from ``repro.core.api.make_topo_plan`` — the same plan->execute
+contract the serve and benchmark layers use (docs/ARCHITECTURE.md
+§Plan/Execute), so all three share one compiled pipeline per shape class.
 """
 from __future__ import annotations
 
@@ -84,6 +89,17 @@ def persistence_landscape(d: Diagrams, k: int, grid: jax.Array,
     tent = jnp.where(sel[..., :, None], tent, -jnp.inf)
     top = jax.lax.top_k(jnp.swapaxes(tent, -1, -2), n_levels)[0]
     return jnp.maximum(jnp.swapaxes(top, -1, -2), 0.0)
+
+
+def signature_features(g, plan, res: int = 8, cap: float = 64.0) -> jax.Array:
+    """GraphBatch -> topological feature vectors through a shared TopoPlan.
+
+    ``plan`` is a ``repro.core.api.TopoPlan``; the diagram computation reuses
+    whatever executable the serve/bench layers already compiled for the same
+    (dim, method, caps, reducer) key.  Output matches ``feature_vector`` with
+    ``max_dim = plan.dim``.
+    """
+    return feature_vector(plan.execute(g), max_dim=plan.dim, res=res, cap=cap)
 
 
 @partial(jax.jit, static_argnames=("max_dim", "res"))

@@ -30,7 +30,33 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # optional dep: fall back to stdlib zlib (codec is
+    zstd = None      # recorded in the manifest, so restore stays compatible)
+import zlib
+
+
+def _compressor(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise ImportError("checkpoint was saved with zstd; install "
+                              "zstandard to restore it")
+        return zstd.ZstdCompressor(level=3).compress
+    return lambda b: zlib.compress(b, 6)
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise ImportError("checkpoint was saved with zstd; install "
+                              "zstandard to restore it")
+        return zstd.ZstdDecompressor().decompress
+    return zlib.decompress
+
+
+_DEFAULT_CODEC = "zstd" if zstd is not None else "zlib"
 
 
 def _path_str(path) -> str:
@@ -70,13 +96,13 @@ def save(ckpt_dir: str, step: int, state: Any, *, stream_state: dict | None = No
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
 
-    cctx = zstd.ZstdCompressor(level=3)
+    compress = _compressor(_DEFAULT_CODEC)
     for s in range(save_shards):
         payload = {
             names[i]: _encode_array(arrays[i])
             for i in range(len(arrays)) if shard_of[i] == s
         }
-        blob = cctx.compress(msgpack.packb(payload, use_bin_type=True))
+        blob = compress(msgpack.packb(payload, use_bin_type=True))
         with open(os.path.join(tmp, f"shard_{s:05d}.msgpack.zst"), "wb") as f:
             f.write(blob)
             f.flush()
@@ -84,6 +110,7 @@ def save(ckpt_dir: str, step: int, state: Any, *, stream_state: dict | None = No
 
     manifest = {
         "step": step,
+        "codec": _DEFAULT_CODEC,
         "n_shards": save_shards,
         "leaf_names": names,
         "leaf_shard": shard_of,
@@ -135,11 +162,12 @@ def restore(ckpt_dir: str, like: Any, step: int | None = None,
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
 
-    dctx = zstd.ZstdDecompressor()
+    # pre-codec manifests (no "codec" key) were always zstd
+    decompress = _decompressor(manifest.get("codec", "zstd"))
     by_name: dict[str, np.ndarray] = {}
     for s in range(manifest["n_shards"]):
         with open(os.path.join(d, f"shard_{s:05d}.msgpack.zst"), "rb") as f:
-            payload = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+            payload = msgpack.unpackb(decompress(f.read()), raw=False)
         for k, v in payload.items():
             by_name[k] = _decode_array(v)
 

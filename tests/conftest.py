@@ -12,6 +12,37 @@ import pytest
 from repro.core import from_networkx
 
 
+def hypothesis_or_stub():
+    """(given, settings, st) from hypothesis, or skip-stubs without it.
+
+    hypothesis is an optional ``[dev]`` extra (see pyproject.toml).  Modules
+    that are pure property tests use ``pytest.importorskip("hypothesis")``;
+    modules mixing property tests with plain tests use this helper so the
+    plain tests still collect and run when hypothesis is absent.
+    """
+    try:
+        from hypothesis import given, settings, strategies as st
+        return given, settings, st
+    except ImportError:
+        def given(*_args, **_kwargs):
+            def deco(fn):
+                def stub():
+                    pytest.skip("hypothesis not installed (pip install .[dev])")
+                stub.__name__ = fn.__name__
+                stub.__doc__ = fn.__doc__
+                return stub
+            return deco
+
+        def settings(*_args, **_kwargs):
+            return lambda fn: fn
+
+        class _StubStrategies:
+            def __getattr__(self, _name):
+                return lambda *a, **k: None
+
+        return given, settings, _StubStrategies()
+
+
 def random_graphs(kind: str, count: int, seed: int = 0):
     rng = np.random.default_rng(seed)
     out = []

@@ -6,6 +6,9 @@ computed with the exact NumPy oracle.
 """
 import networkx as nx
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional [dev] extra; skip module without
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GraphBatch, coral_reduce

@@ -3,7 +3,10 @@ import jax
 import numpy as np
 import networkx as nx
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
 
 from repro.core import from_networkx
 from repro.core.filtration import build_filtered_complex

@@ -2,7 +2,10 @@
 import networkx as nx
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests.conftest import hypothesis_or_stub
+
+given, settings, st = hypothesis_or_stub()
 
 from repro.core import GraphBatch, persistence_diagrams_batched
 from repro.core.persistence_jax import diagrams_to_numpy

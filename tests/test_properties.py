@@ -4,6 +4,9 @@ test_coral_theorem.py / test_prunit_theorem.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional [dev] extra; skip module without
 from hypothesis import given, settings, strategies as st
 
 from repro.core.graph import GraphBatch, canonicalize

@@ -6,6 +6,9 @@ PrunIT-then-Coral pipeline must stay exact at the target dimension.
 """
 import networkx as nx
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional [dev] extra; skip module without
 from hypothesis import given, settings, strategies as st
 
 from repro.core import GraphBatch, prunit, prunit_then_coral

@@ -10,6 +10,8 @@ from repro.data import graphs as gdata
 from repro.data.ego import ego_batch
 from repro.data.tokens import TokenStream
 from repro.topo.features import feature_vector, betti_curve
+
+pytest.importorskip("msgpack")  # checkpoint serialization; [models] extra
 from repro.train import checkpoint as ckpt
 from repro.train.optimizer import adamw_init
 from repro.train.train_step import TrainState

@@ -1,0 +1,241 @@
+"""TopoServe: bucket routing, plan-cache behaviour, served-vs-direct parity."""
+import threading
+
+import jax
+import networkx as nx
+import pytest
+
+from repro.core import topological_signature
+from repro.core.api import clear_plan_cache, make_topo_plan, plan_cache_info
+from repro.core.persistence_jax import diagrams_bitwise_equal as _rows_equal
+from repro.serve import Bucket, TopoServe, TopoServeConfig
+from repro.serve.topo_serve import pack_requests
+
+
+def _graph_query(g: nx.Graph):
+    nodes = sorted(g.nodes())
+    idx = {u: i for i, u in enumerate(nodes)}
+    return [(idx[u], idx[v]) for (u, v) in g.edges()], len(nodes)
+
+
+# ------------------------------------------------------------------ buckets
+
+def test_bucket_assignment_deterministic():
+    srv1 = TopoServe()
+    srv2 = TopoServe()
+    cases = [(3, 3), (16, 64), (17, 10), (16, 65), (40, 200), (100, 700)]
+    for nv, ne in cases:
+        b1 = srv1.bucket_for(nv, ne)
+        b2 = srv2.bucket_for(nv, ne)
+        assert b1 == b2
+        assert nv <= b1.n_pad and ne <= b1.edge_cap
+        # first-fit: no smaller configured bucket also fits
+        for smaller in srv1.config.buckets:
+            if smaller < b1:
+                assert nv > smaller.n_pad or ne > smaller.edge_cap
+
+
+def test_bucket_boundaries():
+    srv = TopoServe()
+    assert srv.bucket_for(16, 64).n_pad == 16   # exactly fits the first rung
+    assert srv.bucket_for(17, 10).n_pad == 32   # vertex overflow -> next rung
+    assert srv.bucket_for(10, 65).n_pad == 32   # edge overflow -> next rung
+    with pytest.raises(ValueError):
+        srv.bucket_for(10_000, 5)               # beyond the ladder
+
+
+def test_custom_bucket_ladder():
+    cfg = TopoServeConfig(buckets=(Bucket(8, 16, 16), Bucket(24, 96, 128)))
+    srv = TopoServe(cfg)
+    assert srv.bucket_for(8, 16).n_pad == 8
+    assert srv.bucket_for(9, 4).n_pad == 24
+
+
+# --------------------------------------------------------------- plan cache
+
+def test_plan_cache_hit_miss():
+    clear_plan_cache()
+    p1 = make_topo_plan(dim=1, method="prunit", edge_cap=64, tri_cap=96)
+    info = plan_cache_info()
+    assert (info["hits"], info["misses"]) == (0, 1)
+    p2 = make_topo_plan(dim=1, method="prunit", edge_cap=64, tri_cap=96)
+    assert p2 is p1  # identical key -> same compiled plan object
+    assert plan_cache_info()["hits"] == 1
+    p3 = make_topo_plan(dim=1, method="prunit", edge_cap=128, tri_cap=96)
+    assert p3 is not p1
+    assert plan_cache_info()["misses"] == 2
+
+
+def test_serve_reuses_plans_across_drains():
+    clear_plan_cache()
+    srv = TopoServe(TopoServeConfig(method="prunit"))
+    q = _graph_query(nx.cycle_graph(6))
+    srv.submit(edges=q[0], n_vertices=q[1])
+    srv.drain()
+    misses_after_first = plan_cache_info()["misses"]
+    srv.submit(edges=q[0], n_vertices=q[1])
+    srv.drain()
+    info = plan_cache_info()
+    assert info["misses"] == misses_after_first  # second drain: cache hit
+    assert info["hits"] >= 1
+
+
+# -------------------------------------------------------------------- serve
+
+def test_served_equals_direct_single_bucket():
+    srv = TopoServe(TopoServeConfig(method="prunit", record_batches=True))
+    graphs = [nx.cycle_graph(6), nx.petersen_graph(),
+              nx.barabasi_albert_graph(12, 2, seed=3)]
+    futs = [srv.submit(*_graph_query(g)) for g in graphs]
+    assert srv.drain() == len(graphs)
+    (bucket, reqs, bfuts), = srv.executed_batches
+    direct = topological_signature(
+        pack_requests(reqs, bucket), dim=srv.config.dim,
+        method=srv.config.method, sublevel=srv.config.sublevel,
+        edge_cap=bucket.edge_cap, tri_cap=bucket.tri_cap,
+    )
+    for i, fut in enumerate(bfuts):
+        assert _rows_equal(fut.result(), jax.tree.map(lambda x: x[i], direct))
+
+
+def test_served_equals_direct_across_buckets_and_padding():
+    # odd request count + pad_batch_to forces padded rows; mixed sizes force
+    # multiple buckets; served rows must still match the direct computation
+    srv = TopoServe(TopoServeConfig(method="prunit", pad_batch_to=4,
+                                    record_batches=True))
+    graphs = [nx.cycle_graph(5), nx.complete_graph(7),
+              nx.gnp_random_graph(20, 0.2, seed=1),
+              nx.gnp_random_graph(40, 0.1, seed=2),
+              nx.path_graph(3)]
+    futs = [srv.submit(*_graph_query(g)) for g in graphs]
+    assert srv.drain() == len(graphs)
+    assert len({f.bucket for f in futs}) >= 2
+    for bucket, reqs, bfuts in srv.executed_batches:
+        direct = topological_signature(
+            pack_requests(reqs, bucket), dim=srv.config.dim,
+            method=srv.config.method, sublevel=srv.config.sublevel,
+            edge_cap=bucket.edge_cap, tri_cap=bucket.tri_cap,
+        )
+        for i, fut in enumerate(bfuts):
+            assert _rows_equal(fut.result(), jax.tree.map(lambda x: x[i], direct))
+
+
+def test_served_diagram_values():
+    srv = TopoServe(TopoServeConfig(method="none"))
+    fut_c6 = srv.submit(*_graph_query(nx.cycle_graph(6)))
+    fut_k5 = srv.submit(*_graph_query(nx.complete_graph(5)))
+    srv.drain()
+    assert int(fut_c6.result().betti(0)) == 1
+    assert int(fut_c6.result().betti(1)) == 1
+    assert int(fut_k5.result().betti(1)) == 0
+
+
+def test_background_serve_forever_thread():
+    srv = TopoServe(TopoServeConfig(method="prunit"))
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    try:
+        futs = [srv.submit(*_graph_query(nx.cycle_graph(4 + i)))
+                for i in range(5)]
+        results = [f.result(timeout=120) for f in futs]
+        assert all(int(d.betti(1)) == 1 for d in results)
+    finally:
+        srv.stop()
+        t.join(timeout=10)
+    assert not t.is_alive()
+    assert srv.stats["served"] >= 5
+
+
+def test_oversize_request_rejected_at_submit():
+    srv = TopoServe()
+    with pytest.raises(ValueError):
+        srv.submit(edges=[(i, i + 1) for i in range(200)], n_vertices=201)
+
+
+def test_malformed_requests_rejected_at_submit():
+    # rejected at ingress so they can never fail co-batched futures at drain
+    srv = TopoServe()
+    with pytest.raises(ValueError, match="out of range"):
+        srv.submit(edges=[(0, 500)], n_vertices=5)
+    with pytest.raises(ValueError, match="out of range"):
+        srv.submit(edges=[(-1, 0)], n_vertices=5)
+    with pytest.raises(ValueError, match="f has"):
+        srv.submit(edges=[(0, 1)], n_vertices=3, f=[1.0])
+    with pytest.raises(ValueError, match="n_vertices"):
+        srv.submit(edges=[], n_vertices=0)
+
+
+def test_duplicate_edges_degree_invariant_under_cobatching():
+    # a request with duplicate/bidirectional edge entries and f=None must get
+    # the same diagram whether co-batched with f-carrying requests (per-
+    # request _degree_f path) or not (from_edge_lists vectorized path)
+    dup_edges = [(0, 1), (1, 0), (1, 2), (1, 2), (2, 0)]
+
+    srv_alone = TopoServe(TopoServeConfig(method="none"))
+    fut_alone = srv_alone.submit(edges=dup_edges, n_vertices=3)
+    srv_alone.drain()
+
+    srv_mixed = TopoServe(TopoServeConfig(method="none"))
+    fut_mixed = srv_mixed.submit(edges=dup_edges, n_vertices=3)
+    srv_mixed.submit(edges=[(0, 1)], n_vertices=2, f=[5.0, 7.0])
+    srv_mixed.drain()
+
+    assert _rows_equal(fut_alone.result(), fut_mixed.result())
+
+
+def test_mesh_pad_rounds_up_to_mesh_multiple():
+    class _FakeDevices:
+        size = 4
+
+    class _FakeMesh:
+        devices = _FakeDevices()
+
+    srv = TopoServe(TopoServeConfig(pad_batch_to=6), mesh=_FakeMesh())
+    assert srv._pad_batch_to == 8  # next multiple of the 4-device mesh
+    srv2 = TopoServe(TopoServeConfig(pad_batch_to=1), mesh=_FakeMesh())
+    assert srv2._pad_batch_to == 4
+
+
+def test_signature_features_matches_feature_vector():
+    from repro.topo.features import feature_vector, signature_features
+    import numpy as np
+
+    plan = make_topo_plan(dim=1, method="prunit", edge_cap=64, tri_cap=96)
+    g = pack_requests(
+        [srv_req for srv_req in _requests([nx.cycle_graph(6),
+                                           nx.petersen_graph()])],
+        Bucket(16, 64, 96))
+    direct = feature_vector(plan.execute(g), max_dim=plan.dim, res=4)
+    shared = signature_features(g, plan, res=4)
+    assert np.array_equal(np.asarray(direct), np.asarray(shared))
+
+
+def _requests(graphs):
+    from repro.serve.topo_serve import TopoRequest
+
+    out = []
+    for g in graphs:
+        edges, n = _graph_query(g)
+        out.append(TopoRequest(edges=tuple(edges), n_vertices=n))
+    return out
+
+
+def test_triangle_dense_graph_promoted_past_tri_cap():
+    # K13: 78 edges fit the n32 rung (edge_cap 160) but its 286 triangles
+    # exceed tri_cap 256 -> must promote to n64 so the diagrams stay exact
+    srv = TopoServe(TopoServeConfig(method="none"))
+    fut = srv.submit(*_graph_query(nx.complete_graph(13)))
+    assert fut.bucket.n_pad == 64 and fut.bucket.tri_cap >= 286
+    srv.drain()
+    d = fut.result()
+    assert int(d.betti(0)) == 1 and int(d.betti(1)) == 0  # K13 contractible
+
+
+def test_failed_batch_resolves_futures_with_error():
+    # an unexecutable bucket config must fail the future, not hang result()
+    srv = TopoServe(TopoServeConfig(method="nonsense"))  # invalid reduction
+    fut = srv.submit(*_graph_query(nx.cycle_graph(4)))
+    assert srv.drain() == 0
+    assert fut.done()
+    with pytest.raises(ValueError):
+        fut.result(timeout=1)
