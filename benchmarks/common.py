@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: timing, CSV rows, dataset sampling."""
+"""Shared benchmark utilities: timing, CSV rows, JSON suite reports."""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import jax
@@ -21,10 +24,15 @@ def timed(fn, *args, repeats: int = 3, **kwargs):
 
 
 class Report:
-    """Collects (benchmark, metric, value) rows; prints CSV at the end."""
+    """Collects (benchmark, metric, value) rows; prints CSV at the end.
 
-    def __init__(self):
+    ``quick`` mirrors the runner's --quick flag so suites that were not
+    updated to take a ``quick=`` kwarg can still read ``report.quick``.
+    """
+
+    def __init__(self, quick: bool = False):
         self.rows: list[tuple[str, str, float]] = []
+        self.quick = quick
 
     def add(self, bench: str, metric: str, value) -> None:
         self.rows.append((bench, metric, float(value)))
@@ -39,3 +47,35 @@ class Report:
 def pct(before, after) -> float:
     before = float(np.maximum(before, 1))
     return 100.0 * (float(before) - float(after)) / before
+
+
+def write_suite_json(out_dir: str, suite: str, description: str,
+                     rows: list[tuple[str, str, float]], wall_s: float,
+                     quick: bool, ok: bool = True) -> str:
+    """Persist one suite's results as ``BENCH_<suite>.json``.
+
+    The machine-readable companion of results/bench.csv: rows plus wall time
+    and environment metadata, so the perf trajectory is trackable across PRs
+    (compare the same suite's JSON from consecutive commits).
+    """
+    path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    payload = {
+        "suite": suite,
+        "description": description,
+        "quick": bool(quick),
+        "ok": bool(ok),
+        "wall_s": round(float(wall_s), 4),
+        "rows": [{"benchmark": b, "metric": m, "value": v}
+                 for (b, m, v) in rows],
+        "meta": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "python": platform.python_version(),
+        },
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

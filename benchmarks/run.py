@@ -2,16 +2,21 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only fig4,table1] [--quick]
 
-Writes results/bench.csv and prints per-row CSV as it goes.
+Writes results/bench.csv plus a machine-readable ``BENCH_<suite>.json`` per
+executed suite (rows + wall time + environment metadata — the cross-PR perf
+trajectory), and prints per-row CSV as it goes.  ``--quick`` shrinks each
+suite to a CI/CPU smoke size: suites whose ``run`` accepts a ``quick=``
+kwarg get it directly; the rest can read ``report.quick``.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import os
 import time
 import traceback
 
-from benchmarks.common import Report
+from benchmarks.common import Report, write_suite_json
 
 SUITES = {
     "fig4": ("benchmarks.fig4_coral_reduction", "CoralTDA vertex reduction (Fig 4)"),
@@ -24,34 +29,55 @@ SUITES = {
     "fig2": ("benchmarks.fig2_clustering", "clustering coeff vs higher PDs (Fig 2/10)"),
     "kernels": ("benchmarks.kernel_bench", "Pallas kernel microbenchmarks"),
     "serve": ("benchmarks.serve_bench", "TopoServe throughput/latency + parity"),
+    "stream": ("benchmarks.stream_bench", "TopoStream updates/s + skip-rate + parity"),
 }
+
+
+def _call_suite(mod, report: Report, quick: bool) -> None:
+    """Invoke ``mod.run`` threading --quick through to suites that take it."""
+    if "quick" in inspect.signature(mod.run).parameters:
+        mod.run(report, quick=quick)
+    else:
+        mod.run(report)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite keys (default: all)")
+    ap.add_argument("--quick", action="store_true",
+                    help="small suite sizes (CI / CPU smoke)")
     ap.add_argument("--out", default="results/bench.csv")
     args = ap.parse_args()
 
     keys = args.only.split(",") if args.only else list(SUITES)
-    report = Report()
+    unknown = [k for k in keys if k not in SUITES]
+    if unknown:
+        raise SystemExit(f"unknown suites {unknown}; known: {list(SUITES)}")
+    out_dir = os.path.dirname(args.out) or "."
+    report = Report(quick=args.quick)
     failures = []
     for k in keys:
         mod_name, desc = SUITES[k]
         print(f"[bench] {k}: {desc}", flush=True)
+        row_start = len(report.rows)
         t0 = time.time()
+        ok = True
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            mod.run(report)
+            _call_suite(mod, report, args.quick)
             print(f"[bench] {k} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures.append(k)
+            ok = False
             traceback.print_exc()
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        write_suite_json(out_dir, k, desc, report.rows[row_start:],
+                         wall_s=time.time() - t0, quick=args.quick, ok=ok)
+    os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         f.write(report.csv() + "\n")
-    print(f"\nwrote {args.out} ({len(report.rows)} rows)")
+    print(f"\nwrote {args.out} ({len(report.rows)} rows) "
+          f"+ BENCH_<suite>.json per suite")
     if failures:
         raise SystemExit(f"failed suites: {failures}")
 

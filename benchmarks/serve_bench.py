@@ -61,6 +61,11 @@ def run(report: Report, quick: bool = False) -> None:
     for f in warm:
         f.result()
     server.executed_batches.clear()
+    # report deltas over the timed region only: server.stats accumulates the
+    # warmup drain, and the plan cache is process-cumulative (other suites
+    # compile through it under `-m benchmarks.run`)
+    batches_before = server.stats["batches"]
+    cache_before = plan_cache_info()
 
     t0 = time.perf_counter()
     futs = [server.submit(edges=e, n_vertices=n) for (e, n) in queries]
@@ -78,10 +83,12 @@ def run(report: Report, quick: bool = False) -> None:
         report.add(tag, "graphs", len(bfuts))
         report.add(tag, "latency_p50_ms", np.percentile(lat, 50))
         report.add(tag, "latency_p99_ms", np.percentile(lat, 99))
-    report.add("serve", "batches", server.stats["batches"])
+    report.add("serve", "batches", server.stats["batches"] - batches_before)
     info = plan_cache_info()
-    report.add("serve", "plan_cache_hits", info["hits"])
-    report.add("serve", "plan_cache_misses", info["misses"])
+    report.add("serve", "plan_cache_hits",
+               info["hits"] - cache_before["hits"])
+    report.add("serve", "plan_cache_misses",
+               info["misses"] - cache_before["misses"])
 
     # ---- parity: replay the exact executed batches through the direct API
     import jax

@@ -1,0 +1,69 @@
+"""TopoStream demo: monitoring persistence diagrams of a dynamic network.
+
+Replays a temporal ego-net edge-decay stream (satellite edges dropping and
+recovering around a dense core) through a stateful TopoStream session, and
+shows the reduction-aware invalidation check answering most ticks from cache:
+Theorem 2 says updates outside the (dim+1)-core cannot move PD_dim, and
+Theorem 7 says updates confined to dominated vertices cannot move anything —
+so the expensive boundary-matrix reduction only runs when a core edge
+actually changes.
+
+  PYTHONPATH=src python examples/stream_updates.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.core.delta import delta_step
+from repro.data.temporal import ego_decay_stream
+from repro.serve import StreamServe
+from repro.stream import TopoStream, TopoStreamConfig
+
+
+def main():
+    key = jax.random.PRNGKey(42)
+    batch, steps = 8, 60
+    g0, deltas = ego_decay_stream(key, batch=batch, n_pad=32, n_core=10,
+                                  n_double=6, n_pendant=6, steps=steps,
+                                  toggles=1, p_core_edge=0.15)
+    cfg = TopoStreamConfig(dim=1, method="both", edge_cap=192, tri_cap=512)
+
+    # ---- direct session -------------------------------------------------
+    stream = TopoStream(g0, cfg)
+    print(f"watching PD_1 of {batch} dynamic ego nets "
+          f"({int(np.asarray(g0.n_vertices())[0])} vertices each), "
+          f"{steps} update ticks\n")
+    t0 = time.perf_counter()
+    for t in range(steps):
+        stream.apply(delta_step(deltas, t))
+        if (t + 1) % 20 == 0:
+            s = stream.stats
+            print(f"  tick {t+1:3d}: {s['graph_updates']:4d} updates | "
+                  f"{s['hits']} cached ({s['coral_hits']} coral, "
+                  f"{s['prunit_hits']} prunit) | {s['recomputes']} recomputed")
+    wall = time.perf_counter() - t0
+    s = stream.stats
+    print(f"\n{s['graph_updates']} graph updates in {wall:.2f}s "
+          f"({s['graph_updates']/wall:.0f} updates/s)")
+    print(f"skip-rate {stream.skip_rate():.1%} — the theorems proved "
+          f"{s['hits']} of {s['graph_updates']} recomputes unnecessary; "
+          f"only {s['recomputed_rows']} padded rows re-executed")
+
+    # ---- same stream through the serving layer --------------------------
+    server = StreamServe(cfg)
+    sid = server.create_session(g0)
+    futs = [server.submit(sid, delta_step(deltas, t)) for t in range(steps)]
+    server.drain()
+    futs[-1].result()
+    print(f"\nStreamServe session {sid}: {server.session_stats(sid)}")
+    # the invalidation boundary: PD_1 only sees the 2-core, and here it stays
+    # small while satellites churn around it — that asymmetry IS the skip-rate
+    core_sizes = np.asarray((stream.coreness() >= cfg.dim + 1).sum(-1))
+    live = np.asarray(stream.graph.n_vertices())
+    print(f"2-core sizes {core_sizes.tolist()} of {live.tolist()} live "
+          f"vertices — updates outside never trigger a recompute")
+
+
+if __name__ == "__main__":
+    main()

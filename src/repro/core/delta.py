@@ -1,0 +1,248 @@
+r"""Batched graph-update representation for dynamic-network streams.
+
+A ``DeltaBatch`` carries, for every graph in a :class:`~repro.core.graph.
+GraphBatch`, a fixed number of *slots* of three update kinds:
+
+* **edge ops** — insert / delete an undirected edge ``{u, v}``;
+* **f ops** — overwrite the vertex filtration value ``f(w)``;
+* **vertex drops** — deactivate a vertex (mask off; incident edges die).
+
+Slots are static-capacity (padded with ``-1`` / ``EDGE_NOP``) so a whole
+update stream is one stacked pytree and ``apply_delta`` is a single jitted
+scatter program — the same dense-masked-linear-algebra philosophy as the rest
+of the core (DESIGN.md §3).  Temporal generators (repro/data/temporal.py)
+emit DeltaBatches with a leading time axis; ``delta_step`` slices one step.
+
+Semantics (all enforced by ``apply_delta``; ``canonicalize_delta`` restores
+the slot-level invariants from raw arrays):
+
+* edges are undirected — ops are canonicalized to ``u < v`` and applied
+  symmetrically; self loops and out-of-range endpoints are dropped;
+* a delete beats an insert of the same edge within one DeltaBatch;
+* inserting an edge **activates** both endpoints (grows the graph into
+  padding slots); a newly activated vertex with no f op gets ``f = 0``;
+* vertex drops beat everything touching the dropped vertex;
+* f is explicit stream state (paper Remark 1: the filtration is *not*
+  recomputed on the updated graph) — degree-filtration users must ship f ops
+  alongside their edge ops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import GraphBatch, canonicalize
+
+EDGE_NOP = 0
+EDGE_INSERT = 1
+EDGE_DELETE = 2
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeltaBatch:
+    """One batched update step (or a stacked (T, ...) stream of steps).
+
+    edge_u/edge_v: (B, E) int32 endpoints, ``-1`` for unused slots.
+    edge_op:       (B, E) int32 in {EDGE_NOP, EDGE_INSERT, EDGE_DELETE}.
+    f_vertex:      (B, F) int32 vertex ids (``-1`` unused).
+    f_value:       (B, F) float32 new filtration values.
+    drop_vertex:   (B, D) int32 vertex ids to deactivate (``-1`` unused).
+    """
+
+    edge_u: jax.Array
+    edge_v: jax.Array
+    edge_op: jax.Array
+    f_vertex: jax.Array
+    f_value: jax.Array
+    drop_vertex: jax.Array
+
+    @property
+    def batch(self) -> int:
+        return self.edge_u.shape[-2]
+
+    @property
+    def edge_slots(self) -> int:
+        return self.edge_u.shape[-1]
+
+    @property
+    def f_slots(self) -> int:
+        return self.f_vertex.shape[-1]
+
+    @property
+    def drop_slots(self) -> int:
+        return self.drop_vertex.shape[-1]
+
+    @property
+    def steps(self) -> int:
+        """Leading time axis length for stacked streams (1 for a single step)."""
+        return self.edge_u.shape[0] if self.edge_u.ndim == 3 else 1
+
+
+def delta_step(d: DeltaBatch, t: int) -> DeltaBatch:
+    """Slice step ``t`` out of a stacked (T, B, ...) DeltaBatch stream."""
+    return jax.tree.map(lambda x: x[t], d)
+
+
+def empty_delta(batch: int, edge_slots: int = 0, f_slots: int = 0,
+                drop_slots: int = 0) -> DeltaBatch:
+    """An all-padding DeltaBatch (useful as a scan carry / test fixture)."""
+    return DeltaBatch(
+        edge_u=jnp.full((batch, edge_slots), -1, jnp.int32),
+        edge_v=jnp.full((batch, edge_slots), -1, jnp.int32),
+        edge_op=jnp.full((batch, edge_slots), EDGE_NOP, jnp.int32),
+        f_vertex=jnp.full((batch, f_slots), -1, jnp.int32),
+        f_value=jnp.zeros((batch, f_slots), jnp.float32),
+        drop_vertex=jnp.full((batch, drop_slots), -1, jnp.int32),
+    )
+
+
+def canonicalize_delta(d: DeltaBatch, n: int) -> DeltaBatch:
+    """Restore slot invariants: u < v, no self loops, in-range ids, -1 pads."""
+    u = jnp.minimum(d.edge_u, d.edge_v)
+    v = jnp.maximum(d.edge_u, d.edge_v)
+    ok = ((u >= 0) & (v < n) & (u != v)
+          & (d.edge_op != EDGE_NOP))
+    op = jnp.where(ok, d.edge_op, EDGE_NOP)
+    u = jnp.where(ok, u, -1)
+    v = jnp.where(ok, v, -1)
+    f_ok = (d.f_vertex >= 0) & (d.f_vertex < n)
+    fv = jnp.where(f_ok, d.f_vertex, -1)
+    dr_ok = (d.drop_vertex >= 0) & (d.drop_vertex < n)
+    dr = jnp.where(dr_ok, d.drop_vertex, -1)
+    return DeltaBatch(edge_u=u.astype(jnp.int32), edge_v=v.astype(jnp.int32),
+                      edge_op=op.astype(jnp.int32),
+                      f_vertex=fv.astype(jnp.int32),
+                      f_value=d.f_value.astype(jnp.float32),
+                      drop_vertex=dr.astype(jnp.int32))
+
+
+def _valid_pairs(n: int, u: jax.Array, v: jax.Array) -> jax.Array:
+    """Slots holding a well-formed undirected edge: in range, no self loop."""
+    return (u >= 0) & (u < n) & (v >= 0) & (v < n) & (u != v)
+
+
+def _scatter_pairs(b: int, n: int, u: jax.Array, v: jax.Array,
+                   on: jax.Array) -> jax.Array:
+    """(B, N, N) bool with True at (u, v) and (v, u) for slots where ``on``."""
+    # sentinel-out invalid slots so mode="drop" discards them (negative ids
+    # would otherwise wrap under NumPy indexing semantics)
+    uu = jnp.where(on, u, n)
+    vv = jnp.where(on, v, n)
+    bidx = jnp.arange(b)[:, None]
+    m = jnp.zeros((b, n, n), bool)
+    m = m.at[bidx, uu, vv].set(True, mode="drop")
+    return m | jnp.swapaxes(m, -1, -2)
+
+
+def _scatter_vertices(b: int, n: int, ids: jax.Array,
+                      on: jax.Array) -> jax.Array:
+    """(B, N) bool with True at the listed vertex ids where ``on``."""
+    valid = on & (ids >= 0) & (ids < n)
+    vv = jnp.where(valid, ids, n)
+    bidx = jnp.arange(b)[:, None]
+    return jnp.zeros((b, n), bool).at[bidx, vv].set(True, mode="drop")
+
+
+@jax.jit
+def apply_delta(g: GraphBatch, d: DeltaBatch) -> GraphBatch:
+    """Apply one DeltaBatch step to a GraphBatch (pure, jitted).
+
+    Update order (ties documented in the module docstring): edge inserts,
+    edge deletes (delete wins), endpoint activation, f ops, vertex drops
+    (drop wins), then ``canonicalize`` restores every GraphBatch invariant
+    (symmetry, empty diagonal, mask-sentinel adjacency, +inf f padding).
+    """
+    b, n = g.batch, g.n
+    # malformed edge ops (self loops, out-of-range endpoints) are dropped as
+    # a PAIR — they must neither touch adjacency nor activate an endpoint
+    ok = _valid_pairs(n, d.edge_u, d.edge_v)
+    is_ins = ok & (d.edge_op == EDGE_INSERT)
+    is_del = ok & (d.edge_op == EDGE_DELETE)
+    ins = _scatter_pairs(b, n, d.edge_u, d.edge_v, is_ins)
+    dele = _scatter_pairs(b, n, d.edge_u, d.edge_v, is_del)
+    adj = (g.adj | ins) & ~dele
+
+    act = (_scatter_vertices(b, n, d.edge_u, is_ins)
+           | _scatter_vertices(b, n, d.edge_v, is_ins))
+    drop = _scatter_vertices(b, n, d.drop_vertex,
+                             jnp.ones_like(d.drop_vertex, bool))
+    mask = (g.mask | act) & ~drop
+
+    f = g.f
+    if d.f_vertex.shape[-1]:
+        f_on = (d.f_vertex >= 0) & (d.f_vertex < n)
+        fv = jnp.where(f_on, d.f_vertex, n)
+        bidx = jnp.arange(b)[:, None]
+        # duplicate f ops on one vertex: highest slot index wins (matches
+        # delta_from_lists' last-wins dedupe).  A plain .at[].set with
+        # duplicate indices is nondeterministic in JAX; scatter-max of the
+        # slot index followed by a gather is deterministic.
+        slots = jnp.arange(d.f_vertex.shape[-1], dtype=jnp.int32)
+        win = jnp.full((b, n + 1), -1, jnp.int32).at[bidx, fv].max(
+            jnp.where(f_on, slots[None, :], -1))[:, :n]
+        val = jnp.take_along_axis(d.f_value, jnp.clip(win, 0), axis=-1)
+        f = jnp.where(win >= 0, val, f)
+    # newly activated vertices default to f = 0 unless an f op set them
+    newly = mask & ~g.mask
+    f = jnp.where(newly & jnp.isinf(f), 0.0, f)
+    return canonicalize(adj, mask, f)
+
+
+def delta_from_lists(
+    edge_ops: Sequence[Sequence[tuple[int, int, int]]],
+    f_ops: Sequence[Sequence[tuple[int, float]]] | None = None,
+    drops: Sequence[Sequence[int]] | None = None,
+    edge_slots: int | None = None,
+    f_slots: int | None = None,
+    drop_slots: int | None = None,
+) -> DeltaBatch:
+    """Build a single-step DeltaBatch from python lists (host-side helper).
+
+    edge_ops[i] is a list of ``(u, v, op)`` with op in {EDGE_INSERT,
+    EDGE_DELETE} (or the strings "insert"/"delete"); duplicate ops on the
+    same canonical edge keep the *last* occurrence (last-wins dedupe).
+    """
+    b = len(edge_ops)
+    f_ops = f_ops if f_ops is not None else [[] for _ in range(b)]
+    drops = drops if drops is not None else [[] for _ in range(b)]
+    ops_named = {"insert": EDGE_INSERT, "delete": EDGE_DELETE}
+
+    deduped: list[list[tuple[int, int, int]]] = []
+    for ops in edge_ops:
+        seen: dict[tuple[int, int], int] = {}
+        for (u, v, op) in ops:
+            op = ops_named.get(op, op)
+            if u == v:
+                continue
+            seen[(min(u, v), max(u, v))] = int(op)
+        deduped.append([(u, v, op) for (u, v), op in seen.items()])
+    f_deduped = [list(dict(fo).items()) for fo in f_ops]
+
+    e_cap = edge_slots if edge_slots is not None else max(
+        [len(x) for x in deduped] + [0])
+    f_cap = f_slots if f_slots is not None else max(
+        [len(x) for x in f_deduped] + [0])
+    d_cap = drop_slots if drop_slots is not None else max(
+        [len(x) for x in drops] + [0])
+
+    eu = np.full((b, e_cap), -1, np.int32)
+    ev = np.full((b, e_cap), -1, np.int32)
+    eo = np.full((b, e_cap), EDGE_NOP, np.int32)
+    fv = np.full((b, f_cap), -1, np.int32)
+    fx = np.zeros((b, f_cap), np.float32)
+    dr = np.full((b, d_cap), -1, np.int32)
+    for i in range(b):
+        for j, (u, v, op) in enumerate(deduped[i][:e_cap]):
+            eu[i, j], ev[i, j], eo[i, j] = u, v, op
+        for j, (w, val) in enumerate(f_deduped[i][:f_cap]):
+            fv[i, j], fx[i, j] = w, val
+        for j, w in enumerate(list(drops[i])[:d_cap]):
+            dr[i, j] = w
+    return DeltaBatch(edge_u=jnp.asarray(eu), edge_v=jnp.asarray(ev),
+                      edge_op=jnp.asarray(eo), f_vertex=jnp.asarray(fv),
+                      f_value=jnp.asarray(fx), drop_vertex=jnp.asarray(dr))

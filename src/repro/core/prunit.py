@@ -57,6 +57,25 @@ def domination_matrix(adj: jax.Array, mask: jax.Array) -> jax.Array:
     return dom
 
 
+def eligibility_matrix(adj: jax.Array, mask: jax.Array, f: jax.Array,
+                       sublevel: bool = True,
+                       dom_fn=domination_matrix) -> jax.Array:
+    """(B, N, N) bool E with E[u, v] = "PrunIT may remove u with witness v".
+
+    Theorem 7's full hypothesis: domination (``dom_fn``) plus the filtration
+    condition ``f(u) >= f(v)`` (reversed for superlevel).  Shared by the
+    PrunIT reduction rounds below and TopoStream's invalidation predicate
+    (repro/stream/topo_stream.py) so the eligibility condition lives in
+    exactly one place.
+    """
+    dom = dom_fn(adj, mask)  # dom[u, v]: v dominates u
+    if sublevel:
+        f_ok = f[..., :, None] >= f[..., None, :]  # f(u) >= f(v)
+    else:
+        f_ok = f[..., :, None] <= f[..., None, :]
+    return dom & f_ok
+
+
 def prune_round_mask(
     adj: jax.Array,
     mask: jax.Array,
@@ -65,12 +84,7 @@ def prune_round_mask(
     dom_fn=domination_matrix,
 ) -> jax.Array:
     """One parallel PrunIT round: the mask of vertices that survive."""
-    dom = dom_fn(adj, mask)  # dom[u, v]: v dominates u
-    if sublevel:
-        f_ok = f[..., :, None] >= f[..., None, :]  # f(u) >= f(v)
-    else:
-        f_ok = f[..., :, None] <= f[..., None, :]
-    elig = dom & f_ok  # elig[u, v]
+    elig = eligibility_matrix(adj, mask, f, sublevel, dom_fn)  # elig[u, v]
     elig_t = jnp.swapaxes(elig, -1, -2)  # elig[v, u]
     n = adj.shape[-1]
     idx = jnp.arange(n)

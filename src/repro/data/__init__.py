@@ -1,1 +1,2 @@
-"""Data pipelines: synthetic token streams + graph dataset generators."""
+"""Data pipelines: synthetic token streams, graph dataset generators
+(graphs.py), and temporal-graph update streams (temporal.py)."""

@@ -1,0 +1,277 @@
+"""Synthetic temporal-graph generators: (initial GraphBatch, update stream).
+
+Dynamic-network surrogates for the workloads where recomputing persistence
+from scratch per tick is the bottleneck (Azamir–Bennis–Michel; Aktas et al.
+name temporal networks as the main unserved PH-on-graphs scenario).  Each
+generator returns ``(g0, deltas)`` where ``g0`` is a padded GraphBatch and
+``deltas`` is a stacked :class:`~repro.core.delta.DeltaBatch` with a leading
+time axis — ``delta_step(deltas, t)`` slices step ``t``; feeding the steps to
+``TopoStream.apply`` replays the stream.
+
+Same pure-JAX style as repro/data/graphs.py (PRNGKey in, arrays out, all
+loops are ``lax.scan`` with static trip counts) so streams can be generated
+device-side under jit.
+
+The three families cover the three invalidation regimes of TopoStream:
+
+* ``pa_growth_stream`` — preferential-attachment growth.  With ``m=1`` every
+  arrival is a pendant vertex outside the 2-core: Theorem 2 says PD_1 can
+  never move, so a monitoring stream skips every recompute.
+* ``community_churn_stream`` — edge churn inside planted communities.  Most
+  updates land inside the (dim+1)-core: the recompute-bound regime.
+* ``ego_decay_stream`` — a dense ego-net whose peripheral edges decay and
+  recover.  Satellite updates are provably skippable (coral for pendant
+  satellites, PrunIT for hub-dominated ones); occasional core edges force
+  real recomputes.  This is the paper's §6.2 regime made temporal.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.delta import (
+    EDGE_DELETE,
+    EDGE_INSERT,
+    EDGE_NOP,
+    DeltaBatch,
+    delta_step,
+)
+from repro.core.graph import GraphBatch, canonicalize
+
+__all__ = [
+    "pa_growth_stream",
+    "community_churn_stream",
+    "ego_decay_stream",
+    "delta_step",
+]
+
+
+def _stack_delta(edge_u, edge_v, edge_op, f_vertex=None, f_value=None,
+                 drop_vertex=None) -> DeltaBatch:
+    """Assemble a stacked (T, B, ...) DeltaBatch, filling absent op kinds."""
+    t, b = edge_u.shape[0], edge_u.shape[1]
+    if f_vertex is None:
+        f_vertex = jnp.full((t, b, 0), -1, jnp.int32)
+        f_value = jnp.zeros((t, b, 0), jnp.float32)
+    if drop_vertex is None:
+        drop_vertex = jnp.full((t, b, 0), -1, jnp.int32)
+    return DeltaBatch(edge_u=edge_u.astype(jnp.int32),
+                      edge_v=edge_v.astype(jnp.int32),
+                      edge_op=edge_op.astype(jnp.int32),
+                      f_vertex=f_vertex.astype(jnp.int32),
+                      f_value=f_value.astype(jnp.float32),
+                      drop_vertex=drop_vertex.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# preferential-attachment growth
+# ---------------------------------------------------------------------------
+
+def pa_growth_stream(key, batch: int, n_pad: int, n0: int, m: int,
+                     steps: int) -> tuple[GraphBatch, DeltaBatch]:
+    """Growing network: step t activates vertex ``n0 + t`` with ``m`` edges.
+
+    Attachment targets are degree-weighted among existing vertices (the BA
+    process of data/graphs.py, re-expressed as an update stream).  The
+    filtration is vertex arrival time (``f(v) = v``), the standard temporal
+    filtration, so old vertices never change f.  Requires
+    ``n0 + steps <= n_pad``.
+    """
+    if n0 + steps > n_pad:
+        raise ValueError(f"n0 + steps = {n0 + steps} exceeds n_pad={n_pad}")
+    if n0 < 2:
+        raise ValueError("need n0 >= 2 seed vertices")
+    idx = jnp.arange(n_pad)
+    # seed: complete graph on the first n0 vertices
+    seed_adj = ((idx[None, :] < n0) & (idx[:, None] < n0)
+                & (idx[None, :] != idx[:, None]))
+    adj0 = jnp.broadcast_to(seed_adj, (batch, n_pad, n_pad))
+    mask0 = jnp.broadcast_to(idx < n0, (batch, n_pad))
+    f0 = jnp.where(mask0, idx.astype(jnp.float32), jnp.inf)
+    g0 = canonicalize(adj0, mask0, f0)
+
+    def step(carry, inp):
+        deg = carry  # (B, n_pad) float degree of existing vertices
+        t, k = inp
+        new_id = n0 + t
+        w = (deg + 1.0) * (idx[None, :] < new_id)
+        logits = jnp.log(jnp.maximum(w, 1e-9))
+        tgt = jax.random.categorical(k, logits, axis=-1,
+                                     shape=(m, batch)).T  # (B, m)
+        hot = jax.nn.one_hot(tgt, n_pad, dtype=bool).any(axis=1)  # (B, n_pad)
+        deg = deg + hot.astype(jnp.float32)
+        deg = deg.at[:, new_id].add(hot.sum(-1).astype(jnp.float32))
+        eu = tgt                                       # targets are < new_id
+        ev = jnp.broadcast_to(new_id, (batch, m)).astype(jnp.int32)
+        op = jnp.full((batch, m), EDGE_INSERT, jnp.int32)
+        fv = jnp.broadcast_to(new_id, (batch, 1)).astype(jnp.int32)
+        fx = jnp.broadcast_to(new_id, (batch, 1)).astype(jnp.float32)
+        return deg, (eu, ev, op, fv, fx)
+
+    deg0 = jnp.sum(adj0, -1).astype(jnp.float32)
+    keys = jax.random.split(key, steps)
+    _, (eu, ev, op, fv, fx) = lax.scan(
+        step, deg0, (jnp.arange(steps), keys))
+    return g0, _stack_delta(eu, ev, op, f_vertex=fv, f_value=fx)
+
+
+# ---------------------------------------------------------------------------
+# community churn
+# ---------------------------------------------------------------------------
+
+def community_churn_stream(key, batch: int, n_pad: int, n_vertices,
+                           n_comm: int, p_in: float, p_out: float,
+                           steps: int, churn: int,
+                           in_bias: float = 4.0) -> tuple[GraphBatch, DeltaBatch]:
+    """Planted-partition graph whose edges churn: per step and per graph,
+    ``churn`` uniform-random existing edges are deleted and ``churn``
+    community-biased non-edges are inserted.  f is the community label, so
+    churn only moves adjacency.  Most churn lands inside the (dim+1)-core —
+    the recompute-bound regime for TopoStream.
+    """
+    kc, ke, ks = jax.random.split(key, 3)
+    n_vertices = jnp.broadcast_to(jnp.asarray(n_vertices), (batch,))
+    idx = jnp.arange(n_pad)
+    mask = idx[None, :] < n_vertices[:, None]
+    comm = jax.random.randint(kc, (batch, n_pad), 0, n_comm)
+    same = comm[:, :, None] == comm[:, None, :]
+    p = jnp.where(same, p_in, p_out)
+    u = jax.random.uniform(ke, (batch, n_pad, n_pad))
+    upper = jnp.triu(jnp.ones((n_pad, n_pad), bool), 1)
+    adj0 = (u < p) & upper
+    g0 = canonicalize(adj0, mask, comm.astype(jnp.float32))
+
+    live = mask[:, None, :] & mask[:, :, None]
+    ins_w = jnp.where(same, in_bias, 1.0)
+
+    def pick(k, weights):
+        """(B, churn) flat upper-tri indices sampled prop. to weights."""
+        logits = jnp.log(jnp.maximum(weights, 1e-30)).reshape(batch, -1)
+        return jax.random.categorical(k, logits[:, None, :], axis=-1,
+                                      shape=(batch, churn))
+
+    def step(carry, k):
+        adj = carry  # (B, n_pad, n_pad) bool, upper-tri view via `upper`
+        kd, ki = jax.random.split(k)
+        cur = adj & upper & live
+        flat_del = pick(kd, cur.astype(jnp.float32))
+        non = (~adj) & upper & live
+        flat_ins = pick(ki, non.astype(jnp.float32) * ins_w)
+        du, dv = flat_del // n_pad, flat_del % n_pad
+        iu, iv = flat_ins // n_pad, flat_ins % n_pad
+        # degenerate graphs (no edges / complete): categorical may return an
+        # index with zero weight — mask those ops out
+        bidx = jnp.arange(batch)[:, None]
+        del_ok = cur[bidx, du, dv]
+        ins_ok = non[bidx, iu, iv]
+        eu = jnp.concatenate([jnp.where(del_ok, du, -1),
+                              jnp.where(ins_ok, iu, -1)], axis=-1)
+        ev = jnp.concatenate([jnp.where(del_ok, dv, -1),
+                              jnp.where(ins_ok, iv, -1)], axis=-1)
+        op = jnp.concatenate(
+            [jnp.where(del_ok, EDGE_DELETE, EDGE_NOP),
+             jnp.where(ins_ok, EDGE_INSERT, EDGE_NOP)], axis=-1)
+        sym = lambda mnew: mnew | jnp.swapaxes(mnew, -1, -2)
+        dmat = sym(jnp.zeros_like(adj).at[bidx, du, dv].set(del_ok))
+        imat = sym(jnp.zeros_like(adj).at[bidx, iu, iv].set(ins_ok))
+        return (adj | imat) & ~dmat, (eu, ev, op)
+
+    _, (eu, ev, op) = lax.scan(step, g0.adj, jax.random.split(ks, steps))
+    return g0, _stack_delta(eu, ev, op)
+
+
+# ---------------------------------------------------------------------------
+# ego-net edge decay
+# ---------------------------------------------------------------------------
+
+def ego_decay_stream(key, batch: int, n_pad: int, n_core: int,
+                     n_double: int, n_pendant: int, steps: int,
+                     toggles: int = 1, p_core_edge: float = 0.15,
+                     p_er: float = 0.5) -> tuple[GraphBatch, DeltaBatch]:
+    """Dense ego net with decaying/recovering peripheral edges.
+
+    Layout per graph (f in parentheses):
+
+    * hub 0 (0.0) — adjacent to every live vertex;
+    * hub 1 (0.0) — adjacent to hub 0, the core, and the double satellites;
+    * core ``2..n_core-1`` (1.0) — ER(p_er) among themselves;
+    * double satellites (2.0) — attached to hubs 0 and 1; toggling their
+      hub-1 edge is a **PrunIT hit** (hub 0 dominates both endpoints and is
+      never touched), exact in every dimension;
+    * pendant satellites (2.0) — attached to hub 0 only; toggling that edge
+      is a **coral hit** for dim >= 1 (the satellite never enters the
+      2-core) but genuinely changes PD_0.
+
+    Each step toggles ``toggles`` random satellite edges per graph and, with
+    probability ``p_core_edge``, one random core–core edge (both endpoints in
+    the 2-core ⟹ a real recompute).
+    """
+    n_live = n_core + n_double + n_pendant
+    if n_live > n_pad:
+        raise ValueError(f"{n_live} live vertices exceed n_pad={n_pad}")
+    if n_core < 4:
+        raise ValueError("need n_core >= 4 (2 hubs + >= 2 core vertices)")
+    k_er, k_tog = jax.random.split(key)
+    idx = jnp.arange(n_pad)
+    live = idx < n_live
+    corev = (idx >= 2) & (idx < n_core)
+    dbl = (idx >= n_core) & (idx < n_core + n_double)
+
+    u = jax.random.uniform(k_er, (batch, n_pad, n_pad))
+    er = (u < p_er) & corev[None, :, None] & corev[None, None, :]
+    hub0 = (idx == 0)[:, None] & live[None, :]
+    hub1_row = corev | dbl | (idx == 0)
+    hub1 = (idx == 1)[:, None] & hub1_row[None, :]
+    adj0 = er | hub0[None] | hub1[None]
+    mask0 = jnp.broadcast_to(live, (batch, n_pad))
+    f0 = jnp.where(idx < 2, 0.0, jnp.where(idx < n_core, 1.0, 2.0))
+    f0 = jnp.where(live, f0, jnp.inf)
+    g0 = canonicalize(adj0, mask0, jnp.broadcast_to(f0, (batch, n_pad)))
+
+    n_sat = n_double + n_pendant
+    # toggled satellite edge s: (hub, sat_id) with hub 1 for doubles, 0 for
+    # pendants; presence tracked through the scan
+    sat_ids = n_core + jnp.arange(n_sat)
+    sat_hub = jnp.where(jnp.arange(n_sat) < n_double, 1, 0)
+    # core–core candidate pairs (i < j among core vertices)
+    ci, cj = jnp.meshgrid(jnp.arange(2, n_core), jnp.arange(2, n_core),
+                          indexing="ij")
+    cu, cv = ci.reshape(-1), cj.reshape(-1)
+    csel = cu < cv
+    cu, cv = cu[csel], cv[csel]
+    n_cand = cu.shape[0]
+
+    def step(carry, k):
+        sat_on, core_on = carry  # (B, n_sat) bool, (B, n_cand) bool
+        ks, kc, kg = jax.random.split(k, 3)
+        pick = jax.random.randint(ks, (batch, toggles), 0, n_sat)
+        hot = jax.nn.one_hot(pick, n_sat, dtype=bool).any(axis=1)  # (B,n_sat)
+        present = jnp.take_along_axis(sat_on, pick, axis=-1)
+        s_eu = jnp.take(sat_hub, pick)
+        s_ev = jnp.take(sat_ids, pick)
+        s_op = jnp.where(present, EDGE_DELETE, EDGE_INSERT)
+        sat_on = sat_on ^ hot
+
+        gate = jax.random.uniform(kg, (batch,)) < p_core_edge
+        cpick = jax.random.randint(kc, (batch, 1), 0, n_cand)
+        c_present = jnp.take_along_axis(core_on, cpick, axis=-1)
+        c_eu = jnp.where(gate[:, None], jnp.take(cu, cpick), -1)
+        c_ev = jnp.where(gate[:, None], jnp.take(cv, cpick), -1)
+        c_op = jnp.where(gate[:, None],
+                         jnp.where(c_present, EDGE_DELETE, EDGE_INSERT),
+                         EDGE_NOP)
+        chot = (jax.nn.one_hot(cpick[:, 0], n_cand, dtype=bool)
+                & gate[:, None])
+        core_on = core_on ^ chot
+
+        eu = jnp.concatenate([s_eu, c_eu], axis=-1)
+        ev = jnp.concatenate([s_ev, c_ev], axis=-1)
+        op = jnp.concatenate([s_op, c_op], axis=-1)
+        return (sat_on, core_on), (eu, ev, op)
+
+    sat_on0 = jnp.ones((batch, n_sat), bool)
+    core_on0 = g0.adj[:, cu, cv]
+    _, (eu, ev, op) = lax.scan(step, (sat_on0, core_on0),
+                               jax.random.split(k_tog, steps))
+    return g0, _stack_delta(eu, ev, op)

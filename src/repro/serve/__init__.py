@@ -1,5 +1,8 @@
-"""Serving substrate: LM prefill/decode steps (serve_step) and the TopoServe
-batched persistence-diagram scheduler (topo_serve) — see docs/ARCHITECTURE.md."""
+"""Serving substrate: LM prefill/decode steps (serve_step), the TopoServe
+batched persistence-diagram scheduler (topo_serve), and the StreamServe
+stateful dynamic-graph session layer (stream_serve) — see
+docs/ARCHITECTURE.md."""
+from repro.serve.stream_serve import StreamFuture, StreamServe
 from repro.serve.topo_serve import (
     DEFAULT_BUCKETS,
     Bucket,
@@ -13,6 +16,8 @@ from repro.serve.topo_serve import (
 __all__ = [
     "Bucket",
     "DEFAULT_BUCKETS",
+    "StreamFuture",
+    "StreamServe",
     "TopoFuture",
     "TopoRequest",
     "TopoServe",

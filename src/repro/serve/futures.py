@@ -1,0 +1,58 @@
+"""Shared future plumbing for the serving layers.
+
+``TopoFuture`` (stateless batch serving) and ``StreamFuture`` (stateful
+sessions) resolve through the same thread-safe event/value/error mechanics;
+this base class keeps that behavior in one place so fixes cannot silently
+diverge between the two.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+
+class ServeFuture:
+    """Thread-safe one-shot future resolved by a later ``drain()``.
+
+    ``result()`` blocks until a drain — possibly on another thread — fulfils
+    it; async callers can ``await asyncio.to_thread(fut.result)`` or poll
+    ``done()``.
+    """
+
+    __slots__ = ("_event", "_value", "_error", "submitted_at", "resolved_at")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+        self.submitted_at = time.perf_counter()
+        self.resolved_at: Optional[float] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"{type(self).__name__} not resolved within timeout "
+                "(is a drain loop running?)")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def latency_s(self) -> float:
+        """submit->resolve wall time; valid once done()."""
+        if self.resolved_at is None:
+            raise RuntimeError("future not resolved yet")
+        return self.resolved_at - self.submitted_at
+
+    def _resolve(self, value) -> None:
+        self._value = value
+        self.resolved_at = time.perf_counter()
+        self._event.set()
+
+    def _fail(self, err: BaseException) -> None:
+        self._error = err
+        self.resolved_at = time.perf_counter()
+        self._event.set()

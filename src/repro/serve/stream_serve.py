@@ -1,0 +1,241 @@
+"""StreamServe: stateful TopoStream sessions behind a TopoServe-style API.
+
+TopoServe (topo_serve.py) serves stateless one-shot queries; StreamServe
+gives the serving layer *sessions*: a client registers a GraphBatch once,
+then keeps submitting :class:`~repro.core.delta.DeltaBatch` updates to its
+session id.  ``drain()`` applies each session's queued updates in submission
+order through its :class:`~repro.stream.TopoStream` — so most ticks are
+answered from cache by the reduction-aware invalidation check — and resolves
+the futures with the fresh-or-cached diagrams plus that step's
+hit/miss/recompute verdict.
+
+Same sync-first design as TopoServe: ``submit``/``drain`` under one lock,
+``serve_forever`` for a dedicated drain thread.  The counter surface
+(``stats()``, ``session_stats(sid)``) exposes cumulative hits, coral/prunit
+hit split, recomputes and skip rate, per session and aggregated.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Optional
+
+from repro.core.delta import DeltaBatch
+from repro.core.graph import GraphBatch
+from repro.core.persistence_jax import Diagrams
+from repro.serve.futures import ServeFuture
+from repro.stream.topo_stream import TopoStream, TopoStreamConfig
+
+
+class StreamFuture(ServeFuture):
+    """Handle for one submitted update step; resolved by a later drain.
+
+    ``result()`` returns the session's maintained Diagrams as of this step;
+    ``info`` (available once done) is that step's verdict summary:
+    ``{"graph_updates", "hits", "coral_hits", "prunit_hits", "recomputes"}``.
+    Thread-safe plumbing lives in ``ServeFuture``.
+    """
+
+    __slots__ = ("info", "session_id")
+
+    def __init__(self, session_id: str):
+        super().__init__()
+        self.info: Optional[dict] = None
+        self.session_id = session_id
+
+    def _resolve(self, value: Diagrams, info: dict) -> None:  # type: ignore[override]
+        self.info = info
+        super()._resolve(value)
+
+
+class _Session:
+    __slots__ = ("sid", "stream", "queue", "apply_lock")
+
+    def __init__(self, sid: str, stream: TopoStream):
+        self.sid = sid
+        self.stream = stream
+        self.queue: deque = deque()
+        # serializes appliers: TopoStream is stateful, so concurrent drains
+        # (serve_forever thread + a manual drain) must not interleave a
+        # session's steps
+        self.apply_lock = threading.Lock()
+
+
+class StreamServe:
+    """Session manager: one TopoStream per session id, drained like a server.
+
+    >>> server = StreamServe()
+    >>> sid = server.create_session(g0)
+    >>> fut = server.submit(sid, delta)
+    >>> server.drain()
+    1
+    >>> diagrams, verdict = fut.result(), fut.info
+    """
+
+    def __init__(self, config: TopoStreamConfig | None = None):
+        self.config = config or TopoStreamConfig()
+        self._lock = threading.Lock()
+        self._sessions: dict[str, _Session] = {}
+        self._next_id = 0
+        self._stopped = threading.Event()
+        self._closed_stats = {k: 0 for k in
+                              ("graph_updates", "hits", "coral_hits",
+                               "prunit_hits", "recomputes")}
+        self._n_closed = 0
+
+    # ----------------------------------------------------------- sessions
+
+    def create_session(self, g: GraphBatch,
+                       config: TopoStreamConfig | None = None) -> str:
+        """Register a GraphBatch; computes its initial diagrams eagerly."""
+        stream = TopoStream(g, config or self.config)
+        with self._lock:
+            sid = f"s{self._next_id}"
+            self._next_id += 1
+            self._sessions[sid] = _Session(sid, stream)
+        return sid
+
+    def close_session(self, sid: str) -> dict:
+        """Drop a session; returns its final stats.  Pending futures fail.
+
+        Takes the session's apply lock so an in-flight drain finishes its
+        current items first; queue hand-off happens under the global lock so
+        a future is failed by close XOR resolved by a drain, never both.
+        """
+        with self._lock:
+            sess = self._sessions.pop(sid, None)
+        if sess is None:
+            raise KeyError(f"unknown session {sid!r}")
+        with sess.apply_lock:
+            with self._lock:
+                pending = list(sess.queue)
+                sess.queue.clear()
+            for (_, fut) in pending:
+                fut._fail(RuntimeError(f"session {sid} closed before drain"))
+            with self._lock:
+                for k in self._closed_stats:
+                    self._closed_stats[k] += sess.stream.stats[k]
+                self._n_closed += 1
+            return dict(sess.stream.stats)
+
+    def diagrams(self, sid: str) -> Diagrams:
+        """Current maintained diagrams of a session (no queue interaction)."""
+        return self._session(sid).stream.diagrams
+
+    def graph(self, sid: str) -> GraphBatch:
+        return self._session(sid).stream.graph
+
+    def _session(self, sid: str) -> _Session:
+        with self._lock:
+            sess = self._sessions.get(sid)
+        if sess is None:
+            raise KeyError(f"unknown session {sid!r}")
+        return sess
+
+    # ------------------------------------------------------------- ingest
+
+    def submit(self, sid: str, delta: DeltaBatch) -> StreamFuture:
+        """Enqueue one update step for a session (FIFO per session)."""
+        sess = self._session(sid)
+        if delta.edge_u.ndim != 2:
+            raise ValueError(
+                "submit() takes one update step (leaves shaped (B, slots)); "
+                "slice stacked streams with repro.core.delta.delta_step")
+        if delta.batch != sess.stream.graph.batch:
+            raise ValueError(
+                f"delta batch {delta.batch} != session batch "
+                f"{sess.stream.graph.batch}")
+        fut = StreamFuture(sid)
+        with self._lock:
+            # re-check under the lock: a concurrent close_session may have
+            # popped the session after _session() returned it — appending to
+            # the dead queue would orphan the future (never failed, never
+            # resolved)
+            if self._sessions.get(sid) is not sess:
+                raise KeyError(f"session {sid!r} closed")
+            sess.queue.append((delta, fut))
+        return fut
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(s.queue) for s in self._sessions.values())
+
+    # -------------------------------------------------------------- drain
+
+    def drain(self) -> int:
+        """Apply every queued update, session by session, in FIFO order.
+
+        Returns the number of update steps applied.  A failing step fails
+        its own future and every later future of the same session (their
+        base state is gone), then the session queue is cleared.
+        """
+        applied = 0
+        while True:
+            with self._lock:
+                # snapshot so one hot session cannot starve the others: each
+                # pass gives every queued session one turn
+                queued = [s for s in self._sessions.values() if s.queue]
+            if not queued:
+                return applied
+            for sess in queued:
+                # take the apply lock BEFORE popping: a concurrent drain of
+                # the same session blocks here, then pops strictly later
+                # items, so per-session FIFO order survives concurrent drains
+                with sess.apply_lock:
+                    with self._lock:
+                        items = list(sess.queue)
+                        sess.queue.clear()
+                    applied += self._apply_items(sess, items)
+
+    def _apply_items(self, sess: _Session, items: list) -> int:
+        applied = 0
+        for i, (delta, fut) in enumerate(items):
+            before = dict(sess.stream.stats)
+            try:
+                d = sess.stream.apply(delta)
+            except Exception as e:
+                for (_, later) in items[i:]:
+                    later._fail(e)
+                break
+            after = sess.stream.stats
+            info = {k: after[k] - before[k] for k in
+                    ("graph_updates", "hits", "coral_hits",
+                     "prunit_hits", "recomputes")}
+            fut._resolve(d, info)
+            applied += 1
+        return applied
+
+    # --------------------------------------------------------------- loops
+
+    def serve_forever(self, poll_s: float = 1e-3) -> None:
+        """Blocking drain loop (run on a dedicated thread); stop() exits."""
+        while not self._stopped.is_set():
+            if self.drain() == 0:
+                self._stopped.wait(poll_s)
+
+    def stop(self) -> None:
+        self._stopped.set()
+
+    # -------------------------------------------------------------- stats
+
+    def session_stats(self, sid: str) -> dict:
+        """One session's cumulative counters plus its skip rate."""
+        stream = self._session(sid).stream
+        out = dict(stream.stats)
+        out["skip_rate"] = stream.skip_rate()
+        return out
+
+    def stats(self) -> dict:
+        """Aggregate hit/miss/recompute counters over all sessions (live and
+        closed) — the serving layer's cache-effectiveness surface."""
+        with self._lock:
+            sessions = list(self._sessions.values())
+            agg = dict(self._closed_stats)
+            n_closed = self._n_closed
+        for sess in sessions:
+            for k in agg:
+                agg[k] += sess.stream.stats[k]
+        agg["sessions"] = len(sessions)
+        agg["sessions_closed"] = n_closed
+        agg["skip_rate"] = agg["hits"] / max(agg["graph_updates"], 1)
+        return agg

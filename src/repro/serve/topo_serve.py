@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from collections import deque
 from typing import Optional, Sequence
 
@@ -34,6 +33,7 @@ import numpy as np
 from repro.core.api import TopoPlan, make_topo_plan
 from repro.core.graph import GraphBatch, from_edge_lists
 from repro.core.persistence_jax import Diagrams
+from repro.serve.futures import ServeFuture
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -86,52 +86,18 @@ class TopoRequest:
     f: Optional[tuple[float, ...]] = None  # None -> degree filtration
 
 
-class TopoFuture:
+class TopoFuture(ServeFuture):
     """Handle for one submitted graph; resolved by a later ``drain()``.
 
-    ``result()`` blocks (thread-safe) until a drain — possibly on another
-    thread — fulfils it; async callers can ``await asyncio.to_thread(
-    fut.result)`` or poll ``done()``.
+    ``result()`` returns the per-graph Diagrams slice (leaves shaped (S,),
+    no batch axis).  Thread-safe plumbing lives in ``ServeFuture``.
     """
 
-    __slots__ = ("_event", "_value", "_error", "bucket", "submitted_at",
-                 "resolved_at")
+    __slots__ = ("bucket",)
 
     def __init__(self, bucket: Bucket):
-        self._event = threading.Event()
-        self._value: Optional[Diagrams] = None
-        self._error: Optional[BaseException] = None
+        super().__init__()
         self.bucket = bucket
-        self.submitted_at = time.perf_counter()
-        self.resolved_at: Optional[float] = None
-
-    def done(self) -> bool:
-        return self._event.is_set()
-
-    def result(self, timeout: Optional[float] = None) -> Diagrams:
-        """Per-graph Diagrams (leaves shaped (S,), no batch axis)."""
-        if not self._event.wait(timeout):
-            raise TimeoutError("TopoFuture not resolved within timeout "
-                               "(is a drain loop running?)")
-        if self._error is not None:
-            raise self._error
-        return self._value
-
-    def latency_s(self) -> float:
-        """submit->resolve wall time; valid once done()."""
-        if self.resolved_at is None:
-            raise RuntimeError("future not resolved yet")
-        return self.resolved_at - self.submitted_at
-
-    def _resolve(self, value: Diagrams) -> None:
-        self._value = value
-        self.resolved_at = time.perf_counter()
-        self._event.set()
-
-    def _fail(self, err: BaseException) -> None:
-        self._error = err
-        self.resolved_at = time.perf_counter()
-        self._event.set()
 
 
 def pack_requests(reqs: Sequence[TopoRequest], bucket: Bucket) -> GraphBatch:
@@ -278,21 +244,23 @@ class TopoServe:
         Bucket queues are flushed in submission order, chunked at
         ``max_batch`` and padded (with empty graphs, dropped after execution)
         to a multiple of ``pad_batch_to`` so sharded plans always see a batch
-        that divides the mesh."""
+        that divides the mesh.  Buckets are swept round-robin — one chunk per
+        bucket per sweep — so sustained traffic into one bucket cannot starve
+        requests queued in the others."""
         served = 0
         while True:
-            with self._lock:
-                work = None
-                for b in self._buckets:
+            progressed = False
+            for b in self._buckets:
+                with self._lock:
                     q = self._queues[b]
-                    if q:
-                        work = (b, [q.popleft()
-                                    for _ in range(min(len(q),
-                                                       self.config.max_batch))])
-                        break
-            if work is None:
+                    items = [q.popleft()
+                             for _ in range(min(len(q),
+                                                self.config.max_batch))]
+                if items:
+                    served += self._execute(b, items)
+                    progressed = True
+            if not progressed:
                 return served
-            served += self._execute(*work)
 
     def _execute(self, bucket: Bucket, items: list) -> int:
         reqs = tuple(r for (r, _) in items)

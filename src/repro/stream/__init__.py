@@ -1,0 +1,19 @@
+"""TopoStream: incremental persistence diagrams over dynamic-graph streams
+with reduction-aware invalidation (docs/ARCHITECTURE.md §TopoStream)."""
+from repro.stream.topo_stream import (
+    StreamVerdict,
+    TopoStream,
+    TopoStreamConfig,
+    dim_pairs,
+    eligibility_matrix,
+    invalidation_verdict,
+)
+
+__all__ = [
+    "StreamVerdict",
+    "TopoStream",
+    "TopoStreamConfig",
+    "dim_pairs",
+    "eligibility_matrix",
+    "invalidation_verdict",
+]

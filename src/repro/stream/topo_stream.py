@@ -1,0 +1,373 @@
+r"""TopoStream: exact incremental persistence for dynamic graphs.
+
+The paper's two reduction theorems are *locality* statements:
+
+* **Theorem 2 (CoralTDA)** — ``PD_k(G, f) = PD_k(G^{k+1}, f)`` for k >= 1:
+  the k-th diagram only sees the (k+1)-core.
+* **Theorem 7 (PrunIT)** — deleting a dominated vertex (``N[u] ⊆ N[v]`` with
+  ``f(u) >= f(v)``, sublevel) preserves *every* ``PD_k``.
+
+So most single-edge updates to a large network provably cannot change its
+diagram — and a stream of updates only needs a cheap graph-level check, not a
+fresh boundary-matrix reduction, to know that.  ``TopoStream`` is a stateful
+session over a :class:`~repro.core.graph.GraphBatch`: it holds the current
+graphs, their cached (dim+1)-core / domination state and the last diagrams;
+``apply(delta)`` runs a jit-compiled **invalidation verdict** and only
+re-executes the compiled persistence plan (``repro.core.api.make_topo_plan``
+— the same plan→execute machinery TopoServe uses) for the graphs whose
+diagram could actually have moved, gathered into a power-of-two padded
+sub-batch so recompute cost scales with the *miss* count, not the batch.
+
+Invalidation predicates (both exact, proofs in ``invalidation_verdict``):
+
+* **coral hit** — the induced (dim+1)-core subgraph (vertex set, edges and f
+  on it) is unchanged ⟹ ``PD_j`` unchanged for all ``j >= dim``.  Guards the
+  *target* dimension only (PD_0 may still move), so it is enabled for
+  ``exact_dims="target"`` and ``dim >= 1``.
+* **prunit hit** — every touched vertex is dominated, before *and* after the
+  update, by an untouched witness satisfying the f condition ⟹ ``PD_k``
+  unchanged for *all* k.  Always enabled.
+
+``exact_dims="target"`` (default) serves ``PD_dim`` exactly; lower dims may
+be stale after coral hits (``all_dims_exact`` tracks this per graph).
+``exact_dims="all"`` restricts to the prunit predicate (and to reductions
+that are exact in every dimension) so the full diagram tensor stays exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import REDUCTIONS, TopoPlan, make_topo_plan
+from repro.core.delta import DeltaBatch, apply_delta
+from repro.core.filtration import complex_caps_ok
+from repro.core.graph import GraphBatch
+from repro.core.kcore import coreness, kcore_mask
+from repro.core.persistence_jax import Diagrams, diagrams_to_numpy
+from repro.core.prunit import eligibility_matrix as _prunit_eligibility
+
+# reductions exact in every homology dimension (no coral core restriction)
+_ALL_DIM_METHODS = ("prunit", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoStreamConfig:
+    """Pipeline parameters + invalidation policy for one stream session."""
+
+    dim: int = 1
+    method: str = "both"
+    sublevel: bool = True
+    edge_cap: int = 256
+    tri_cap: int = 512
+    quad_cap: int = 0
+    reducer: str = "jnp"
+    exact_dims: str = "target"   # "target" (coral+prunit) | "all" (prunit)
+    recompute_pad: str = "pow2"  # "pow2" | "full" sub-batch padding policy
+    check_caps: bool = True      # verify simplex caps still hold after updates
+
+    def __post_init__(self):
+        if self.method not in REDUCTIONS:
+            raise ValueError(f"unknown reduction {self.method!r}")
+        if self.exact_dims not in ("target", "all"):
+            raise ValueError(f"exact_dims must be 'target' or 'all', "
+                             f"got {self.exact_dims!r}")
+        if self.exact_dims == "all" and self.method not in _ALL_DIM_METHODS:
+            raise ValueError(
+                f"exact_dims='all' requires a reduction exact in every "
+                f"dimension ({_ALL_DIM_METHODS}); {self.method!r} restricts "
+                f"to the (dim+1)-core and breaks PD_0..PD_dim-1")
+        if self.recompute_pad not in ("pow2", "full"):
+            raise ValueError(f"recompute_pad must be 'pow2' or 'full', "
+                             f"got {self.recompute_pad!r}")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamVerdict:
+    """Per-graph invalidation outcome of one ``apply`` step.
+
+    touched:    any effective change (adjacency, mask, or f) this step.
+    coral_hit:  induced (dim+1)-core unchanged (PD_{>=dim} preserved).
+    prunit_hit: all touched vertices dominated before+after by untouched
+                witnesses (every PD_k preserved).
+    recompute:  touched & not hit — the graphs the plan re-executes on.
+    core_mask:  fresh (dim+1)-core mask of the updated graphs.
+    elig:       fresh eligibility (domination & f-condition) matrix.
+    caps_ok:    simplex caps still hold for the updated graph.
+    """
+
+    touched: jax.Array
+    coral_hit: jax.Array
+    prunit_hit: jax.Array
+    recompute: jax.Array
+    core_mask: jax.Array
+    elig: jax.Array
+    caps_ok: jax.Array
+
+
+def eligibility_matrix(g: GraphBatch, sublevel: bool = True) -> jax.Array:
+    """(B, N, N) bool E with E[u, v] = "PrunIT may remove u with witness v".
+
+    GraphBatch-level view of ``repro.core.prunit.eligibility_matrix`` — the
+    one definition of Theorem 7's hypothesis (domination + f condition),
+    shared with the PrunIT reduction rounds.
+    """
+    return _prunit_eligibility(g.adj, g.mask, g.f, sublevel)
+
+
+def _prunit_safe(touched_v: jax.Array, mask: jax.Array,
+                 elig: jax.Array) -> jax.Array:
+    r"""(B,) bool: every touched live vertex has an untouched witness.
+
+    Soundness (Theorem 7, iterated): let U be the touched set.  Each u in U
+    with a witness v ∉ U stays dominated while *other* members of U are
+    removed (deleting z ∉ {u, v} preserves ``N[u] ⊆ N[v]``, and f never
+    changes under vertex deletion), so removing U∩live one by one is a valid
+    PrunIT sequence: ``PD_k(G) = PD_k(G \ U)`` for all k.
+    """
+    witness_ok = jnp.any(elig & ~touched_v[..., None, :], axis=-1)
+    need = touched_v & mask
+    return jnp.all(~need | witness_ok, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("dim", "sublevel", "use_coral",
+                                   "check_caps", "edge_cap", "tri_cap",
+                                   "quad_cap"))
+def invalidation_verdict(
+    g_old: GraphBatch,
+    g_new: GraphBatch,
+    core_old: jax.Array,
+    elig_old: jax.Array,
+    dim: int,
+    sublevel: bool,
+    use_coral: bool,
+    check_caps: bool = False,
+    edge_cap: int = 0,
+    tri_cap: int = 0,
+    quad_cap: int = 0,
+) -> StreamVerdict:
+    """The reduction-aware invalidation check (pure JAX, one jitted program).
+
+    The touched set is the exact state diff (so ineffective ops — inserting
+    an existing edge, rewriting f with the same value — never invalidate).
+
+    Coral predicate: ``PD_dim(G) = PD_dim(core_{dim+1}(G))`` (Thm 2), so if
+    the (dim+1)-core *as an f-labelled induced subgraph* is identical in G
+    and G', then ``PD_dim(G) = PD_dim(G')``.  Checking the core of G' from
+    scratch (a few masked mat-vec sweeps) is what makes edge *insertions*
+    safe too — an inserted edge between outside-core vertices can create new
+    core (e.g. closing a path into a cycle), which mask equality detects.
+
+    PrunIT predicate: see ``_prunit_safe``; applying it to both G and G'
+    gives ``PD_k(G) = PD_k(G \\ U) = PD_k(G' \\ U) = PD_k(G')`` for all k,
+    because every changed edge/f/mask entry is incident to the touched set U,
+    hence ``G \\ U = G' \\ U``.
+    """
+    adj_diff = g_old.adj ^ g_new.adj
+    f_diff = g_old.f != g_new.f
+    mask_diff = g_old.mask ^ g_new.mask
+    # PrunIT's removal set U only needs to COVER the diff (every changed
+    # edge incident to U, every changed f/mask entry inside U) — vertices
+    # whose own state changed, plus both endpoints of any changed edge not
+    # already covered.  The tighter U matters: dropping vertex u also flips
+    # its neighbors' adjacency rows, but {u} alone covers those edges, so a
+    # plain dominated-vertex removal (the paper's Theorem 7 move) stays U={u}
+    # and keeps its untouched witness.
+    u0 = f_diff | mask_diff                                      # (B, N)
+    covered = u0[..., None, :] | u0[..., :, None]
+    touched_v = u0 | jnp.any(adj_diff & ~covered, axis=-1)       # (B, N)
+    touched = jnp.any(touched_v, axis=-1) | jnp.any(adj_diff, axis=(-1, -2))
+
+    core_new = kcore_mask(g_new.adj, g_new.mask, dim + 1)
+    elig_new = eligibility_matrix(g_new, sublevel)
+
+    if use_coral:
+        core_same = jnp.all(core_new == core_old, axis=-1)
+        edge_in_core = jnp.any(
+            adj_diff & core_new[..., None, :] & core_new[..., :, None],
+            axis=(-1, -2))
+        f_in_core = jnp.any(f_diff & core_new, axis=-1)
+        coral_hit = core_same & ~edge_in_core & ~f_in_core
+    else:
+        coral_hit = jnp.zeros_like(touched)
+
+    prunit_hit = (_prunit_safe(touched_v, g_old.mask, elig_old)
+                  & _prunit_safe(touched_v, g_new.mask, elig_new))
+
+    hit = coral_hit | prunit_hit
+    if check_caps:
+        caps_ok = jax.vmap(
+            lambda a, m: complex_caps_ok(a, m, edge_cap, tri_cap, quad_cap,
+                                         max_dim=dim)
+        )(g_new.adj, g_new.mask)
+    else:
+        caps_ok = jnp.ones_like(touched)
+    return StreamVerdict(
+        touched=touched,
+        coral_hit=coral_hit & touched,
+        prunit_hit=prunit_hit & touched,
+        recompute=touched & ~hit,
+        core_mask=core_new,
+        elig=elig_new,
+        caps_ok=caps_ok,
+    )
+
+
+class TopoStream:
+    """Stateful incremental-persistence session over a GraphBatch.
+
+    >>> stream = TopoStream(g0, TopoStreamConfig(dim=1, method="both"))
+    >>> d = stream.apply(delta)        # fresh-or-cached Diagrams, exact PD_1
+    >>> stream.stats["hits"], stream.stats["recomputes"]
+
+    Each session owns one compiled plan (via the process-wide plan cache);
+    recomputes gather only the invalidated graphs into a power-of-two padded
+    sub-batch, so the jit-signature count is bounded by ``log2(B)`` and the
+    work scales with misses, not with the session size.
+    """
+
+    def __init__(self, g: GraphBatch, config: TopoStreamConfig | None = None):
+        self.config = config or TopoStreamConfig()
+        c = self.config
+        self._use_coral = c.exact_dims == "target" and c.dim >= 1
+        self._plan: TopoPlan = make_topo_plan(
+            dim=c.dim, method=c.method, sublevel=c.sublevel,
+            edge_cap=c.edge_cap, tri_cap=c.tri_cap, quad_cap=c.quad_cap,
+            reducer=c.reducer)
+        self._g = g
+        self._diagrams: Diagrams = self._plan.execute(g)
+        self._core = kcore_mask(g.adj, g.mask, c.dim + 1)
+        self._elig = eligibility_matrix(g, c.sublevel)
+        self._all_dims_exact = np.full(
+            (g.batch,), c.method in _ALL_DIM_METHODS, bool)
+        self.stats = {
+            "applied": 0,            # apply() calls
+            "graph_updates": 0,      # (graph, step) pairs with a real change
+            "hits": 0,               # ... answered from cache
+            "coral_hits": 0,
+            "prunit_hits": 0,        # prunit-only hits (coral takes priority)
+            "recomputes": 0,         # ... that re-executed the plan
+            "recompute_batches": 0,  # plan executions
+            "recomputed_rows": 0,    # padded rows executed (cost proxy)
+        }
+
+    # ------------------------------------------------------------ accessors
+
+    @property
+    def graph(self) -> GraphBatch:
+        """The current (post-update) GraphBatch."""
+        return self._g
+
+    @property
+    def diagrams(self) -> Diagrams:
+        """The maintained diagrams; ``PD_dim`` rows are always exact."""
+        return self._diagrams
+
+    @property
+    def plan(self) -> TopoPlan:
+        return self._plan
+
+    @property
+    def all_dims_exact(self) -> np.ndarray:
+        """(B,) bool — graphs whose dims < dim rows are also exact."""
+        return self._all_dims_exact.copy()
+
+    def coreness(self) -> jax.Array:
+        """Full per-vertex core numbers of the current graphs (diagnostic)."""
+        return coreness(self._g.adj, self._g.mask)
+
+    def skip_rate(self) -> float:
+        """Fraction of graph updates answered from cache so far."""
+        return self.stats["hits"] / max(self.stats["graph_updates"], 1)
+
+    # ---------------------------------------------------------------- apply
+
+    def apply(self, delta: DeltaBatch) -> Diagrams:
+        """Apply one update step; returns the (fresh-or-cached) diagrams.
+
+        Raises ValueError if an update pushes a graph past the session's
+        simplex caps (``check_caps=False`` disables the guard).
+        """
+        c = self.config
+        g_new = apply_delta(self._g, delta)
+        verdict = invalidation_verdict(
+            self._g, g_new, self._core, self._elig,
+            dim=c.dim, sublevel=c.sublevel, use_coral=self._use_coral,
+            check_caps=c.check_caps, edge_cap=c.edge_cap, tri_cap=c.tri_cap,
+            quad_cap=c.quad_cap)
+
+        touched = np.asarray(verdict.touched)
+        coral = np.asarray(verdict.coral_hit)
+        prunit = np.asarray(verdict.prunit_hit)
+        needs = np.asarray(verdict.recompute)
+        if c.check_caps and not np.asarray(verdict.caps_ok).all():
+            bad = np.nonzero(~np.asarray(verdict.caps_ok))[0].tolist()
+            raise ValueError(
+                f"update overflows simplex caps (edge_cap={c.edge_cap}, "
+                f"tri_cap={c.tri_cap}) for graphs {bad}; diagrams would be "
+                f"truncated — resize the session caps")
+
+        if needs.any():
+            idx = np.nonzero(needs)[0]
+            self._diagrams = self._recompute(g_new, idx)
+            self.stats["recomputes"] += int(needs.sum())
+            self._all_dims_exact[idx] = c.method in _ALL_DIM_METHODS
+
+        # coral-only hits leave dims < dim stale for that graph
+        self._all_dims_exact[coral & ~prunit] = False
+
+        self.stats["applied"] += 1
+        self.stats["graph_updates"] += int(touched.sum())
+        self.stats["hits"] += int((touched & ~needs).sum())
+        self.stats["coral_hits"] += int(coral.sum())
+        self.stats["prunit_hits"] += int((prunit & ~coral).sum())
+
+        self._g = g_new
+        self._core = verdict.core_mask
+        self._elig = verdict.elig
+        return self._diagrams
+
+    def _recompute(self, g_new: GraphBatch, idx: np.ndarray) -> Diagrams:
+        """Re-execute the plan on the invalidated graphs only.
+
+        The miss set is gathered into a sub-batch padded to the next power
+        of two (``recompute_pad="pow2"``) so the plan sees a bounded ladder
+        of batch shapes; padding rows repeat the first miss and are dropped
+        at scatter time.
+        """
+        b = g_new.batch
+        k = len(idx)
+        if self.config.recompute_pad == "full" or k >= b:
+            d = self._plan.execute(g_new)
+            self.stats["recompute_batches"] += 1
+            self.stats["recomputed_rows"] += b
+            if k >= b:
+                return d
+            jidx = jnp.asarray(idx)
+            return jax.tree.map(
+                lambda c_, n_: c_.at[jidx].set(n_[jidx]), self._diagrams, d)
+        r = min(b, 1 << (k - 1).bit_length())
+        idx_p = np.concatenate([idx, np.full(r - k, idx[0], idx.dtype)])
+        sub = jax.tree.map(lambda x: x[jnp.asarray(idx_p)], g_new)
+        d = self._plan.execute(sub)
+        self.stats["recompute_batches"] += 1
+        self.stats["recomputed_rows"] += r
+        jidx = jnp.asarray(idx)
+        return jax.tree.map(
+            lambda c_, n_: c_.at[jidx].set(n_[:k]), self._diagrams, d)
+
+
+def dim_pairs(d: Diagrams, graph_index: int, k: int) -> list[tuple]:
+    """Sorted ``(birth, death)`` pairs of ``PD_k`` for one graph.
+
+    The canonical comparison artifact for streamed-vs-scratch parity: cached
+    and recomputed diagram *tensors* index rows by filtration position (which
+    legitimately shifts when untracked parts of the graph change), but the
+    multiset of persistence pairs in every guaranteed dimension must match
+    bit-for-bit (benchmarks/stream_bench.py, tests/test_topo_stream.py).
+    """
+    return diagrams_to_numpy(d, graph_index, max_dim=k)[k]

@@ -1,0 +1,121 @@
+"""StreamServe: session lifecycle, FIFO drains, counter surface, failures."""
+import threading
+
+import jax
+import pytest
+
+from repro.core.delta import EDGE_INSERT, delta_from_lists, delta_step
+from repro.core.graph import from_edge_lists
+from repro.data.temporal import ego_decay_stream
+from repro.serve import StreamServe
+from repro.stream import TopoStreamConfig, dim_pairs
+
+CFG = TopoStreamConfig(dim=1, method="both", edge_cap=192, tri_cap=512)
+
+
+def _square_batch(b=1):
+    return from_edge_lists([[(0, 1), (1, 2), (2, 3), (3, 0)]] * b,
+                           [4] * b, n_pad=8)
+
+
+def test_session_flow_fresh_and_cached():
+    srv = StreamServe(TopoStreamConfig(dim=1, method="both", edge_cap=48,
+                                       tri_cap=96))
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 0), (0, 3)]], [4], n_pad=8)
+    sid = srv.create_session(g)
+    assert dim_pairs(srv.diagrams(sid), 0, 1) == []
+    # pendant delete -> cache hit; diagonal insert -> recompute
+    f1 = srv.submit(sid, delta_from_lists([[(0, 3, "delete")]]))
+    f2 = srv.submit(sid, delta_from_lists([[(1, 3, EDGE_INSERT),
+                                            (2, 3, EDGE_INSERT)]]))
+    assert srv.pending() == 2
+    assert srv.drain() == 2
+    assert f1.info == {"graph_updates": 1, "hits": 1, "coral_hits": 1,
+                       "prunit_hits": 0, "recomputes": 0}
+    assert f2.info["recomputes"] == 1
+    st = srv.session_stats(sid)
+    assert st["hits"] == 1 and st["recomputes"] == 1
+    assert 0.0 < st["skip_rate"] < 1.0
+
+
+def test_sessions_are_independent():
+    srv = StreamServe(TopoStreamConfig(dim=1, method="both", edge_cap=48,
+                                       tri_cap=96))
+    s1 = srv.create_session(_square_batch())
+    s2 = srv.create_session(_square_batch())
+    srv.submit(s1, delta_from_lists([[(0, 2, EDGE_INSERT)]]))
+    srv.drain()
+    assert dim_pairs(srv.diagrams(s1), 0, 1) != dim_pairs(srv.diagrams(s2), 0, 1)
+    agg = srv.stats()
+    assert agg["sessions"] == 2 and agg["graph_updates"] == 1
+    srv.close_session(s1)
+    assert srv.stats()["sessions"] == 1
+    assert srv.stats()["sessions_closed"] == 1
+    assert srv.stats()["graph_updates"] == 1  # closed stats folded in
+    with pytest.raises(KeyError):
+        srv.diagrams(s1)
+
+
+def test_submit_validation():
+    srv = StreamServe(CFG)
+    g0, deltas = ego_decay_stream(jax.random.PRNGKey(0), batch=2, n_pad=32,
+                                  n_core=10, n_double=6, n_pendant=6, steps=3)
+    sid = srv.create_session(g0)
+    with pytest.raises(ValueError, match="one update step"):
+        srv.submit(sid, deltas)  # stacked stream, not a step
+    bad = delta_from_lists([[(0, 1, EDGE_INSERT)]] * 5)  # wrong batch
+    with pytest.raises(ValueError, match="batch"):
+        srv.submit(sid, bad)
+    with pytest.raises(KeyError):
+        srv.submit("s999", delta_step(deltas, 0))
+
+
+def test_drain_applies_temporal_stream_in_order():
+    srv = StreamServe(CFG)
+    g0, deltas = ego_decay_stream(jax.random.PRNGKey(1), batch=2, n_pad=32,
+                                  n_core=10, n_double=6, n_pendant=6,
+                                  steps=6, toggles=1)
+    sid = srv.create_session(g0)
+    futs = [srv.submit(sid, delta_step(deltas, t)) for t in range(6)]
+    assert srv.drain() == 6
+    assert all(f.done() for f in futs)
+    agg = srv.stats()
+    assert agg["graph_updates"] == sum(f.info["graph_updates"] for f in futs)
+    assert agg["hits"] > 0
+
+
+def test_background_serve_forever_thread():
+    srv = StreamServe(CFG)
+    g0, deltas = ego_decay_stream(jax.random.PRNGKey(2), batch=2, n_pad=32,
+                                  n_core=10, n_double=6, n_pendant=6,
+                                  steps=4, toggles=1)
+    sid = srv.create_session(g0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    try:
+        futs = [srv.submit(sid, delta_step(deltas, i)) for i in range(4)]
+        for f in futs:
+            f.result(timeout=120)
+    finally:
+        srv.stop()
+        t.join(timeout=10)
+    assert not t.is_alive()
+    assert srv.session_stats(sid)["applied"] == 4
+
+
+def test_failed_step_fails_dependent_futures():
+    # an update that overflows the session caps must fail its future AND the
+    # later queued futures of that session (their base state is undefined)
+    srv = StreamServe(TopoStreamConfig(dim=1, method="none", edge_cap=4,
+                                       tri_cap=8))
+    sid = srv.create_session(_square_batch())
+    big = delta_from_lists([[(0, 2, EDGE_INSERT), (1, 3, EDGE_INSERT)]])
+    ok_before = srv.submit(sid, delta_from_lists([[(0, 1, "delete")]]))
+    bad = srv.submit(sid, big)
+    after = srv.submit(sid, delta_from_lists([[(0, 1, EDGE_INSERT)]]))
+    srv.drain()
+    ok_before.result(timeout=1)  # applied before the failure
+    with pytest.raises(ValueError, match="simplex caps"):
+        bad.result(timeout=1)
+    with pytest.raises(ValueError, match="simplex caps"):
+        after.result(timeout=1)

@@ -1,0 +1,97 @@
+"""Temporal-graph generators: stream validity, regimes, replay invariants."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.delta import EDGE_NOP, apply_delta, delta_step
+from repro.data.temporal import (
+    community_churn_stream,
+    ego_decay_stream,
+    pa_growth_stream,
+)
+from repro.stream import TopoStream, TopoStreamConfig
+
+
+def _replay_graph_invariants(g0, deltas, steps):
+    """Apply every step; check GraphBatch invariants hold throughout."""
+    g = g0
+    for t in range(steps):
+        g = apply_delta(g, delta_step(deltas, t))
+        a = np.asarray(g.adj)
+        m = np.asarray(g.mask)
+        f = np.asarray(g.f)
+        assert np.array_equal(a, np.swapaxes(a, -1, -2))
+        assert not a[:, np.arange(g.n), np.arange(g.n)].any()
+        assert not (a & ~(m[:, None, :] & m[:, :, None])).any()
+        assert np.isinf(f[~m]).all() and np.isfinite(f[m]).all()
+    return g
+
+
+def test_pa_growth_activates_one_vertex_per_step():
+    g0, deltas = pa_growth_stream(jax.random.PRNGKey(0), batch=3, n_pad=16,
+                                  n0=3, m=2, steps=8)
+    assert deltas.steps == 8 and deltas.batch == 3
+    assert int(g0.n_vertices()[0]) == 3
+    g = _replay_graph_invariants(g0, deltas, 8)
+    nv = np.asarray(g.n_vertices())
+    assert (nv == 3 + 8).all()
+    # arrival-time filtration: f(v) = v for live vertices
+    f = np.asarray(g.f)
+    m = np.asarray(g.mask)
+    assert (f[m] == np.tile(np.arange(16), (3, 1))[m]).all()
+
+
+def test_pa_growth_m1_all_updates_skip():
+    g0, deltas = pa_growth_stream(jax.random.PRNGKey(1), batch=2, n_pad=12,
+                                  n0=3, m=1, steps=6)
+    s = TopoStream(g0, TopoStreamConfig(dim=1, method="prunit",
+                                        exact_dims="all", edge_cap=40,
+                                        tri_cap=64))
+    for t in range(6):
+        s.apply(delta_step(deltas, t))
+    # a pendant arrival is dominated by its attachment target: Thm 7 says no
+    # diagram can move, so the whole growth stream is recompute-free
+    assert s.skip_rate() == 1.0
+    assert s.stats["recomputes"] == 0
+
+
+def test_pa_growth_rejects_overflow():
+    with pytest.raises(ValueError, match="n_pad"):
+        pa_growth_stream(jax.random.PRNGKey(0), batch=1, n_pad=8, n0=4,
+                         m=1, steps=8)
+
+
+def test_community_churn_preserves_vertex_set_and_f():
+    g0, deltas = community_churn_stream(
+        jax.random.PRNGKey(2), batch=3, n_pad=12, n_vertices=10, n_comm=3,
+        p_in=0.5, p_out=0.1, steps=6, churn=2)
+    g = _replay_graph_invariants(g0, deltas, 6)
+    assert np.array_equal(np.asarray(g.mask), np.asarray(g0.mask))
+    assert np.array_equal(np.asarray(g.f), np.asarray(g0.f))
+    # churn ops are real ops (sampled from existing edges / non-edges)
+    ops = np.asarray(deltas.edge_op)
+    assert (ops != EDGE_NOP).any()
+
+
+def test_ego_decay_mixes_hits_and_recomputes():
+    g0, deltas = ego_decay_stream(jax.random.PRNGKey(3), batch=4, n_pad=32,
+                                  n_core=10, n_double=6, n_pendant=6,
+                                  steps=12, toggles=1, p_core_edge=0.3)
+    _replay_graph_invariants(g0, deltas, 12)
+    s = TopoStream(g0, TopoStreamConfig(dim=1, method="both", edge_cap=192,
+                                        tri_cap=512))
+    for t in range(12):
+        s.apply(delta_step(deltas, t))
+    assert s.stats["hits"] > 0            # satellite toggles skip
+    assert s.stats["coral_hits"] > 0      # pendant satellites
+    assert s.stats["prunit_hits"] > 0     # hub-dominated satellites
+    assert 0.0 < s.skip_rate() <= 1.0
+
+
+def test_ego_decay_layout_validation():
+    with pytest.raises(ValueError, match="n_pad"):
+        ego_decay_stream(jax.random.PRNGKey(0), batch=1, n_pad=8, n_core=6,
+                         n_double=4, n_pendant=4, steps=2)
+    with pytest.raises(ValueError, match="n_core"):
+        ego_decay_stream(jax.random.PRNGKey(0), batch=1, n_pad=16, n_core=3,
+                         n_double=2, n_pendant=2, steps=2)

@@ -1,0 +1,336 @@
+"""TopoStream: delta semantics, invalidation predicates, incremental parity.
+
+The parity contract mirrors serve_bench's: incremental maintenance is a
+scheduling decision, never a numerics change — after every update the
+streamed diagram's pairs in every guaranteed dimension must equal a
+from-scratch ``topological_signature`` on the current graph state.
+"""
+import numpy as np
+import pytest
+
+from conftest import hypothesis_or_stub
+
+import jax.numpy as jnp
+
+from repro.core import topological_signature
+from repro.core.delta import (
+    EDGE_DELETE,
+    EDGE_INSERT,
+    EDGE_NOP,
+    DeltaBatch,
+    apply_delta,
+    canonicalize_delta,
+    delta_from_lists,
+    empty_delta,
+)
+from repro.core.graph import from_edge_lists
+from repro.stream import TopoStream, TopoStreamConfig, dim_pairs
+
+given, settings, st = hypothesis_or_stub()
+
+CFG = dict(edge_cap=48, tri_cap=96)
+
+
+def _scratch(g, cfg: TopoStreamConfig):
+    return topological_signature(
+        g, dim=cfg.dim, method=cfg.method, sublevel=cfg.sublevel,
+        edge_cap=cfg.edge_cap, tri_cap=cfg.tri_cap, quad_cap=cfg.quad_cap)
+
+
+def _assert_parity(stream, diagrams, dims):
+    ref = _scratch(stream.graph, stream.config)
+    for b in range(stream.graph.batch):
+        for k in dims:
+            assert dim_pairs(diagrams, b, k) == dim_pairs(ref, b, k), (b, k)
+
+
+# ------------------------------------------------------------------- delta
+
+def test_canonicalize_delta_invariants():
+    d = DeltaBatch(
+        edge_u=jnp.asarray([[3, 2, 9, 1]]),
+        edge_v=jnp.asarray([[1, 2, 0, 2]]),
+        edge_op=jnp.asarray([[EDGE_INSERT, EDGE_INSERT, EDGE_DELETE, EDGE_NOP]]),
+        f_vertex=jnp.asarray([[7, 2]]),
+        f_value=jnp.asarray([[1.0, 2.0]]),
+        drop_vertex=jnp.asarray([[5, 3]]),
+    )
+    c = canonicalize_delta(d, n=6)
+    # (3,1) ordered to u<v; self loop (2,2) -> NOP; out-of-range 9 -> NOP;
+    # already-NOP slot endpoints cleared to -1
+    assert c.edge_u.tolist() == [[1, -1, -1, -1]]
+    assert c.edge_v.tolist() == [[3, -1, -1, -1]]
+    assert c.edge_op.tolist() == [[EDGE_INSERT, EDGE_NOP, EDGE_NOP, EDGE_NOP]]
+    assert c.f_vertex.tolist() == [[-1, 2]]     # 7 out of range
+    assert c.drop_vertex.tolist() == [[5, 3]]
+
+
+def test_apply_delta_insert_delete_and_invariants():
+    g = from_edge_lists([[(0, 1), (1, 2)]], [4], n_pad=6)
+    d = delta_from_lists([[(2, 3, EDGE_INSERT), (0, 1, EDGE_DELETE)]])
+    g2 = apply_delta(g, d)
+    a = np.asarray(g2.adj[0])
+    assert not a[0, 1] and not a[1, 0]
+    assert a[2, 3] and a[3, 2]
+    assert np.array_equal(a, a.T) and not a.diagonal().any()
+    # mask sentinels intact: no edges to padding, f=+inf outside mask
+    m = np.asarray(g2.mask[0])
+    assert not a[~m].any() and not a[:, ~m].any()
+    assert np.isinf(np.asarray(g2.f[0])[~m]).all()
+
+
+def test_apply_delta_delete_beats_insert():
+    g = from_edge_lists([[(0, 1)]], [3], n_pad=4)
+    d = DeltaBatch(
+        edge_u=jnp.asarray([[0, 0]]), edge_v=jnp.asarray([[2, 2]]),
+        edge_op=jnp.asarray([[EDGE_INSERT, EDGE_DELETE]]),
+        f_vertex=jnp.full((1, 0), -1, jnp.int32),
+        f_value=jnp.zeros((1, 0), jnp.float32),
+        drop_vertex=jnp.full((1, 0), -1, jnp.int32),
+    )
+    assert not bool(apply_delta(g, d).adj[0, 0, 2])
+
+
+def test_apply_delta_activates_endpoints_with_default_f():
+    g = from_edge_lists([[(0, 1)]], [2], n_pad=5)
+    d = delta_from_lists([[(1, 4, EDGE_INSERT)]])
+    g2 = apply_delta(g, d)
+    assert bool(g2.mask[0, 4]) and bool(g2.adj[0, 1, 4])
+    assert float(g2.f[0, 4]) == 0.0  # activated without an f op
+
+
+def test_apply_delta_drop_clears_incident_edges():
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 0)]], [3], n_pad=4)
+    g2 = apply_delta(g, delta_from_lists([[]], drops=[[1]], drop_slots=1))
+    assert not bool(g2.mask[0, 1])
+    assert not np.asarray(g2.adj[0])[1].any()
+    assert np.isinf(float(g2.f[0, 1]))
+
+
+def test_apply_delta_invalid_edge_ops_are_fully_dropped():
+    # a malformed edge op must neither touch adjacency NOR activate an
+    # endpoint: a raw self-loop insert (4, 4) on a padding vertex once
+    # activated it as an isolated live vertex (silently changing PD_0)
+    g = from_edge_lists([[(0, 1)]], [2], n_pad=6)
+    d = DeltaBatch(
+        edge_u=jnp.asarray([[4, 1, -3]]),
+        edge_v=jnp.asarray([[4, 9, 2]]),
+        edge_op=jnp.asarray([[EDGE_INSERT, EDGE_INSERT, EDGE_INSERT]]),
+        f_vertex=jnp.full((1, 0), -1, jnp.int32),
+        f_value=jnp.zeros((1, 0), jnp.float32),
+        drop_vertex=jnp.full((1, 0), -1, jnp.int32),
+    )
+    g2 = apply_delta(g, d)
+    assert np.array_equal(np.asarray(g2.mask), np.asarray(g.mask))
+    assert np.array_equal(np.asarray(g2.adj), np.asarray(g.adj))
+    assert np.array_equal(np.asarray(g2.f), np.asarray(g.f))
+
+
+def test_apply_delta_duplicate_f_ops_last_slot_wins():
+    # device-built deltas may carry duplicate f ops for one vertex; the
+    # highest slot index must win deterministically (a raw scatter would be
+    # backend-defined), matching delta_from_lists' host-side last-wins dedupe
+    g = from_edge_lists([[(0, 1)]], [2], n_pad=4)
+    d = DeltaBatch(
+        edge_u=jnp.full((1, 0), -1, jnp.int32),
+        edge_v=jnp.full((1, 0), -1, jnp.int32),
+        edge_op=jnp.full((1, 0), EDGE_NOP, jnp.int32),
+        f_vertex=jnp.asarray([[1, 1, 0]]),
+        f_value=jnp.asarray([[5.0, 9.0, 2.0]]),
+        drop_vertex=jnp.full((1, 0), -1, jnp.int32),
+    )
+    g2 = apply_delta(g, d)
+    assert float(g2.f[0, 1]) == 9.0
+    assert float(g2.f[0, 0]) == 2.0
+
+
+def test_empty_delta_is_noop():
+    g = from_edge_lists([[(0, 1), (1, 2)]], [4], n_pad=6)
+    g2 = apply_delta(g, empty_delta(1, 2, 1, 1))
+    assert np.array_equal(np.asarray(g.adj), np.asarray(g2.adj))
+    assert np.array_equal(np.asarray(g.f), np.asarray(g2.f))
+
+
+# ----------------------------------------------------------- invalidation
+
+def test_outside_core_update_is_cache_hit():
+    # triangle 0-1-2 (the 2-core) with pendant 3; deleting the pendant edge
+    # cannot change PD_1 (Thm 2) -> answered from cache, zero recompute
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 0), (0, 3)]], [4], n_pad=8)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both", **CFG))
+    d = s.apply(delta_from_lists([[(0, 3, EDGE_DELETE)]]))
+    assert s.stats["hits"] == 1 and s.stats["recomputes"] == 0
+    assert s.stats["coral_hits"] == 1
+    _assert_parity(s, d, dims=(1,))
+
+
+def test_core_touching_update_recomputes():
+    # inserting the square's diagonal touches two 2-core vertices -> the
+    # induced core changes -> a real recompute (and PD_1 actually moves)
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 3), (3, 0)]], [4], n_pad=8)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both", **CFG))
+    before = dim_pairs(s.diagrams, 0, 1)
+    d = s.apply(delta_from_lists([[(0, 2, EDGE_INSERT)]]))
+    assert s.stats["recomputes"] == 1 and s.stats["hits"] == 0
+    assert dim_pairs(d, 0, 1) != before  # one cycle became two
+    _assert_parity(s, d, dims=(1,))
+
+
+def test_outside_core_insert_creating_core_recomputes():
+    # path 0-1-2-3: no 2-core at all; closing it into a cycle creates one —
+    # endpoints were outside the (empty) core, so a diff-only predicate
+    # would wrongly hit; the fresh core-mask comparison must catch it
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 3)]], [4], n_pad=8)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both", **CFG))
+    d = s.apply(delta_from_lists([[(0, 3, EDGE_INSERT)]]))
+    assert s.stats["recomputes"] == 1
+    assert dim_pairs(d, 0, 1) != []  # the new cycle is a real PD_1 class
+    _assert_parity(s, d, dims=(1,))
+
+
+def test_dominated_toggle_is_prunit_hit_all_dims():
+    # hub 0 adjacent to everything; satellite 4 attached to hubs 0 and 1;
+    # toggling (1, 4) keeps 4 (and 1) dominated by the untouched hub 0 ->
+    # exact in EVERY dimension (Thm 7), even though 4 sits in the 2-core
+    edges = [(0, 1), (0, 2), (0, 3), (0, 4), (1, 2), (1, 3), (2, 3), (1, 4)]
+    f = [[0.0, 0.0, 1.0, 1.0, 2.0]]
+    g = from_edge_lists([edges], [5], n_pad=8, f_values=f)
+    cfg = TopoStreamConfig(dim=1, method="prunit", exact_dims="all", **CFG)
+    s = TopoStream(g, cfg)
+    for op in (EDGE_DELETE, EDGE_INSERT):
+        d = s.apply(delta_from_lists([[(1, 4, op)]]))
+        _assert_parity(s, d, dims=(0, 1))
+    assert s.stats["prunit_hits"] == 2 and s.stats["recomputes"] == 0
+    assert s.all_dims_exact.all()
+
+
+def test_dropping_dominated_vertex_is_prunit_hit():
+    edges = [(0, 1), (0, 2), (0, 3), (0, 4), (1, 2), (1, 3), (2, 3), (1, 4)]
+    f = [[0.0, 0.0, 1.0, 1.0, 2.0]]
+    g = from_edge_lists([edges], [5], n_pad=8, f_values=f)
+    cfg = TopoStreamConfig(dim=1, method="prunit", exact_dims="all", **CFG)
+    s = TopoStream(g, cfg)
+    d = s.apply(delta_from_lists([[]], drops=[[4]], drop_slots=1))
+    assert s.stats["prunit_hits"] == 1 and s.stats["recomputes"] == 0
+    _assert_parity(s, d, dims=(0, 1))
+
+
+def test_f_update_outside_core_hits_inside_core_recomputes():
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 0), (0, 3)]], [4], n_pad=8,
+                        f_values=[[1.0, 2.0, 3.0, 4.0]])
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both", **CFG))
+    d = s.apply(delta_from_lists([[]], f_ops=[[(3, 9.0)]], f_slots=1))
+    assert s.stats["hits"] == 1 and s.stats["recomputes"] == 0
+    _assert_parity(s, d, dims=(1,))
+    # vertex 0 is in the 2-core AND not dominated (it owns the pendant), so
+    # neither predicate can certify the f move
+    d = s.apply(delta_from_lists([[]], f_ops=[[(0, 7.0)]], f_slots=1))
+    assert s.stats["recomputes"] == 1
+    _assert_parity(s, d, dims=(1,))
+
+
+def test_ineffective_update_never_invalidates():
+    # inserting an existing edge / rewriting f with the same value is not an
+    # update at all (the verdict diffs states, not ops)
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 0)]], [3], n_pad=4,
+                        f_values=[[1.0, 2.0, 3.0]])
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both", **CFG))
+    s.apply(delta_from_lists([[(0, 1, EDGE_INSERT)]],
+                             f_ops=[[(2, 3.0)]], f_slots=1))
+    assert s.stats["graph_updates"] == 0
+    assert s.stats["hits"] == 0 and s.stats["recomputes"] == 0
+
+
+def test_only_affected_graphs_recompute():
+    graphs = [[(0, 1), (1, 2), (2, 3), (3, 0)]] * 4
+    g = from_edge_lists(graphs, [4] * 4, n_pad=8)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both", **CFG))
+    # touch only graph 2 (core edge -> recompute); others untouched
+    ops = [[], [], [(0, 2, EDGE_INSERT)], []]
+    d = s.apply(delta_from_lists(ops, edge_slots=1))
+    assert s.stats["recomputes"] == 1
+    assert s.stats["recomputed_rows"] == 1  # pow2 sub-batch of size 1
+    _assert_parity(s, d, dims=(1,))
+    # graph 0 (plain square) must recompute on deleting (0,1); graph 2 now
+    # carries the diagonal, which makes 0 and 1 dominated by the untouched
+    # vertex 2 — a PrunIT hit, so only ONE graph re-executes
+    ops = [[(0, 1, EDGE_DELETE)], [], [(0, 1, EDGE_DELETE)], []]
+    d = s.apply(delta_from_lists(ops, edge_slots=1))
+    assert s.stats["recomputes"] == 2
+    assert s.stats["recomputed_rows"] == 2
+    assert s.stats["prunit_hits"] == 1
+    _assert_parity(s, d, dims=(1,))
+
+
+def test_caps_overflow_raises():
+    g = from_edge_lists([[(0, 1), (1, 2)]], [4], n_pad=6)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="none",
+                                       edge_cap=3, tri_cap=4))
+    with pytest.raises(ValueError, match="simplex caps"):
+        s.apply(delta_from_lists([[(0, 2, EDGE_INSERT), (0, 3, EDGE_INSERT),
+                                   (1, 3, EDGE_INSERT)]]))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="exact_dims"):
+        TopoStreamConfig(exact_dims="bogus")
+    with pytest.raises(ValueError, match="every"):
+        TopoStreamConfig(method="both", exact_dims="all")
+    with pytest.raises(ValueError, match="unknown reduction"):
+        TopoStreamConfig(method="nonsense")
+
+
+def test_coral_hit_marks_lower_dims_stale():
+    # pendant deletion: PD_1 provably unchanged, PD_0 legitimately moves
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 0), (0, 3)]], [4], n_pad=8)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="prunit", **CFG))
+    assert s.all_dims_exact.all()
+    s.apply(delta_from_lists([[(0, 3, EDGE_DELETE)]]))
+    assert s.stats["coral_hits"] == 1
+    assert not s.all_dims_exact[0]
+
+
+# ------------------------------------------------------- property testing
+
+def _random_delta(rng, n_live):
+    ops, f_ops = [], []
+    for _ in range(rng.integers(1, 3)):
+        u, v = rng.choice(n_live, size=2, replace=False)
+        op = EDGE_INSERT if rng.random() < 0.5 else EDGE_DELETE
+        ops.append((int(u), int(v), op))
+    if rng.random() < 0.5:
+        f_ops.append((int(rng.integers(0, n_live)),
+                      float(rng.integers(0, 7))))
+    return delta_from_lists([ops], [f_ops], edge_slots=2, f_slots=1)
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=10, deadline=None)
+def test_incremental_equals_scratch_random_sequences(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, 11))
+    edges = [(int(u), int(v)) for u in range(n) for v in range(u + 1, n)
+             if rng.random() < 0.3]
+    f = [[float(rng.integers(0, 7)) for _ in range(n)]]
+    g = from_edge_lists([edges], [n], n_pad=12, f_values=f)
+    cfg = TopoStreamConfig(dim=1, method="both", edge_cap=66, tri_cap=220)
+    s = TopoStream(g, cfg)
+    for _ in range(4):
+        d = s.apply(_random_delta(rng, n))
+        _assert_parity(s, d, dims=(1,))
+
+
+@given(st.integers(min_value=0, max_value=10**6))
+@settings(max_examples=6, deadline=None)
+def test_incremental_all_dims_mode_random_sequences(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(6, 10))
+    edges = [(int(u), int(v)) for u in range(n) for v in range(u + 1, n)
+             if rng.random() < 0.35]
+    g = from_edge_lists([edges], [n], n_pad=12)
+    cfg = TopoStreamConfig(dim=1, method="prunit", exact_dims="all",
+                           edge_cap=66, tri_cap=220)
+    s = TopoStream(g, cfg)
+    for _ in range(3):
+        d = s.apply(_random_delta(rng, n))
+        _assert_parity(s, d, dims=(0, 1))
