@@ -29,6 +29,33 @@ def run(report: Report) -> None:
         _, t_cn = timed(lambda a: ops.common_neighbors(a), g.adj)
         report.add("kernel_common_neighbors", f"B{b}_N{n}_pallas_interp_s", t_cn)
 
+    # pairwise-L1 Gram over SW embeddings (TopoIndex's distance matrix);
+    # interpret-mode fallback keeps this runnable on CPU CI
+    bench_pairwise_gram(report, "kernel_pairwise_gram",
+                        ((64, 256), (128, 512)))
+
+
+def bench_pairwise_gram(report: Report, bench: str, sizes) -> float:
+    """Time jnp vs Pallas pairwise-L1 Gram on random embeddings.
+
+    Shared with the metrics suite (benchmarks/metrics_bench.py) so the
+    microbench has one definition; returns the worst abs deviation seen
+    (callers may assert fp32 parity on it).
+    """
+    kg = jax.random.PRNGKey(7)
+    worst = 0.0
+    for (m, d) in sizes:
+        x = jax.random.normal(kg, (m, d), jnp.float32)
+        gram, t_jnp = timed(jax.jit(ref.pairwise_l1_ref), x, x)
+        gram_p, t_pal = timed(lambda a: ops.pairwise_l1(a, a), x)
+        diff = float(jnp.max(jnp.abs(gram - gram_p)))
+        worst = max(worst, diff)
+        report.add(bench, f"G{m}_D{d}_jnp_s", t_jnp)
+        report.add(bench, f"G{m}_D{d}_pallas_s", t_pal)
+        report.add(bench, f"G{m}_D{d}_pallas_speedup", t_jnp / max(t_pal, 1e-9))
+        report.add(bench, f"G{m}_D{d}_max_abs_diff", diff)
+    return worst
+
 
 if __name__ == "__main__":
     r = Report()

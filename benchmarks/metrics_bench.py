@@ -1,0 +1,188 @@
+"""TopoMetric benchmark: distance throughput, Gram kernel, parity, drift.
+
+Four panels (docs/ARCHITECTURE.md §TopoMetric):
+
+* **pairs/s** — batched sliced-Wasserstein and Sinkhorn-W2 throughput on
+  diagram pairs produced by the real reduce->persist pipeline;
+* **Gram** — Pallas pairwise-L1 kernel vs the jnp reference on SW
+  embeddings (speedup + max abs diff);
+* **parity** — the acceptance sweep: random small diagram pairs checked
+  against the host references (SW within rtol 1e-5 of ``sw_dense``;
+  Sinkhorn within 5% of exact W2) — failures are counted and raised;
+* **drift** — the change-detection demo: a ``community_churn_stream`` whose
+  churn schedule is quiet except for injected rewiring bursts, replayed
+  through a drift-scoring ``TopoStream``; the bench asserts every burst is
+  flagged and no quiet step is (zero false positives).
+
+  PYTHONPATH=src python -m benchmarks.metrics_bench [--quick]
+  PYTHONPATH=src python -m benchmarks.run --only metrics [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Report, timed, write_suite_json
+from repro.core.api import topological_signature
+from repro.core.delta import delta_step
+from repro.core.persistence_jax import Diagrams
+from repro.data import graphs as gdata
+from repro.data.temporal import community_churn_stream
+from repro.metrics import reference as mref
+from repro.metrics import sinkhorn_w2, sliced_wasserstein, sw_embedding
+from repro.metrics.testing import diagram_points, random_diagram
+from repro.stream import TopoStream, TopoStreamConfig
+
+CAP = 64.0
+
+
+def _pipeline_diagrams(key, batch: int, n: int) -> Diagrams:
+    g = gdata.erdos_renyi(key, batch, n, n, 0.18)
+    g = gdata.with_degree_filtration(g)
+    return topological_signature(g, dim=1, method="both",
+                                 edge_cap=128, tri_cap=256)
+
+
+def _bench_throughput(report: Report, quick: bool) -> None:
+    batch = 64 if quick else 256
+    key = jax.random.PRNGKey(31)
+    d = _pipeline_diagrams(key, 2 * batch, 24)
+    d1 = jax.tree.map(lambda x: x[0::2], d)
+    d2 = jax.tree.map(lambda x: x[1::2], d)
+
+    _, t_sw = timed(lambda a, b: sliced_wasserstein(a, b, k=1, cap=CAP), d1, d2)
+    report.add("metrics_sw", f"B{batch}_pairs_per_s", batch / max(t_sw, 1e-9))
+    _, t_sk = timed(lambda a, b: sinkhorn_w2(a, b, k=1, cap=CAP), d1, d2)
+    report.add("metrics_sinkhorn", f"B{batch}_pairs_per_s",
+               batch / max(t_sk, 1e-9))
+    _, t_emb = timed(lambda a: sw_embedding(a, k=1, cap=CAP), d)
+    report.add("metrics_sw_embedding", f"B{2*batch}_diagrams_per_s",
+               2 * batch / max(t_emb, 1e-9))
+
+
+def _bench_gram(report: Report, quick: bool) -> None:
+    from benchmarks.kernel_bench import bench_pairwise_gram
+
+    sizes = ((64, 256),) if quick else ((64, 256), (256, 512))
+    worst = bench_pairwise_gram(report, "metrics_gram", sizes)
+    if not worst < 1e-3:
+        raise AssertionError(
+            f"Pallas Gram diverges from jnp reference by {worst}")
+
+
+def _bench_parity(report: Report, quick: bool) -> tuple[int, int]:
+    """Random-pair sweep vs the host references; returns (checked, failed)."""
+    n_pairs = 60 if quick else 200
+    rng = np.random.default_rng(33)
+
+    pairs = [(random_diagram(rng, essential=int(rng.integers(0, 3))),
+              random_diagram(rng))
+             for _ in range(n_pairs)]
+    d1 = jax.tree.map(lambda *xs: jnp.stack(xs), *[a for a, _ in pairs])
+    d2 = jax.tree.map(lambda *xs: jnp.stack(xs), *[b for _, b in pairs])
+    sw = np.asarray(sliced_wasserstein(d1, d2, k=1, n_dirs=32, cap=CAP))
+    sk = np.asarray(sinkhorn_w2(d1, d2, k=1, cap=CAP))
+
+    checked = failed = 0
+    for i, (a, b) in enumerate(pairs):
+        pa, pb = diagram_points(a, k=1, cap=CAP), diagram_points(b, k=1, cap=CAP)
+        sw_ref = mref.sw_dense(pa, pb, n_dirs=32)
+        w2_ref = mref.wasserstein_exact(pa, pb, q=2.0)
+        checked += 2
+        tol = max(1e-5 * max(sw_ref, 1.0), 1e-5)
+        if abs(sw[i] - sw_ref) > tol:
+            failed += 1
+        if (abs(sk[i]) > 1e-4 if w2_ref == 0
+                else abs(sk[i] - w2_ref) / w2_ref > 0.05):
+            failed += 1
+    report.add("metrics_parity", "checked", checked)
+    report.add("metrics_parity", "failed", failed)
+    return checked, failed
+
+
+def _bench_drift(report: Report, quick: bool) -> tuple[int, int, int]:
+    """Burst detection on community churn; returns (bursts, flagged, false_pos).
+
+    Quiet segments carry no structural updates (the monitoring regime: the
+    stream is sampled faster than the network changes), so a false positive
+    would mean the drift scorer invented a diagram change; bursts rewire
+    ``churn`` edges at once and must all be flagged.
+    """
+    steps = 16 if quick else 32
+    churn = 8
+    burst_at = set(range(4, steps, 7))
+    sched = np.zeros(steps, np.int32)
+    for t in burst_at:
+        sched[t] = churn
+    g0, deltas = community_churn_stream(
+        jax.random.PRNGKey(34), batch=4, n_pad=24, n_vertices=20, n_comm=4,
+        p_in=0.45, p_out=0.05, steps=steps, churn=churn, churn_schedule=sched)
+    cfg = TopoStreamConfig(dim=1, method="both", edge_cap=160, tri_cap=384,
+                           drift_metric="sw", drift_threshold=1.0)
+    stream = TopoStream(g0, cfg)
+    t0 = time.perf_counter()
+    flagged = []
+    for t in range(steps):
+        stream.apply(delta_step(deltas, t))
+        if stream.last_anomaly.any():
+            flagged.append(t)
+    wall = time.perf_counter() - t0
+    hits = len(set(flagged) & burst_at)
+    false_pos = len(set(flagged) - burst_at)
+    report.add("metrics_drift", "steps", steps)
+    report.add("metrics_drift", "steps_per_s", steps / max(wall, 1e-9))
+    report.add("metrics_drift", "bursts", len(burst_at))
+    report.add("metrics_drift", "bursts_flagged", hits)
+    report.add("metrics_drift", "false_positives", false_pos)
+    report.add("metrics_drift", "skip_rate", stream.skip_rate())
+    return len(burst_at), hits, false_pos
+
+
+def run(report: Report, quick: bool = False) -> None:
+    _bench_throughput(report, quick)
+    _bench_gram(report, quick)
+    checked, failed = _bench_parity(report, quick)
+    bursts, hits, false_pos = _bench_drift(report, quick)
+    if failed:
+        raise AssertionError(
+            f"{failed}/{checked} distance checks diverged from the host "
+            "references")
+    if hits != bursts or false_pos:
+        raise AssertionError(
+            f"drift demo: {hits}/{bursts} bursts flagged, "
+            f"{false_pos} false positives")
+    print(f"[metrics_bench] parity OK: {checked} checks; drift OK: "
+          f"{hits}/{bursts} bursts flagged, 0 false positives")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small sweep (CI / CPU smoke)")
+    ap.add_argument("--out-dir", default="results",
+                    help="directory for BENCH_metrics.json")
+    args = ap.parse_args()
+    report = Report(quick=args.quick)
+    t0 = time.time()
+    ok = True
+    try:
+        run(report, quick=args.quick)
+    except Exception:
+        ok = False
+        raise
+    finally:
+        path = write_suite_json(
+            args.out_dir, "metrics",
+            "diagram distances + Gram kernel + parity + drift",
+            report.rows, wall_s=time.time() - t0, quick=args.quick, ok=ok)
+        print(f"wrote {path}")
+    print(report.csv())
+
+
+if __name__ == "__main__":
+    main()

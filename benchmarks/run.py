@@ -30,6 +30,7 @@ SUITES = {
     "kernels": ("benchmarks.kernel_bench", "Pallas kernel microbenchmarks"),
     "serve": ("benchmarks.serve_bench", "TopoServe throughput/latency + parity"),
     "stream": ("benchmarks.stream_bench", "TopoStream updates/s + skip-rate + parity"),
+    "metrics": ("benchmarks.metrics_bench", "diagram distances + Gram kernel + parity + drift"),
 }
 
 

@@ -207,6 +207,24 @@ class Diagrams:
             self.valid & (self.dim == k) & jnp.isinf(self.death), axis=-1
         )
 
+    # The one masking convention for downstream arithmetic (features,
+    # metrics): invalid rows carry NaN birth/death sentinels and essential
+    # classes carry +inf death, so both must be sanitized before any masked
+    # sum/sort touches the tensors.
+    def finite_birth(self) -> jax.Array:
+        """(..., S) birth with invalid-row NaN sentinels replaced by 0."""
+        return jnp.where(self.valid, jnp.nan_to_num(self.birth), 0.0)
+
+    def finite_death(self, cap: float) -> jax.Array:
+        """(..., S) death with NaN -> 0 and +inf (essential) capped at ``cap``."""
+        death = jnp.nan_to_num(self.death, nan=0.0, posinf=cap)
+        return jnp.where(self.valid, death, 0.0)
+
+    def finite_points(self, cap: float) -> tuple[jax.Array, jax.Array]:
+        """Sanitized ``(birth, death)`` pair; the masked-arithmetic layout
+        shared by ``repro.topo.features`` and ``repro.metrics``."""
+        return self.finite_birth(), self.finite_death(cap)
+
 
 def pairs_to_diagrams(
     fc: FilteredComplex, owner: jax.Array, positive: jax.Array, max_dim: int,

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.delta import (
@@ -123,14 +124,38 @@ def pa_growth_stream(key, batch: int, n_pad: int, n0: int, m: int,
 def community_churn_stream(key, batch: int, n_pad: int, n_vertices,
                            n_comm: int, p_in: float, p_out: float,
                            steps: int, churn: int,
-                           in_bias: float = 4.0) -> tuple[GraphBatch, DeltaBatch]:
+                           in_bias: float = 4.0,
+                           churn_schedule=None) -> tuple[GraphBatch, DeltaBatch]:
     """Planted-partition graph whose edges churn: per step and per graph,
     ``churn`` uniform-random existing edges are deleted and ``churn``
     community-biased non-edges are inserted.  f is the community label, so
     churn only moves adjacency.  Most churn lands inside the (dim+1)-core —
     the recompute-bound regime for TopoStream.
+
+    ``churn_schedule`` (optional, shape ``(steps,)`` ints ``<= churn``)
+    modulates the per-step churn volume: step ``t`` keeps only the first
+    ``churn_schedule[t]`` delete and insert slots (the rest become NOPs).
+    A mostly-small schedule with occasional ``churn``-sized spikes is the
+    injected-rewiring-burst workload for the TopoStream drift detector
+    (benchmarks/metrics_bench.py).
     """
     kc, ke, ks = jax.random.split(key, 3)
+    if churn_schedule is None:
+        churn_schedule = jnp.full((steps,), churn, jnp.int32)
+    else:
+        churn_schedule = jnp.asarray(churn_schedule, jnp.int32)
+        if churn_schedule.shape != (steps,):
+            raise ValueError(
+                f"churn_schedule shape {churn_schedule.shape} != ({steps},)")
+        try:  # host-side range check; skipped when traced under jit
+            sched = np.asarray(churn_schedule)
+        except jax.errors.TracerArrayConversionError:
+            sched = None
+        if sched is not None and ((sched < 0) | (sched > churn)).any():
+            raise ValueError(
+                f"churn_schedule entries must be in 0..churn={churn} "
+                f"(only churn op slots exist per step); got "
+                f"[{sched.min()}, {sched.max()}]")
     n_vertices = jnp.broadcast_to(jnp.asarray(n_vertices), (batch,))
     idx = jnp.arange(n_pad)
     mask = idx[None, :] < n_vertices[:, None]
@@ -151,8 +176,9 @@ def community_churn_stream(key, batch: int, n_pad: int, n_vertices,
         return jax.random.categorical(k, logits[:, None, :], axis=-1,
                                       shape=(batch, churn))
 
-    def step(carry, k):
+    def step(carry, inp):
         adj = carry  # (B, n_pad, n_pad) bool, upper-tri view via `upper`
+        k, active = inp
         kd, ki = jax.random.split(k)
         cur = adj & upper & live
         flat_del = pick(kd, cur.astype(jnp.float32))
@@ -161,10 +187,12 @@ def community_churn_stream(key, batch: int, n_pad: int, n_vertices,
         du, dv = flat_del // n_pad, flat_del % n_pad
         iu, iv = flat_ins // n_pad, flat_ins % n_pad
         # degenerate graphs (no edges / complete): categorical may return an
-        # index with zero weight — mask those ops out
+        # index with zero weight — mask those ops out.  The schedule gates
+        # how many of the ``churn`` slots are live this step.
         bidx = jnp.arange(batch)[:, None]
-        del_ok = cur[bidx, du, dv]
-        ins_ok = non[bidx, iu, iv]
+        slot_on = jnp.arange(churn)[None, :] < active
+        del_ok = cur[bidx, du, dv] & slot_on
+        ins_ok = non[bidx, iu, iv] & slot_on
         eu = jnp.concatenate([jnp.where(del_ok, du, -1),
                               jnp.where(ins_ok, iu, -1)], axis=-1)
         ev = jnp.concatenate([jnp.where(del_ok, dv, -1),
@@ -177,7 +205,8 @@ def community_churn_stream(key, batch: int, n_pad: int, n_vertices,
         imat = sym(jnp.zeros_like(adj).at[bidx, iu, iv].set(ins_ok))
         return (adj | imat) & ~dmat, (eu, ev, op)
 
-    _, (eu, ev, op) = lax.scan(step, g0.adj, jax.random.split(ks, steps))
+    _, (eu, ev, op) = lax.scan(
+        step, g0.adj, (jax.random.split(ks, steps), churn_schedule))
     return g0, _stack_delta(eu, ev, op)
 
 

@@ -1,0 +1,5 @@
+"""TopoIndex: persistence-diagram similarity index over SW/feature
+embeddings (docs/ARCHITECTURE.md §TopoIndex)."""
+from repro.index.topo_index import TopoIndex, TopoIndexConfig
+
+__all__ = ["TopoIndex", "TopoIndexConfig"]

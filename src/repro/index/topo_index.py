@@ -1,0 +1,188 @@
+"""TopoIndex: a similarity index over persistence-diagram embeddings.
+
+The metrics layer turns diagrams into fixed-size vectors whose pairwise L1
+distance is a diagram metric (``repro.metrics.sw_embedding``; optionally
+concatenated with the ``repro.topo.features`` signature vector).  TopoIndex
+stores those vectors host-side and answers batched k-nearest-neighbor
+queries by running the tiled Pallas Gram kernel
+(``repro.kernels.ops.pairwise_l1``) between the query embeddings and the
+index, then ``top_k`` over the negated distances — the "which known graphs
+look like this one" serving primitive (Aktas et al. §applications).
+
+Embedding contract (docs/ARCHITECTURE.md §TopoIndex):
+
+* the embedding width depends only on ``TopoIndexConfig`` (never on the
+  diagram tensor size ``S``), so diagrams produced by different serve
+  buckets / plans index into the same space;
+* ``embed`` is pure and jit-backed — ``add`` and ``query`` accept the
+  batched ``Diagrams`` layout directly;
+* distances returned by ``query`` are exactly the metric the Gram kernel
+  computes (L1 between embeddings; for the ``"sw"`` embedding that is the
+  anchored sliced-Wasserstein approximation of ``repro.metrics``).
+
+The index is deliberately exact and dense (a (Q, N) Gram per query batch);
+an ANN structure for >10⁶ graphs is a ROADMAP item.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.persistence_jax import Diagrams
+from repro.kernels import ops
+from repro.metrics.distances import sw_embedding
+from repro.topo.features import feature_vector
+
+EMBEDDINGS = ("sw", "features", "both")
+
+
+@dataclasses.dataclass(frozen=True)
+class TopoIndexConfig:
+    """Embedding + query policy (fully determines the embedding space)."""
+
+    embedding: str = "sw"      # "sw" | "features" | "both"
+    k: int = 1                 # homology dimension of the sw embedding
+    n_points: int = 16         # top-persistence points kept per diagram
+    n_dirs: int = 16           # SW direction-grid resolution
+    cap: float = 64.0          # essential-class death cap
+    res: int = 8               # persistence-image resolution (features)
+    max_dim: int = 1           # feature dims 0..max_dim (features)
+    feature_weight: float = 1.0  # scale of the features block ("both")
+
+    def __post_init__(self):
+        if self.embedding not in EMBEDDINGS:
+            raise ValueError(
+                f"unknown embedding {self.embedding!r}; want one of "
+                f"{EMBEDDINGS}")
+
+    @property
+    def width(self) -> int:
+        """Embedding width — fixed by the config, independent of S."""
+        w = 0
+        if self.embedding in ("sw", "both"):
+            w += self.n_dirs * 2 * self.n_points
+        if self.embedding in ("features", "both"):
+            w += (6 + self.res * self.res) * (self.max_dim + 1)
+        return w
+
+
+class TopoIndex:
+    """Exact kNN index over diagram embeddings.
+
+    >>> index = TopoIndex()
+    >>> index.add(diagrams, ids=["a", "b", "c"])
+    >>> ids, dists = index.query(query_diagrams, k=2)
+    """
+
+    def __init__(self, config: TopoIndexConfig | None = None):
+        self.config = config or TopoIndexConfig()
+        self._emb = np.zeros((0, self.config.width), np.float32)
+        self._ids: list[str] = []
+        # device-resident copy of _emb, built lazily and invalidated by add()
+        # so steady-state queries skip the O(N·D) host-to-device re-upload
+        self._emb_device: Optional[jax.Array] = None
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    @property
+    def ids(self) -> tuple[str, ...]:
+        return tuple(self._ids)
+
+    # ---------------------------------------------------------- embedding
+
+    def embed(self, d: Diagrams) -> jax.Array:
+        """(B, width) embedding of a batched Diagrams tensor."""
+        c = self.config
+        parts = []
+        if c.embedding in ("sw", "both"):
+            parts.append(sw_embedding(d, k=c.k, n_points=c.n_points,
+                                      n_dirs=c.n_dirs, cap=c.cap))
+        if c.embedding in ("features", "both"):
+            fv = feature_vector(d, max_dim=c.max_dim, res=c.res, cap=c.cap)
+            parts.append(c.feature_weight * fv)
+        emb = jnp.concatenate(parts, axis=-1)
+        if emb.ndim == 1:
+            emb = emb[None]
+        return emb.astype(jnp.float32)
+
+    # -------------------------------------------------------- add / query
+
+    def add(self, d: Diagrams, ids: Optional[Sequence[str]] = None) -> list[str]:
+        """Embed and append a batch; returns the assigned ids."""
+        emb = np.asarray(self.embed(d))
+        if ids is None:
+            ids = [f"g{len(self._ids) + i}" for i in range(emb.shape[0])]
+        ids = [str(i) for i in ids]
+        if len(ids) != emb.shape[0]:
+            raise ValueError(f"{len(ids)} ids for {emb.shape[0]} diagrams")
+        dup = set(ids) & set(self._ids)
+        if dup:
+            raise ValueError(f"duplicate ids: {sorted(dup)}")
+        self._emb = np.concatenate([self._emb, emb], axis=0)
+        self._ids.extend(ids)
+        self._emb_device = None
+        return ids
+
+    def _device_emb(self) -> jax.Array:
+        if self._emb_device is None:
+            self._emb_device = jnp.asarray(self._emb)
+        return self._emb_device
+
+    def query(self, d: Diagrams, k: int = 5) -> tuple[list[list[str]], np.ndarray]:
+        """Batched kNN: returns ``(ids, distances)``, nearest first.
+
+        ``ids`` is a (B, k') nested list and ``distances`` a (B, k') float32
+        array with ``k' = min(k, len(index))``.  The (Q, N) distance matrix
+        is one Pallas Gram call (``kernels/pairwise_gram.py``).
+        """
+        if not self._ids:
+            raise ValueError("query on an empty TopoIndex")
+        emb_q = self.embed(d)
+        gram = ops.pairwise_l1(emb_q, self._device_emb())
+        kk = min(int(k), len(self._ids))
+        neg, idx = jax.lax.top_k(-gram, kk)
+        dists = np.asarray(-neg, np.float32)
+        idx = np.asarray(idx)
+        ids = [[self._ids[j] for j in row] for row in idx]
+        return ids, dists
+
+    def gram(self) -> np.ndarray:
+        """(N, N) self-distance matrix of the whole index (clustering input)."""
+        e = self._device_emb()
+        return np.asarray(ops.pairwise_l1(e, e))
+
+    # -------------------------------------------------------- persistence
+
+    def save(self, path: str) -> None:
+        """Write embeddings + ids + config as one ``.npz``.
+
+        Writes to ``path`` verbatim (via a file handle — ``np.savez`` on a
+        bare path would append ``.npz`` and break the save/load round-trip).
+        """
+        with open(path, "wb") as fh:
+            np.savez(
+                fh,
+                emb=self._emb,
+                ids=np.asarray(self._ids, dtype=np.str_),
+                config=np.str_(json.dumps(dataclasses.asdict(self.config))),
+            )
+
+    @classmethod
+    def load(cls, path: str) -> "TopoIndex":
+        with np.load(path, allow_pickle=False) as z:
+            config = TopoIndexConfig(**json.loads(str(z["config"])))
+            index = cls(config)
+            emb = np.asarray(z["emb"], np.float32)
+            if emb.shape[1] != config.width:
+                raise ValueError(
+                    f"embedding width {emb.shape[1]} does not match config "
+                    f"width {config.width}")
+            index._emb = emb
+            index._ids = [str(i) for i in z["ids"]]
+        return index

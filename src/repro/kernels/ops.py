@@ -13,6 +13,7 @@ from repro.kernels.common_neighbors import common_neighbors_pallas
 from repro.kernels.domination import domination_pallas
 from repro.kernels.gf2_reduce import gf2_reduce_pallas
 from repro.kernels.kcore_peel import kcore_peel_pallas
+from repro.kernels.pairwise_gram import pairwise_l1_pallas
 
 
 def _interpret() -> bool:
@@ -47,6 +48,14 @@ def gf2_reduce(b: jax.Array, n_rows: int | None = None):
     _, owner, positive = gf2_reduce_pallas(
         b, interpret=_interpret(), n_rows=n_rows)
     return owner, positive
+
+
+def pairwise_l1(x: jax.Array, y: jax.Array, tile_m: int = 8,
+                tile_n: int = 128, tile_d: int = 128) -> jax.Array:
+    """(M, D) × (N, D) → (M, N) pairwise-L1 Gram over SW embeddings."""
+    return pairwise_l1_pallas(
+        x, y, tile_m=tile_m, tile_n=tile_n, tile_d=tile_d,
+        interpret=_interpret())
 
 
 def clustering_coefficients(adj: jax.Array, mask: jax.Array, tile: int = 128) -> jax.Array:

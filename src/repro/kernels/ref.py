@@ -38,6 +38,17 @@ def common_neighbors_ref(adj: jax.Array) -> jax.Array:
     return ((a @ a) * a).astype(jnp.int32)
 
 
+def pairwise_l1_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """gram[i, j] = Σ_d |x[i, d] − y[j, d]|.  (M, D) × (N, D) → (M, N) f32.
+
+    Materializes the full (M, N, D) broadcast — fine as an oracle; the
+    Pallas kernel tiles the same reduction through VMEM.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
+
+
 def gf2_reduce_ref(b: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Bit-packed GF(2) boundary reduction (delegates to the core module)."""
     from repro.core.persistence_jax import reduce_packed

@@ -1,0 +1,19 @@
+"""TopoMetric: batched persistence-diagram distances + host-side exact
+references (docs/ARCHITECTURE.md §TopoMetric).  The batched functions
+operate directly on the fixed-size ``Diagrams`` layout; ``reference`` holds
+the small-diagram oracles they are parity-tested against."""
+from repro.metrics.distances import (
+    direction_grid,
+    masked_points,
+    sinkhorn_w2,
+    sliced_wasserstein,
+    sw_embedding,
+)
+
+__all__ = [
+    "direction_grid",
+    "masked_points",
+    "sinkhorn_w2",
+    "sliced_wasserstein",
+    "sw_embedding",
+]

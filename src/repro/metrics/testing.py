@@ -1,0 +1,49 @@
+"""Synthetic Diagrams generators shared by tests and benchmarks.
+
+The parity sweeps (tests/test_metrics.py, benchmarks/metrics_bench.py) need
+random small diagrams in the exact tensor conventions of
+:class:`~repro.core.persistence_jax.Diagrams` — NaN birth/death sentinels on
+invalid rows, ``dim = -1`` padding, points scattered into arbitrary rows.
+One definition here keeps the sentinel convention from silently diverging
+between the two sweeps.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.persistence_jax import Diagrams
+
+
+def random_diagram(rng: np.random.Generator, s: int = 12,
+                   n: int | None = None, essential: int = 0, k: int = 1,
+                   scatter: bool = True) -> Diagrams:
+    """A random dim-``k`` Diagrams tensor of size ``s`` with ``n`` points.
+
+    ``essential`` of the points get ``death = +inf``; ``scatter`` places
+    points in random rows (exercising padding invariance) instead of the
+    leading slots.  ``n`` defaults to uniform 0..8.
+    """
+    n = int(rng.integers(0, 9)) if n is None else n
+    b = np.full(s, np.nan, np.float32)
+    d = np.full(s, np.nan, np.float32)
+    dim = np.full(s, -1, np.int32)
+    val = np.zeros(s, bool)
+    bs = rng.uniform(0, 8, n).astype(np.float32)
+    ds = bs + rng.uniform(0.2, 6, n).astype(np.float32)
+    ds[:essential] = np.inf
+    idx = rng.permutation(s)[:n] if scatter else np.arange(n)
+    b[idx], d[idx], dim[idx], val[idx] = bs, ds, k, True
+    return Diagrams(birth=jnp.asarray(b), death=jnp.asarray(d),
+                    dim=jnp.asarray(dim), valid=jnp.asarray(val))
+
+
+def diagram_points(d: Diagrams, k: int = 1, cap: float = 64.0):
+    """Host-side ``[(birth, death)]`` extraction with the ``cap`` convention
+    (the bridge from the tensor layout to the reference oracles)."""
+    from repro.metrics.reference import cap_points
+
+    b, dd = np.asarray(d.birth), np.asarray(d.death)
+    sel = np.asarray(d.valid) & (np.asarray(d.dim) == k)
+    return cap_points(list(zip(b[sel], dd[sel])), cap)

@@ -1,0 +1,200 @@
+"""SimilarityServe: graph-similarity queries over TopoServe + TopoIndex.
+
+The third serving surface (after stateless TopoServe and session-ful
+StreamServe): a client submits a *graph* and gets back the ``k`` nearest
+*indexed* graphs with their diagram distances.  The pipeline is
+
+```
+submit(edges, n, f, k) ──► TopoServe.submit          (bucketed PD batch path)
+drain() ──► TopoServe.drain()                         (diagrams computed)
+        ──► stack resolved per-query diagram rows, ONE TopoIndex.query
+            (one embed + one Pallas Gram per drain, not per request)
+        ──► resolve SimilarityFuture(ids, distances, diagrams)
+```
+
+Indexing goes through the same diagram path (``add`` submits to the inner
+server and indexes at drain), so corpus and queries share compiled plans
+and the embedding contract of ``TopoIndex`` — a graph served from any
+padding bucket lands in the same embedding space.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.index.topo_index import TopoIndex, TopoIndexConfig
+from repro.serve.futures import ServeFuture
+from repro.serve.topo_serve import TopoFuture, TopoServe, TopoServeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SimilarityResult:
+    """kNN answer for one query graph: parallel id/distance lists plus the
+    query's own Diagrams slice (so clients can inspect or re-index it)."""
+
+    ids: tuple[str, ...]
+    distances: tuple[float, ...]
+    diagrams: object  # per-graph Diagrams slice (leaves shaped (S,))
+
+
+class SimilarityFuture(ServeFuture):
+    """Handle for one similarity query; resolves to a SimilarityResult."""
+
+    __slots__ = ("k",)
+
+    def __init__(self, k: int):
+        super().__init__()
+        self.k = k
+
+
+def _stack_by_shape(rows):
+    """Group per-graph Diagrams rows by leaf shape and stack each group.
+
+    Rows resolved in one drain can come from different padding buckets and
+    therefore carry different tensor sizes S; the embedding is S-independent
+    but ``jnp.stack`` is not, so batching happens per shape class.  Yields
+    ``(original_indices, stacked_batch)``.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for i, r in enumerate(rows):
+        groups.setdefault(tuple(r.birth.shape), []).append(i)
+    for idxs in groups.values():
+        batch = jax.tree.map(lambda *xs: jax.numpy.stack(xs),
+                             *[rows[i] for i in idxs])
+        yield idxs, batch
+
+
+class SimilarityServe:
+    """Similarity-search front end over a TopoServe and a TopoIndex.
+
+    >>> server = SimilarityServe()
+    >>> server.add(edges=[(0, 1), (1, 2), (2, 0)], n_vertices=3, gid="tri")
+    >>> fut = server.submit(edges=[(0, 1), (1, 2)], n_vertices=3, k=1)
+    >>> server.drain()
+    >>> fut.result().ids
+    ('tri',)
+    """
+
+    def __init__(self, index: TopoIndex | None = None,
+                 config: TopoServeConfig | None = None,
+                 index_config: TopoIndexConfig | None = None,
+                 default_k: int = 5, mesh=None):
+        self.index = index if index is not None else TopoIndex(index_config)
+        self.server = TopoServe(config, mesh=mesh)
+        self.default_k = int(default_k)
+        self._lock = threading.Lock()
+        # serializes drains: the TopoIndex is not internally synchronized, so
+        # concurrent index.add/query (embedding store mutation) must not race
+        self._drain_lock = threading.Lock()
+        self._pending_queries: list[tuple[TopoFuture, SimilarityFuture]] = []
+        self._pending_adds: list[tuple[TopoFuture, Optional[str]]] = []
+        self.stats = {"queries": 0, "indexed": 0, "add_failures": 0}
+
+    # ------------------------------------------------------------- ingest
+
+    def add(self, edges: Sequence[tuple[int, int]], n_vertices: int,
+            f: Sequence[float] | None = None,
+            gid: Optional[str] = None) -> None:
+        """Enqueue one graph for indexing (takes effect at the next drain)."""
+        fut = self.server.submit(edges=edges, n_vertices=n_vertices, f=f)
+        with self._lock:
+            self._pending_adds.append((fut, gid))
+
+    def submit(self, edges: Sequence[tuple[int, int]], n_vertices: int,
+               f: Sequence[float] | None = None,
+               k: int | None = None) -> SimilarityFuture:
+        """Enqueue one similarity query; resolved by a later ``drain()``."""
+        fut = self.server.submit(edges=edges, n_vertices=n_vertices, f=f)
+        sim = SimilarityFuture(k=int(k) if k is not None else self.default_k)
+        with self._lock:
+            self._pending_queries.append((fut, sim))
+        return sim
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending_queries) + len(self._pending_adds)
+
+    # ------------------------------------------------------------- drain
+
+    def drain(self) -> int:
+        """Drain the inner server, index pending adds, answer queries.
+
+        Adds are indexed before queries are answered, so a corpus graph and
+        a query submitted before the same drain see each other.  Items whose
+        inner future is still unresolved (submitted concurrently with this
+        drain, after the inner server flushed) stay pending for the next
+        drain.  Returns the number of similarity queries resolved.
+        """
+        with self._drain_lock:
+            self.server.drain()
+            with self._lock:
+                adds, self._pending_adds = self._pending_adds, []
+                queries, self._pending_queries = self._pending_queries, []
+
+            done_adds, later_adds = [], []
+            for (f, gid) in adds:
+                if not f.done():  # raced a concurrent submit: keep for later
+                    later_adds.append((f, gid))
+                    continue
+                try:
+                    done_adds.append((f.result(timeout=0), gid))
+                except Exception:  # a failed PD batch must not wedge indexing
+                    self.stats["add_failures"] += 1
+            for idxs, batch in _stack_by_shape([r for (r, _) in done_adds]):
+                ids = [done_adds[i][1] for i in idxs]
+                try:
+                    self.index.add(
+                        batch, ids=None if all(i is None for i in ids)
+                        else [i if i is not None
+                              else f"g{len(self.index) + j}"
+                              for j, i in enumerate(ids)])
+                    self.stats["indexed"] += len(idxs)
+                except Exception:  # e.g. duplicate gid: drop group, continue
+                    self.stats["add_failures"] += len(idxs)
+
+            resolved = 0
+            ready: list[tuple[object, SimilarityFuture]] = []
+            later_queries = []
+            for (f, sim) in queries:
+                if not f.done():
+                    later_queries.append((f, sim))
+                    continue
+                try:
+                    ready.append((f.result(timeout=0), sim))
+                except Exception as e:  # propagate batch failure, don't wedge
+                    sim._fail(e)
+            if later_adds or later_queries:
+                with self._lock:  # prepend: next drain sees FIFO order
+                    self._pending_adds[:0] = later_adds
+                    self._pending_queries[:0] = later_queries
+            if not ready:
+                return 0
+            if not len(self.index):
+                err = ValueError("similarity query against an empty index "
+                                 "(add() graphs before querying)")
+                for (_, sim) in ready:
+                    sim._fail(err)
+                return 0
+            for idxs, batch in _stack_by_shape([r for (r, _) in ready]):
+                sims = [ready[i][1] for i in idxs]
+                try:
+                    k_max = max(sim.k for sim in sims)
+                    ids, dists = self.index.query(batch, k=k_max)
+                except Exception as e:  # resolve, never wedge waiting clients
+                    for sim in sims:
+                        sim._fail(e)
+                    continue
+                for j, (i, sim) in enumerate(zip(idxs, sims)):
+                    kk = min(sim.k, len(ids[j]))
+                    sim._resolve(SimilarityResult(
+                        ids=tuple(ids[j][:kk]),
+                        distances=tuple(float(x) for x in dists[j][:kk]),
+                        diagrams=ready[i][0],
+                    ))
+                    resolved += 1
+            self.stats["queries"] += resolved
+            return resolved

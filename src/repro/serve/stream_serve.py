@@ -32,8 +32,11 @@ class StreamFuture(ServeFuture):
 
     ``result()`` returns the session's maintained Diagrams as of this step;
     ``info`` (available once done) is that step's verdict summary:
-    ``{"graph_updates", "hits", "coral_hits", "prunit_hits", "recomputes"}``.
-    Thread-safe plumbing lives in ``ServeFuture``.
+    ``{"graph_updates", "hits", "coral_hits", "prunit_hits", "recomputes",
+    "anomalies"}`` plus, when the session scores drift
+    (``TopoStreamConfig.drift_metric``), ``"drift"`` — the per-graph
+    diagram-distance array of this step — and ``"anomaly"`` — its
+    thresholded flags.  Thread-safe plumbing lives in ``ServeFuture``.
     """
 
     __slots__ = ("info", "session_id")
@@ -80,7 +83,7 @@ class StreamServe:
         self._stopped = threading.Event()
         self._closed_stats = {k: 0 for k in
                               ("graph_updates", "hits", "coral_hits",
-                               "prunit_hits", "recomputes")}
+                               "prunit_hits", "recomputes", "anomalies")}
         self._n_closed = 0
 
     # ----------------------------------------------------------- sessions
@@ -200,7 +203,10 @@ class StreamServe:
             after = sess.stream.stats
             info = {k: after[k] - before[k] for k in
                     ("graph_updates", "hits", "coral_hits",
-                     "prunit_hits", "recomputes")}
+                     "prunit_hits", "recomputes", "anomalies")}
+            if sess.stream.config.drift_metric is not None:
+                info["drift"] = sess.stream.last_drift.copy()
+                info["anomaly"] = sess.stream.last_anomaly.copy()
             fut._resolve(d, info)
             applied += 1
         return applied

@@ -56,7 +56,17 @@ _ALL_DIM_METHODS = ("prunit", "none")
 
 @dataclasses.dataclass(frozen=True)
 class TopoStreamConfig:
-    """Pipeline parameters + invalidation policy for one stream session."""
+    """Pipeline parameters + invalidation policy for one stream session.
+
+    Drift scoring (``drift_metric="sw"``): each apply step also reports, per
+    graph, the sliced-Wasserstein distance between the previous and the new
+    cached ``PD_drift_dim`` — cache hits are provably distance 0 (the
+    theorems certify the diagram did not move), so only recomputed graphs
+    pay the embedding/distance cost.  ``last_drift`` / ``last_anomaly``
+    expose the scores; a score above ``drift_threshold`` flags an anomaly
+    (the Azamir–Bennis–Michel change-detection loop as a serve-time
+    by-product).
+    """
 
     dim: int = 1
     method: str = "both"
@@ -68,6 +78,11 @@ class TopoStreamConfig:
     exact_dims: str = "target"   # "target" (coral+prunit) | "all" (prunit)
     recompute_pad: str = "pow2"  # "pow2" | "full" sub-batch padding policy
     check_caps: bool = True      # verify simplex caps still hold after updates
+    drift_metric: str | None = None  # None (off) | "sw"
+    drift_dim: int | None = None     # diagram dimension scored (default: dim)
+    drift_threshold: float = 1.0     # score > threshold ⟹ anomaly flag
+    drift_n_dirs: int = 16           # SW direction-grid resolution
+    drift_cap: float = 64.0          # essential-class death cap
 
     def __post_init__(self):
         if self.method not in REDUCTIONS:
@@ -83,6 +98,20 @@ class TopoStreamConfig:
         if self.recompute_pad not in ("pow2", "full"):
             raise ValueError(f"recompute_pad must be 'pow2' or 'full', "
                              f"got {self.recompute_pad!r}")
+        if self.drift_metric not in (None, "sw"):
+            raise ValueError(f"drift_metric must be None or 'sw', "
+                             f"got {self.drift_metric!r}")
+        if self.drift_dim is not None and not (0 <= self.drift_dim <= self.dim):
+            raise ValueError(
+                f"drift_dim {self.drift_dim} outside computed dims 0..{self.dim}")
+        if (self.drift_metric is not None and self.drift_dim is not None
+                and self.drift_dim < self.dim and self.exact_dims != "all"):
+            # coral hits leave dims < dim stale, so a later recompute would
+            # misattribute the accumulated sub-target movement to one step
+            raise ValueError(
+                f"drift_dim {self.drift_dim} < dim {self.dim} requires "
+                f"exact_dims='all' (with exact_dims='target' the scored "
+                f"dimension can go stale on coral hits)")
 
 
 @jax.tree_util.register_dataclass
@@ -244,6 +273,9 @@ class TopoStream:
         self._elig = eligibility_matrix(g, c.sublevel)
         self._all_dims_exact = np.full(
             (g.batch,), c.method in _ALL_DIM_METHODS, bool)
+        # drift scoring state (zero-cost when drift_metric is None)
+        self.last_drift = np.zeros((g.batch,), np.float32)
+        self.last_anomaly = np.zeros((g.batch,), bool)
         self.stats = {
             "applied": 0,            # apply() calls
             "graph_updates": 0,      # (graph, step) pairs with a real change
@@ -253,6 +285,7 @@ class TopoStream:
             "recomputes": 0,         # ... that re-executed the plan
             "recompute_batches": 0,  # plan executions
             "recomputed_rows": 0,    # padded rows executed (cost proxy)
+            "anomalies": 0,          # drift scores above drift_threshold
         }
 
     # ------------------------------------------------------------ accessors
@@ -311,11 +344,20 @@ class TopoStream:
                 f"tri_cap={c.tri_cap}) for graphs {bad}; diagrams would be "
                 f"truncated — resize the session caps")
 
+        drift = np.zeros((g_new.batch,), np.float32)
         if needs.any():
             idx = np.nonzero(needs)[0]
+            old = self._diagrams
             self._diagrams = self._recompute(g_new, idx)
             self.stats["recomputes"] += int(needs.sum())
             self._all_dims_exact[idx] = c.method in _ALL_DIM_METHODS
+            if c.drift_metric == "sw":
+                drift[idx] = self._drift_scores(old, self._diagrams, idx)
+
+        if c.drift_metric is not None:
+            self.last_drift = drift
+            self.last_anomaly = drift > c.drift_threshold
+            self.stats["anomalies"] += int(self.last_anomaly.sum())
 
         # coral-only hits leave dims < dim stale for that graph
         self._all_dims_exact[coral & ~prunit] = False
@@ -330,6 +372,29 @@ class TopoStream:
         self._core = verdict.core_mask
         self._elig = verdict.elig
         return self._diagrams
+
+    def _drift_scores(self, old: Diagrams, new: Diagrams,
+                      idx: np.ndarray) -> np.ndarray:
+        """SW distance between previous and fresh diagrams of ``idx`` graphs.
+
+        Hits are skipped by construction (their diagram provably did not
+        move, so the score is exactly 0); the gather is padded to the next
+        power of two so the jitted distance sees the same bounded ladder of
+        shapes as the recompute path.
+        """
+        from repro.metrics.distances import sliced_wasserstein
+
+        c = self.config
+        k = len(idx)
+        r = min(old.birth.shape[0], 1 << (k - 1).bit_length()) if k else 0
+        idx_p = np.concatenate([idx, np.full(r - k, idx[0], idx.dtype)])
+        jidx = jnp.asarray(idx_p)
+        rows = lambda d: jax.tree.map(lambda x: x[jidx], d)
+        scores = sliced_wasserstein(
+            rows(old), rows(new),
+            k=c.drift_dim if c.drift_dim is not None else c.dim,
+            n_dirs=c.drift_n_dirs, cap=c.drift_cap)
+        return np.asarray(scores, np.float32)[:k]
 
     def _recompute(self, g_new: GraphBatch, idx: np.ndarray) -> Diagrams:
         """Re-execute the plan on the invalidated graphs only.

@@ -21,16 +21,6 @@ import jax.numpy as jnp
 from repro.core.persistence_jax import Diagrams
 
 
-def _finite_death(d: Diagrams, cap: float) -> jax.Array:
-    # invalid rows carry NaN birth/death; sanitize before masked arithmetic
-    death = jnp.nan_to_num(d.death, nan=0.0, posinf=cap)
-    return jnp.where(d.valid, death, 0.0)
-
-
-def _finite_birth(d: Diagrams) -> jax.Array:
-    return jnp.where(d.valid, jnp.nan_to_num(d.birth), 0.0)
-
-
 def betti_curve(d: Diagrams, k: int, grid: jax.Array) -> jax.Array:
     """(..., G) number of dim-k classes alive at each grid value."""
     sel = d.valid & (d.dim == k)
@@ -45,7 +35,7 @@ def persistence_stats(d: Diagrams, k: int, cap: float = 64.0) -> jax.Array:
     sel = (d.valid & (d.dim == k)).astype(jnp.float32)
     n = jnp.sum(sel, axis=-1)
     nz = jnp.maximum(n, 1.0)
-    death = _finite_death(d, cap)
+    death = d.finite_death(cap)
     pers = jnp.where(sel > 0, death - d.birth, 0.0)
     birth = jnp.where(sel > 0, d.birth, 0.0)
     return jnp.stack([
@@ -63,8 +53,8 @@ def persistence_image(d: Diagrams, k: int, res: int = 8,
                       sigma: float = 1.0, cap: float = 64.0) -> jax.Array:
     """(..., res, res) Gaussian-weighted persistence surface on (birth, pers)."""
     sel = (d.valid & (d.dim == k)).astype(jnp.float32)
-    death = _finite_death(d, cap)
-    birth0 = _finite_birth(d)
+    death = d.finite_death(cap)
+    birth0 = d.finite_birth()
     pers = jnp.clip(death - birth0, 0.0, hi - lo)
     birth = jnp.clip(birth0, lo, hi)
     grid = jnp.linspace(lo, hi, res)
@@ -82,8 +72,8 @@ def persistence_landscape(d: Diagrams, k: int, grid: jax.Array,
                           n_levels: int = 3, cap: float = 64.0) -> jax.Array:
     """(..., n_levels, G) landscape functions lambda_1..lambda_n on grid."""
     sel = d.valid & (d.dim == k)
-    death = _finite_death(d, cap)
-    b = _finite_birth(d)[..., :, None]
+    death = d.finite_death(cap)
+    b = d.finite_birth()[..., :, None]
     dd = death[..., :, None]
     tent = jnp.maximum(jnp.minimum(grid - b, dd - grid), 0.0)
     tent = jnp.where(sel[..., :, None], tent, -jnp.inf)

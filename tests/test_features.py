@@ -1,0 +1,103 @@
+"""Direct unit tests for repro.topo.features against hand-computed tiny
+diagrams (previously only covered indirectly via test_topo_serve.py)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.persistence_jax import Diagrams
+from repro.topo.features import (
+    betti_curve,
+    feature_vector,
+    persistence_image,
+    persistence_landscape,
+    persistence_stats,
+)
+
+
+def make_diagram(rows, s=8):
+    """rows: [(birth, death, dim)] placed in the leading tensor slots."""
+    b = np.full(s, np.nan, np.float32)
+    d = np.full(s, np.nan, np.float32)
+    dim = np.full(s, -1, np.int32)
+    val = np.zeros(s, bool)
+    for i, (bb, dd, kk) in enumerate(rows):
+        b[i], d[i], dim[i], val[i] = bb, dd, kk, True
+    return Diagrams(birth=jnp.asarray(b), death=jnp.asarray(d),
+                    dim=jnp.asarray(dim), valid=jnp.asarray(val))
+
+
+# two dim-0 classes: (1, 3) finite, (2, inf) essential
+D0 = make_diagram([(1.0, 3.0, 0), (2.0, np.inf, 0)])
+
+
+def test_betti_curve_hand_computed():
+    grid = jnp.asarray([0.0, 1.0, 2.0, 3.0, 4.0])
+    got = np.asarray(betti_curve(D0, 0, grid))
+    # (1,3) alive on [1,3); (2,inf) alive on [2,inf)
+    np.testing.assert_array_equal(got, [0.0, 1.0, 2.0, 1.0, 1.0])
+    # no dim-1 classes anywhere
+    np.testing.assert_array_equal(np.asarray(betti_curve(D0, 1, grid)), 0.0)
+
+
+def test_persistence_stats_hand_computed():
+    got = np.asarray(persistence_stats(D0, 0, cap=10.0))
+    # [count, betti, total-pers, max-pers, mean-birth, mean-death]
+    # pers: (3-1) + (10-2) = 10 with the essential death capped at 10
+    np.testing.assert_allclose(
+        got, [2.0, 1.0, 10.0, 8.0, 1.5, 6.5], rtol=1e-6)
+
+
+def test_persistence_stats_empty_dimension_is_zero():
+    np.testing.assert_array_equal(
+        np.asarray(persistence_stats(D0, 1, cap=10.0)), 0.0)
+
+
+def test_persistence_image_mass_location_and_weighting():
+    # single point, birth 4, persistence 4 -> peak at grid cell (4, 4)
+    d = make_diagram([(4.0, 8.0, 0)])
+    res, hi = 9, 32.0  # grid step 4 -> (4, 4) is exactly cell (1, 1)
+    img = np.asarray(persistence_image(d, 0, res=res, lo=0.0, hi=hi,
+                                       sigma=1.0, cap=64.0))
+    assert img.shape == (res, res)
+    assert np.unravel_index(img.argmax(), img.shape) == (1, 1)
+    # persistence weighting: doubling persistence more than doubles the mass
+    d2 = make_diagram([(4.0, 12.0, 0)])
+    img2 = np.asarray(persistence_image(d2, 0, res=res, lo=0.0, hi=hi,
+                                        sigma=1.0, cap=64.0))
+    assert img2.sum() > 1.5 * img.sum()
+    # empty diagram -> identically zero image
+    empty = make_diagram([])
+    np.testing.assert_array_equal(
+        np.asarray(persistence_image(empty, 0, res=res)), 0.0)
+
+
+def test_persistence_landscape_hand_computed():
+    grid = jnp.arange(7.0)
+    d = make_diagram([(0.0, 4.0, 0), (2.0, 6.0, 0)])
+    got = np.asarray(persistence_landscape(d, 0, grid, n_levels=2, cap=64.0))
+    lam1 = [0.0, 1.0, 2.0, 1.0, 2.0, 1.0, 0.0]   # max of the two tents
+    lam2 = [0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0]   # their overlap at x=3
+    np.testing.assert_allclose(got, [lam1, lam2], rtol=1e-6)
+
+
+def test_invalid_and_wrong_dim_rows_are_inert():
+    grid = jnp.arange(7.0)
+    noisy = make_diagram([(1.0, 3.0, 0), (2.0, np.inf, 0),
+                          (0.5, 5.0, 1)])       # extra dim-1 row
+    for fn in (lambda d: betti_curve(d, 0, grid),
+               lambda d: persistence_stats(d, 0, cap=10.0),
+               lambda d: persistence_image(d, 0),
+               lambda d: persistence_landscape(d, 0, grid)):
+        np.testing.assert_allclose(
+            np.asarray(fn(noisy)), np.asarray(fn(D0)), rtol=1e-6)
+
+
+def test_feature_vector_shape_and_batching():
+    batch = jax.tree.map(lambda *xs: jnp.stack(xs), D0, D0, D0)
+    fv = feature_vector(batch, max_dim=1, res=4)
+    assert fv.shape == (3, (6 + 16) * 2)
+    np.testing.assert_allclose(np.asarray(fv[0]), np.asarray(fv[2]))
+    single = feature_vector(D0, max_dim=1, res=4)
+    np.testing.assert_allclose(np.asarray(fv[0]), np.asarray(single))

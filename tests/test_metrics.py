@@ -1,0 +1,204 @@
+"""TopoMetric: batched diagram distances vs the host-side exact references.
+
+The acceptance contract (ISSUE 3): batched sliced-Wasserstein within rtol
+1e-5 of its dense reference and Sinkhorn-2-Wasserstein within 5% of exact
+W2 on >= 200 random small diagram pairs; the Pallas pairwise Gram matches
+its jnp reference at fp32 tolerance; self-distance 0 and symmetry hold
+under masking/padding.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import from_edge_lists, topological_signature
+from repro.core.persistence_jax import Diagrams, diagrams_to_numpy
+from repro.kernels import ops, ref as kref
+from repro.metrics import (
+    sinkhorn_w2,
+    sliced_wasserstein,
+    sw_embedding,
+)
+from repro.metrics import reference as ref
+from repro.metrics.testing import diagram_points, random_diagram
+
+CAP = 64.0
+N_PAIRS = 200
+
+rand_diagram = random_diagram  # shared generator (repro.metrics.testing)
+
+
+def points(dg, k=1):
+    return diagram_points(dg, k=k, cap=CAP)
+
+
+def stack(diagrams):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *diagrams)
+
+
+@pytest.fixture(scope="module")
+def random_pairs():
+    rng = np.random.default_rng(11)
+    pairs = []
+    for i in range(N_PAIRS):
+        e1 = int(rng.integers(0, 3))
+        pairs.append((rand_diagram(rng, essential=e1), rand_diagram(rng)))
+    return pairs
+
+
+# ---------------------------------------------------------------- parity
+
+def test_sliced_wasserstein_matches_dense_reference(random_pairs):
+    d1 = stack([a for a, _ in random_pairs])
+    d2 = stack([b for _, b in random_pairs])
+    got = np.asarray(sliced_wasserstein(d1, d2, k=1, n_dirs=32, cap=CAP))
+    assert got.shape == (N_PAIRS,)
+    for i, (a, b) in enumerate(random_pairs):
+        want = ref.sw_dense(points(a), points(b), n_dirs=32)
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
+
+
+def test_sinkhorn_within_5pct_of_exact_w2(random_pairs):
+    d1 = stack([a for a, _ in random_pairs])
+    d2 = stack([b for _, b in random_pairs])
+    got = np.asarray(sinkhorn_w2(d1, d2, k=1, cap=CAP))
+    for i, (a, b) in enumerate(random_pairs):
+        want = ref.wasserstein_exact(points(a), points(b), q=2.0)
+        if want == 0.0:
+            assert abs(got[i]) < 1e-4, i
+        else:
+            assert abs(got[i] - want) / want < 0.05, (i, got[i], want)
+
+
+def test_hungarian_matches_scipy():
+    scipy_opt = pytest.importorskip("scipy.optimize")
+    rng = np.random.default_rng(5)
+    for _ in range(30):
+        m = int(rng.integers(1, 10))
+        c = rng.uniform(0, 5, (m, m))
+        r, cc = scipy_opt.linear_sum_assignment(c)
+        np.testing.assert_allclose(
+            ref.hungarian_cost(c), float(c[r, cc].sum()), rtol=1e-12)
+
+
+def test_reference_known_values():
+    # single point vs empty: everything pays its distance to the diagonal
+    assert ref.bottleneck_exact([(0.0, 4.0)], []) == pytest.approx(2.0)
+    assert ref.wasserstein_exact([(0.0, 2.0)], [], q=2.0) == pytest.approx(
+        np.sqrt(2.0))
+    # matching beats the diagonal when points are close
+    assert ref.bottleneck_exact([(0.0, 4.0)], [(1.0, 4.0)]) == pytest.approx(1.0)
+    assert ref.wasserstein_exact([(0.0, 4.0)], [(1.0, 4.0)], q=2.0) == (
+        pytest.approx(1.0))
+    assert ref.bottleneck_exact([], []) == 0.0
+    assert ref.sw_dense([(0.0, 2.0)], [(0.0, 2.0)]) == 0.0
+
+
+# ------------------------------------------------- masking / metric axioms
+
+def test_self_distance_zero_and_symmetry_under_padding():
+    rng = np.random.default_rng(3)
+    a = rand_diagram(rng, n=5, essential=1)
+    b = rand_diagram(rng, n=3)
+    for fn in (lambda x, y: sliced_wasserstein(x, y, k=1, cap=CAP),
+               lambda x, y: sinkhorn_w2(x, y, k=1, cap=CAP)):
+        assert float(fn(a, a)) == pytest.approx(0.0, abs=1e-5)
+        assert float(fn(a, b)) == pytest.approx(float(fn(b, a)), rel=1e-6)
+        assert float(fn(a, b)) > 0
+
+
+def test_row_scatter_and_tensor_size_invariance():
+    # same multiset of points in different rows and different tensor sizes S
+    rng = np.random.default_rng(9)
+    bs = np.array([1.0, 2.5], np.float32)
+    ds = np.array([4.0, np.inf], np.float32)
+
+    def build(s, order):
+        b = np.full(s, np.nan, np.float32)
+        d = np.full(s, np.nan, np.float32)
+        dim = np.full(s, -1, np.int32)
+        val = np.zeros(s, bool)
+        b[order], d[order] = bs, ds
+        dim[order], val[order] = 1, True
+        return Diagrams(birth=jnp.asarray(b), death=jnp.asarray(d),
+                        dim=jnp.asarray(dim), valid=jnp.asarray(val))
+
+    a = build(8, np.array([0, 1]))
+    b = build(8, np.array([6, 2]))
+    c = build(20, np.array([17, 3]))
+    assert float(sliced_wasserstein(a, b, k=1, cap=CAP)) == 0.0
+    assert float(sliced_wasserstein(a, c, k=1, cap=CAP)) == 0.0  # S differs
+    assert float(sinkhorn_w2(a, b, k=1, cap=CAP)) == pytest.approx(0.0, abs=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(sw_embedding(a, k=1, cap=CAP)),
+        np.asarray(sw_embedding(b, k=1, cap=CAP)), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(sw_embedding(a, k=1, cap=CAP)),
+        np.asarray(sw_embedding(c, k=1, cap=CAP)), atol=1e-6)
+
+
+def test_wrong_dimension_rows_are_inert():
+    rng = np.random.default_rng(4)
+    a = rand_diagram(rng, n=4, k=1, scatter=False)  # occupies rows 0..3
+    noisy = Diagrams(  # add a dim-0 row; k=1 distances must not see it
+        birth=a.birth.at[5].set(0.5), death=a.death.at[5].set(3.5),
+        dim=a.dim.at[5].set(0), valid=a.valid.at[5].set(True))
+    assert float(sliced_wasserstein(a, noisy, k=1, cap=CAP)) == 0.0
+    assert float(sinkhorn_w2(a, noisy, k=1, cap=CAP)) == pytest.approx(
+        0.0, abs=1e-5)
+
+
+def test_empty_vs_empty_and_empty_vs_nonempty():
+    rng = np.random.default_rng(6)
+    empty = rand_diagram(rng, n=0)
+    one = rand_diagram(rng, n=1)
+    assert float(sliced_wasserstein(empty, empty, k=1, cap=CAP)) == 0.0
+    assert float(sinkhorn_w2(empty, empty, k=1, cap=CAP)) == 0.0
+    d = float(sliced_wasserstein(empty, one, k=1, cap=CAP))
+    want = ref.sw_dense([], points(one))
+    np.testing.assert_allclose(d, want, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------ Pallas Gram
+
+def test_pairwise_gram_matches_jnp_reference():
+    rng = np.random.default_rng(12)
+    for (m, n, d) in ((5, 7, 33), (64, 64, 256), (130, 40, 257)):
+        x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+        y = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        got = np.asarray(ops.pairwise_l1(x, y))
+        want = np.asarray(kref.pairwise_l1_ref(x, y))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-4)
+
+
+def test_gram_over_embeddings_is_a_metric_surface():
+    rng = np.random.default_rng(13)
+    diags = stack([rand_diagram(rng) for _ in range(12)])
+    emb = sw_embedding(diags, k=1, n_points=8, n_dirs=8, cap=CAP)
+    gram = np.asarray(ops.pairwise_l1(emb, emb))
+    np.testing.assert_allclose(np.diag(gram), 0.0, atol=1e-5)
+    np.testing.assert_allclose(gram, gram.T, rtol=1e-6, atol=1e-5)
+    assert (gram >= -1e-5).all()
+
+
+# ---------------------------------------------------- end-to-end pipeline
+
+def test_distances_on_pipeline_diagrams_match_reference():
+    """Diagrams from the real reduce->persist pipeline, not synthetic rows."""
+    g = from_edge_lists(
+        [[(0, 1), (1, 2), (2, 3), (3, 0)],                    # 4-cycle
+         [(0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 2)],    # two triangles
+         [(0, 1), (1, 2), (2, 3), (3, 4)]],                   # path
+        [5, 5, 5], n_pad=8)
+    d = topological_signature(g, dim=1, method="both", edge_cap=24, tri_cap=24)
+    for k in (0, 1):
+        for i in range(3):
+            for j in range(3):
+                di = jax.tree.map(lambda x: x[i], d)
+                dj = jax.tree.map(lambda x: x[j], d)
+                got = float(sliced_wasserstein(di, dj, k=k, cap=CAP))
+                pi = ref.cap_points(diagrams_to_numpy(d, i, 1)[k], CAP)
+                pj = ref.cap_points(diagrams_to_numpy(d, j, 1)[k], CAP)
+                want = ref.sw_dense(pi, pj)
+                np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)

@@ -31,7 +31,7 @@ def test_session_flow_fresh_and_cached():
     assert srv.pending() == 2
     assert srv.drain() == 2
     assert f1.info == {"graph_updates": 1, "hits": 1, "coral_hits": 1,
-                       "prunit_hits": 0, "recomputes": 0}
+                       "prunit_hits": 0, "recomputes": 0, "anomalies": 0}
     assert f2.info["recomputes"] == 1
     st = srv.session_stats(sid)
     assert st["hits"] == 1 and st["recomputes"] == 1
@@ -119,3 +119,24 @@ def test_failed_step_fails_dependent_futures():
         bad.result(timeout=1)
     with pytest.raises(ValueError, match="simplex caps"):
         after.result(timeout=1)
+
+
+def test_drift_surface_in_step_info():
+    cfg = TopoStreamConfig(dim=1, method="both", edge_cap=48, tri_cap=96,
+                           drift_metric="sw", drift_threshold=0.5)
+    srv = StreamServe(cfg)
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 3)]], [4], n_pad=8)
+    sid = srv.create_session(g)
+    f1 = srv.submit(sid, delta_from_lists([[(0, 3, EDGE_INSERT)]]))  # cycle
+    srv.drain()
+    info = f1.info
+    assert info["recomputes"] == 1 and info["anomalies"] == 1
+    assert info["drift"].shape == (1,) and info["drift"][0] > 0.5
+    assert info["anomaly"].tolist() == [True]
+    assert srv.session_stats(sid)["anomalies"] == 1
+    assert srv.stats()["anomalies"] == 1
+    # quiet step: no structural change -> zero drift, no anomaly
+    f2 = srv.submit(sid, delta_from_lists([[(0, 3, EDGE_INSERT)]]))  # no-op
+    srv.drain()
+    assert f2.info["drift"].tolist() == [0.0]
+    assert f2.info["anomalies"] == 0

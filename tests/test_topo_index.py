@@ -1,0 +1,159 @@
+"""TopoIndex + SimilarityServe: embedding contract, kNN, save/load, serving."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import from_edge_lists, topological_signature
+from repro.index import TopoIndex, TopoIndexConfig
+from repro.serve import SimilarityServe
+
+CYCLE4 = [(0, 1), (1, 2), (2, 3), (3, 0)]
+TWO_TRI = [(0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 2)]
+PATH = [(0, 1), (1, 2), (2, 3), (3, 4)]
+STAR = [(0, 1), (0, 2), (0, 3), (0, 4)]
+
+
+def corpus_diagrams(edge_cap=24, tri_cap=24, n_pad=8):
+    g = from_edge_lists([CYCLE4, TWO_TRI, PATH, STAR], [5, 5, 5, 5],
+                        n_pad=n_pad)
+    return topological_signature(g, dim=1, method="prunit",
+                                 edge_cap=edge_cap, tri_cap=tri_cap)
+
+
+def test_add_query_roundtrip(tmp_path):
+    index = TopoIndex(TopoIndexConfig(embedding="sw", k=1, n_points=8,
+                                      n_dirs=8))
+    d = corpus_diagrams()
+    ids = index.add(d, ids=["cycle4", "twotri", "path", "star"])
+    assert ids == ["cycle4", "twotri", "path", "star"] and len(index) == 4
+    got_ids, dists = index.query(d, k=2)
+    assert dists.shape == (4, 2)
+    full_ids, full_dists = index.query(d, k=4)
+    for i, gid in enumerate(["cycle4", "twotri", "path", "star"]):
+        assert dists[i][0] == pytest.approx(0.0, abs=1e-5)
+        # self is among the zero-distance ties (acyclic graphs all have an
+        # empty PD_1, so their sw embeddings legitimately coincide)
+        ties = [g for g, dist in zip(full_ids[i], full_dists[i])
+                if dist < 1e-5]
+        assert gid in ties
+    # the 4-cycle (one essential 1-class) is far from the acyclic graphs
+    cyc = index.query(jax.tree.map(lambda x: x[0], d), k=4)
+    assert cyc[0][0][0] == "cycle4"
+    assert cyc[1][0][-1] > 1.0
+
+    # save / load preserves config, ids and answers — also for a path
+    # without the .npz suffix (save must write to the path verbatim)
+    for name in ("index.npz", "index.topo"):
+        path = str(tmp_path / name)
+        index.save(path)
+        loaded = TopoIndex.load(path)
+        assert loaded.config == index.config and loaded.ids == index.ids
+        ids2, dists2 = loaded.query(d, k=2)
+        assert ids2 == got_ids
+        np.testing.assert_allclose(dists2, dists, atol=1e-6)
+
+
+def test_embedding_width_independent_of_tensor_size():
+    """Diagrams from different caps/buckets land in one embedding space."""
+    cfg = TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8)
+    index = TopoIndex(cfg)
+    small = corpus_diagrams(edge_cap=16, tri_cap=16)
+    big = corpus_diagrams(edge_cap=48, tri_cap=96, n_pad=12)
+    assert small.birth.shape[-1] != big.birth.shape[-1]
+    index.add(small, ids=["a", "b", "c", "d"])
+    ids, dists = index.query(big, k=1)  # same graphs, other tensor size
+    np.testing.assert_allclose(dists[:, 0], 0.0, atol=1e-5)
+    # the 4-cycle's PD_1 is unique in the corpus, so its id is unambiguous
+    assert ids[0][0] == "a"
+
+
+def test_features_and_both_embeddings():
+    d = corpus_diagrams()
+    for emb in ("features", "both"):
+        index = TopoIndex(TopoIndexConfig(embedding=emb, n_points=8,
+                                          n_dirs=8, res=4))
+        index.add(d)
+        assert index.config.width == index._emb.shape[1]
+        ids, dists = index.query(d, k=1)
+        assert [row[0] for row in ids] == ["g0", "g1", "g2", "g3"]
+        np.testing.assert_allclose(dists[:, 0], 0.0, atol=1e-4)
+
+
+def test_validation():
+    index = TopoIndex(TopoIndexConfig(n_points=4, n_dirs=4))
+    d = corpus_diagrams()
+    with pytest.raises(ValueError, match="empty"):
+        index.query(d)
+    index.add(d, ids=["a", "b", "c", "d"])
+    with pytest.raises(ValueError, match="duplicate"):
+        index.add(d, ids=["a", "x", "y", "z"])
+    with pytest.raises(ValueError, match="ids for"):
+        index.add(d, ids=["only-one"])
+    with pytest.raises(ValueError, match="unknown embedding"):
+        TopoIndexConfig(embedding="bogus")
+    # k larger than the index clips
+    ids, dists = index.query(d, k=99)
+    assert dists.shape == (4, 4)
+
+
+def test_similarity_serve_end_to_end():
+    srv = SimilarityServe(
+        index_config=TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8),
+        default_k=2)
+    srv.add(edges=CYCLE4, n_vertices=4, gid="cycle4")
+    srv.add(edges=TWO_TRI, n_vertices=5, gid="twotri")
+    srv.add(edges=PATH, n_vertices=5, gid="path")
+    fut = srv.submit(edges=CYCLE4, n_vertices=4)      # exact corpus member
+    fut_k1 = srv.submit(edges=STAR, n_vertices=5, k=1)
+    assert srv.pending() == 5
+    assert srv.drain() == 2
+    r = fut.result()
+    assert r.ids[0] == "cycle4" and r.distances[0] == pytest.approx(0.0)
+    assert len(r.ids) == 2 and r.distances[1] >= r.distances[0]
+    assert len(fut_k1.result().ids) == 1
+    assert srv.stats["indexed"] == 3 and srv.stats["queries"] == 2
+    assert np.asarray(r.diagrams.birth).ndim == 1  # per-graph slice
+
+
+def test_similarity_serve_empty_index_fails_queries():
+    srv = SimilarityServe()
+    fut = srv.submit(edges=PATH, n_vertices=5)
+    srv.drain()
+    with pytest.raises(ValueError, match="empty index"):
+        fut.result()
+
+
+def test_similarity_serve_duplicate_gid_does_not_wedge_queries():
+    # an index failure (duplicate gid) must drop the add batch and still
+    # resolve queued queries, never leave futures blocked forever
+    srv = SimilarityServe(
+        index_config=TopoIndexConfig(n_points=4, n_dirs=4))
+    srv.add(edges=CYCLE4, n_vertices=4, gid="dup")
+    srv.drain()
+    srv.add(edges=PATH, n_vertices=5, gid="dup")       # collides at drain
+    fut = srv.submit(edges=CYCLE4, n_vertices=4, k=1)
+    assert srv.drain() == 1
+    assert fut.result(timeout=5).ids == ("dup",)
+    assert srv.stats["add_failures"] == 1 and len(srv.index) == 1
+
+
+def test_similarity_serve_mixed_buckets_in_one_drain():
+    # a small and a large graph route to different padding buckets, so their
+    # Diagrams rows have different tensor sizes S; one drain must index and
+    # answer both (embeddings are S-independent; stacking is per shape class)
+    srv = SimilarityServe(
+        index_config=TopoIndexConfig(n_points=8, n_dirs=8), default_k=2)
+    big_cycle = [(i, (i + 1) % 20) for i in range(20)]
+    f_big_vals = [9.0] * 20  # shift the big cycle's birth away from degree 2
+    srv.add(edges=CYCLE4, n_vertices=4, gid="small")
+    srv.add(edges=big_cycle, n_vertices=20, f=f_big_vals, gid="big")
+    f_small = srv.submit(edges=CYCLE4, n_vertices=4, k=1)
+    f_big = srv.submit(edges=big_cycle, n_vertices=20, f=f_big_vals, k=1)
+    assert srv.drain() == 2
+    assert srv.stats["indexed"] == 2 and srv.stats["add_failures"] == 0
+    assert f_small.result(timeout=5).ids == ("small",)
+    assert f_big.result(timeout=5).ids == ("big",)
+    assert f_small.result().diagrams.birth.shape != \
+        f_big.result().diagrams.birth.shape

@@ -10,6 +10,7 @@ import pytest
 
 from conftest import hypothesis_or_stub
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import topological_signature
@@ -334,3 +335,68 @@ def test_incremental_all_dims_mode_random_sequences(seed):
     for _ in range(3):
         d = s.apply(_random_delta(rng, n))
         _assert_parity(s, d, dims=(0, 1))
+
+
+# ----------------------------------------------------------------- drift
+
+def test_drift_zero_on_cache_hit():
+    # pendant toggle is a coral hit: the diagram provably did not move, so
+    # the drift score must be exactly 0 and no anomaly may fire
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 0), (0, 3)]], [4], n_pad=8)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both",
+                                       drift_metric="sw",
+                                       drift_threshold=0.0, **CFG))
+    s.apply(delta_from_lists([[(0, 3, EDGE_DELETE)]]))
+    assert s.stats["hits"] == 1
+    assert s.last_drift.tolist() == [0.0]
+    assert not s.last_anomaly.any() and s.stats["anomalies"] == 0
+
+
+def test_drift_matches_direct_distance_on_recompute():
+    from repro.metrics import sliced_wasserstein
+
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 3)]], [4], n_pad=8)
+    cfg = TopoStreamConfig(dim=1, method="both", drift_metric="sw",
+                           drift_threshold=0.5, **CFG)
+    s = TopoStream(g, cfg)
+    before = s.diagrams
+    s.apply(delta_from_lists([[(0, 3, EDGE_INSERT)]]))  # path -> cycle
+    assert s.stats["recomputes"] == 1
+    want = float(sliced_wasserstein(
+        jax.tree.map(lambda x: x[0], before),
+        jax.tree.map(lambda x: x[0], s.diagrams),
+        k=cfg.dim, n_dirs=cfg.drift_n_dirs, cap=cfg.drift_cap))
+    assert want > 0
+    assert s.last_drift[0] == pytest.approx(want, rel=1e-5)
+    assert bool(s.last_anomaly[0]) and s.stats["anomalies"] == 1
+
+
+def test_drift_scores_only_recomputed_graphs():
+    # graph 0 gets a real structural change, graph 1 an ineffective op
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 3)]] * 2, [4, 4], n_pad=8)
+    s = TopoStream(g, TopoStreamConfig(dim=1, method="both",
+                                       drift_metric="sw",
+                                       drift_threshold=0.5, **CFG))
+    d = DeltaBatch(
+        edge_u=jnp.asarray([[0], [0]]),
+        edge_v=jnp.asarray([[3], [1]]),
+        edge_op=jnp.asarray([[EDGE_INSERT], [EDGE_INSERT]]),  # (0,1) exists
+        f_vertex=jnp.asarray([[-1], [-1]]),
+        f_value=jnp.asarray([[0.0], [0.0]]),
+        drop_vertex=jnp.asarray([[-1], [-1]]),
+    )
+    s.apply(d)
+    assert s.last_drift[0] > 0 and s.last_drift[1] == 0.0
+    assert s.last_anomaly.tolist() == [True, False]
+
+
+def test_drift_config_validation():
+    with pytest.raises(ValueError, match="drift_metric"):
+        TopoStreamConfig(drift_metric="bogus")
+    with pytest.raises(ValueError, match="drift_dim"):
+        TopoStreamConfig(dim=1, drift_dim=2, drift_metric="sw")
+    # sub-target drift dims go stale on coral hits under exact_dims="target"
+    with pytest.raises(ValueError, match="exact_dims"):
+        TopoStreamConfig(dim=1, drift_dim=0, drift_metric="sw")
+    TopoStreamConfig(dim=1, drift_dim=0, drift_metric="sw",
+                     method="prunit", exact_dims="all")  # valid combination
