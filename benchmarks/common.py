@@ -4,6 +4,7 @@ from __future__ import annotations
 import json
 import os
 import platform
+import subprocess
 import time
 
 import jax
@@ -49,21 +50,62 @@ def pct(before, after) -> float:
     return 100.0 * (float(before) - float(after)) / before
 
 
+def git_rev() -> str | None:
+    """Short git revision of the working tree, or None outside a checkout.
+
+    A ``-dirty`` suffix marks uncommitted changes — a bench run from a
+    dirty tree measured code that HEAD does not contain, and the JSON must
+    not attribute the numbers to that commit.
+    """
+    cwd = os.path.dirname(os.path.abspath(__file__))
+    try:
+        rev = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=cwd, capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        if not rev:
+            return None
+        # exclude bench outputs from the dirty check: the run itself
+        # rewrites results/*.json, which must not mark the CODE as dirty
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain", "--", ":(exclude,top)results"],
+            cwd=cwd, capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        return f"{rev}-dirty" if dirty else rev
+    except Exception:
+        return None
+
+
+def _previous_run(path: str) -> dict | None:
+    """Load the JSON a previous run left at ``path`` (None if absent/bad)."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except Exception:
+        return None
+
+
 def write_suite_json(out_dir: str, suite: str, description: str,
                      rows: list[tuple[str, str, float]], wall_s: float,
                      quick: bool, ok: bool = True) -> str:
     """Persist one suite's results as ``BENCH_<suite>.json``.
 
     The machine-readable companion of results/bench.csv: rows plus wall time
-    and environment metadata, so the perf trajectory is trackable across PRs
-    (compare the same suite's JSON from consecutive commits).
+    and environment metadata.  Each run is stamped with its ``git_rev``, and
+    — since runs overwrite the previous file in place — the previous run's
+    identity and per-metric deltas are folded into ``previous``/``deltas``
+    before overwriting, so the perf trajectory is reconstructible from the
+    repo alone (every committed JSON names the revision it measured and how
+    much each metric moved since the run before it).
     """
     path = os.path.join(out_dir, f"BENCH_{suite}.json")
+    prev = _previous_run(path)
     payload = {
         "suite": suite,
         "description": description,
         "quick": bool(quick),
         "ok": bool(ok),
+        "git_rev": git_rev(),
         "wall_s": round(float(wall_s), 4),
         "rows": [{"benchmark": b, "metric": m, "value": v}
                  for (b, m, v) in rows],
@@ -74,6 +116,23 @@ def write_suite_json(out_dir: str, suite: str, description: str,
             "python": platform.python_version(),
         },
     }
+    if prev is not None:
+        payload["previous"] = {
+            "git_rev": prev.get("git_rev"),
+            "quick": prev.get("quick"),
+            "ok": prev.get("ok"),
+            "wall_s": prev.get("wall_s"),
+        }
+        prev_vals = {(r.get("benchmark"), r.get("metric")): r.get("value")
+                     for r in prev.get("rows", [])}
+        deltas = []
+        for (b, m, v) in rows:
+            pv = prev_vals.get((b, m))
+            if pv is not None:
+                deltas.append({"benchmark": b, "metric": m,
+                               "value": v, "prev": pv,
+                               "delta": round(float(v) - float(pv), 6)})
+        payload["deltas"] = deltas
     os.makedirs(out_dir, exist_ok=True)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

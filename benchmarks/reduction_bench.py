@@ -1,0 +1,207 @@
+"""ReductionEngine benchmark: two-phase repack win, reduction ratio, parity.
+
+The tentpole claim of the two-phase refactor (repro/core/api.py,
+``repack="on"``): the paper's reductions shrink graphs by up to ~95%, and
+re-bucketing every reduced graph into a small :class:`ShapeClass` lets the
+expensive GF(2) persist stage compile and run at *reduced* size instead of
+input size.  This suite measures exactly that, on the two workloads where
+the reductions bite hardest:
+
+* **ego_decay** — the hub-dominated ego-net regime (paper §6.2): PrunIT
+  collapses satellites, coral trims the periphery;
+* **coral_heavy** — sparse ER cores with a heavy satellite tail (the
+  Table 1 degree-distribution regime): most vertices fall out of the 2-core.
+
+Reported per workload: vertex/edge reduction ratios, the post-reduction
+rung histogram, single-phase wall time vs two-phase reduce/persist split,
+``persist_speedup`` (single-phase pipeline time over the two-phase persist
+phase — the acceptance metric, asserted >= 1.5x) and ``total_speedup``
+(including the reduce phase + host repack), plus a pair-level parity sweep:
+every graph's persistence pairs in every guaranteed dimension must be
+bit-identical between ``repack="off"`` (the oracle) and ``"on"``.
+
+A serve-level section drains star/ego queries spanning three input buckets
+through a ``repack="on"`` TopoServe and reports how many persist rungs are
+shared by >1 input bucket (asserted >= 1) together with the plan-cache
+delta — reduced-size persist plans are process-wide shared artifacts.
+
+  PYTHONPATH=src python -m benchmarks.reduction_bench [--quick]
+  PYTHONPATH=src python -m benchmarks.run --only reduction [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Report, timed, write_suite_json
+from repro.core.api import make_topo_plan, plan_cache_info
+from repro.core.persistence_jax import diagrams_to_numpy
+from repro.data.graphs import attach_satellites, erdos_renyi
+from repro.data.temporal import ego_decay_stream
+from repro.serve import TopoServe, TopoServeConfig
+
+CAPS = dict(edge_cap=320, tri_cap=512)  # the serve ladder's n64 rung
+
+
+def _pairs(d, b, k):
+    return diagrams_to_numpy(d, b, max_dim=k)[k]
+
+
+def _workloads(quick: bool):
+    b = 16 if quick else 64
+    key = jax.random.PRNGKey(7)
+    k_ego, k_er, k_sat = jax.random.split(key, 3)
+    g_ego, _ = ego_decay_stream(k_ego, batch=b, n_pad=64, n_core=12,
+                                n_double=12, n_pendant=12, steps=1)
+    core = erdos_renyi(k_er, batch=b, n_pad=64, n_vertices=56, p=0.05)
+    g_coral = attach_satellites(k_sat, core, frac=0.5)
+    return [("ego_decay", g_ego), ("coral_heavy", g_coral)]
+
+
+def _bench_workload(report: Report, tag: str, g, dims: tuple[int, ...]):
+    single = make_topo_plan(dim=1, method="both", **CAPS)
+    two = make_topo_plan(dim=1, method="both", repack="on", **CAPS)
+
+    # warmup (compiles every touched rung) + repack accounting
+    d_on, info = two.execute_info(g)
+    jax.block_until_ready(d_on.birth)
+    hist = info.rung_histogram()
+    v0 = float(np.maximum(g.n_vertices().sum(), 1))
+    e0 = float(np.maximum(g.n_edges().sum(), 1))
+    report.add(tag, "v_reduction_pct",
+               100.0 * (v0 - float(info.n_vertices.sum())) / v0)
+    report.add(tag, "e_reduction_pct",
+               100.0 * (e0 - float(info.n_edges.sum())) / e0)
+    for n_pad, count in sorted(hist.items()):
+        report.add(tag, f"rung_n{n_pad}_graphs", count)
+
+    d_off, t_single = timed(single.execute, g)
+    _, t_reduce = timed(two.reduce_executor, g)
+    _, t_total = timed(two.execute, g)
+    t_persist = max(t_total - t_reduce, 1e-9)
+    report.add(tag, "single_phase_ms", t_single * 1e3)
+    report.add(tag, "two_phase_reduce_ms", t_reduce * 1e3)
+    report.add(tag, "two_phase_persist_ms", t_persist * 1e3)
+    report.add(tag, "two_phase_total_ms", t_total * 1e3)
+    persist_speedup = t_single / t_persist
+    report.add(tag, "persist_speedup", persist_speedup)
+    report.add(tag, "total_speedup", t_single / max(t_total, 1e-9))
+
+    checked = mismatches = 0
+    for bi in range(g.batch):
+        for k in dims:
+            checked += 1
+            if _pairs(d_off, bi, k) != _pairs(d_on, bi, k):
+                mismatches += 1
+    report.add(tag, "parity_checked", checked)
+    report.add(tag, "parity_mismatches", mismatches)
+    return checked, mismatches, persist_speedup
+
+
+def _serve_sharing(report: Report, quick: bool):
+    """Drain queries spanning buckets through repack='on' TopoServe; count
+    persist rungs shared across input buckets + the plan-cache delta."""
+    import networkx as nx
+
+    cache_before = plan_cache_info()
+    srv = TopoServe(TopoServeConfig(dim=1, method="both", repack="on"))
+    rng = np.random.default_rng(3)
+    n_q = 24 if quick else 96
+    futs = []
+    for i in range(n_q):
+        kind = i % 3
+        if kind == 0:       # n16 bucket, collapses to a point
+            g = nx.star_graph(int(rng.integers(6, 14)))
+        elif kind == 1:     # n32 bucket
+            g = nx.star_graph(int(rng.integers(17, 30)))
+        else:               # n64 bucket, ego-like: hub + sparse core
+            g = nx.gnp_random_graph(40, 0.06, seed=int(rng.integers(2**31)))
+            hub = 0
+            g.add_edges_from((hub, v) for v in range(1, 20))
+        nodes = sorted(g.nodes())
+        idx = {u: j for j, u in enumerate(nodes)}
+        futs.append(srv.submit(
+            edges=[(idx[u], idx[v]) for (u, v) in g.edges()],
+            n_vertices=len(nodes)))
+    srv.drain()
+    for f in futs:
+        f.result()
+    rungs_by_bucket: dict[int, set] = {}
+    for (bucket_n, rung_n), cnt in srv.stats["repack_rungs"].items():
+        rungs_by_bucket.setdefault(rung_n, set()).add(bucket_n)
+    shared = sum(1 for buckets in rungs_by_bucket.values() if len(buckets) > 1)
+    info = plan_cache_info()
+    report.add("reduction_serve", "queries", n_q)
+    report.add("reduction_serve", "input_buckets",
+               len({f.bucket for f in futs}))
+    report.add("reduction_serve", "persist_rungs_used", len(rungs_by_bucket))
+    report.add("reduction_serve", "shared_persist_rungs", shared)
+    report.add("reduction_serve", "plan_cache_hits",
+               info["hits"] - cache_before["hits"])
+    report.add("reduction_serve", "plan_cache_misses",
+               info["misses"] - cache_before["misses"])
+    return shared
+
+
+def run(report: Report, quick: bool = False) -> None:
+    totals = {"checked": 0, "mismatches": 0}
+    speedups = {}
+    for tag, g in _workloads(quick):
+        # method="both" includes coral: only the target dimension is
+        # guaranteed (dims < 1 may legitimately differ after (dim+1)-core)
+        c, m, s = _bench_workload(report, tag, g, dims=(1,))
+        totals["checked"] += c
+        totals["mismatches"] += m
+        speedups[tag] = s
+
+    shared = _serve_sharing(report, quick)
+
+    report.add("reduction", "parity_checked", totals["checked"])
+    report.add("reduction", "parity_mismatches", totals["mismatches"])
+    if totals["mismatches"]:
+        raise AssertionError(
+            f"{totals['mismatches']}/{totals['checked']} two-phase diagrams "
+            "differ from single-phase (repack='off') output")
+    slow = {t: s for t, s in speedups.items() if s < 1.5}
+    if slow:
+        raise AssertionError(
+            f"persist-phase speedup below the 1.5x acceptance bar: {slow}")
+    if shared < 1:
+        raise AssertionError(
+            "no persist rung was shared across serve buckets — reduced-size "
+            "persist plans are not being deduplicated")
+    print(f"[reduction_bench] parity OK: {totals['checked']} diagram "
+          f"comparisons bit-identical; persist speedups "
+          + ", ".join(f"{t}={s:.1f}x" for t, s in speedups.items())
+          + f"; {shared} persist rung(s) shared across serve buckets")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small workloads (CI / CPU smoke)")
+    ap.add_argument("--out-dir", default="results",
+                    help="directory for BENCH_reduction.json")
+    args = ap.parse_args()
+    report = Report(quick=args.quick)
+    t0 = time.time()
+    ok = True
+    try:
+        run(report, quick=args.quick)
+    except Exception:
+        ok = False
+        raise
+    finally:
+        path = write_suite_json(
+            args.out_dir, "reduction",
+            "ReductionEngine two-phase repack win + reduction ratio + parity",
+            report.rows, wall_s=time.time() - t0, quick=args.quick, ok=ok)
+        print(f"wrote {path}")
+    print(report.csv())
+
+
+if __name__ == "__main__":
+    main()

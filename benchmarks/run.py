@@ -31,6 +31,8 @@ SUITES = {
     "serve": ("benchmarks.serve_bench", "TopoServe throughput/latency + parity"),
     "stream": ("benchmarks.stream_bench", "TopoStream updates/s + skip-rate + parity"),
     "metrics": ("benchmarks.metrics_bench", "diagram distances + Gram kernel + parity + drift"),
+    "reduction": ("benchmarks.reduction_bench",
+                  "ReductionEngine two-phase repack win + reduction ratio + parity"),
 }
 
 

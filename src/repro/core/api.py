@@ -1,18 +1,32 @@
-"""High-level TopoPipe API: reduce -> filter -> persist, batched & shardable.
+"""High-level TopoPipe API: reduce -> repack -> persist, batched & shardable.
 
 This is the paper's contribution packaged as a composable JAX module: feed a
-GraphBatch, choose a reduction (coral / prunit / both / none), get exact
-persistence diagrams.  All functions are jit/vmap/pjit friendly; the launch
-layer shards batches over the ("pod", "data") mesh axes.
+GraphBatch, choose a reduction (a legacy method name or an explicit pass
+tuple from the :mod:`repro.core.reduction` registry), get exact persistence
+diagrams.  All functions are jit/vmap/pjit friendly; the launch layer shards
+batches over the ("pod", "data") mesh axes.
 
 Compilation is organised as an explicit **plan -> execute** split (see
 docs/ARCHITECTURE.md §Plan/Execute): ``make_topo_plan(...)`` returns a
-``TopoPlan`` — one compiled pipeline per distinct
-``(dim, method, sublevel, caps, reducer, mesh)`` key, held in a process-wide
-LRU cache — and ``topological_signature`` is a thin wrapper over it.  The
-serve layer (repro/serve/topo_serve.py), the feature pipeline
+``TopoPlan`` — one compiled pipeline per distinct ``TopoPlanKey``, held in a
+process-wide LRU cache — and ``topological_signature`` is a thin wrapper
+over it.  The serve layer (repro/serve/topo_serve.py), the feature pipeline
 (repro/topo/features.py) and the benchmarks all go through this one path, so
 a given pipeline shape is compiled exactly once per process.
+
+Plans execute in one of two modes (docs/ARCHITECTURE.md §ReductionEngine):
+
+* ``repack="off"`` (default) — the historical single-phase path: one jitted
+  (or shard_mapped) reduce→persist body compiled at the *input* caps.  This
+  is the parity oracle for everything below.
+* ``repack="on"`` — two-phase: a jitted **reduce plan** (fixpoint pass
+  iteration + vertex compaction + simplex-count measurement) runs at input
+  caps; the host then re-buckets every reduced graph into the smallest
+  :class:`~repro.core.repack.ShapeClass` of a bounded ladder and executes a
+  **persist plan** (``passes=()``) per rung — so the expensive GF(2) stage
+  compiles and runs at *reduced* size.  Persist plans live in the same plan
+  cache, keyed only by their rung, and are therefore shared by every caller
+  (serve buckets, stream sessions) whose reductions land on the same rung.
 """
 from __future__ import annotations
 
@@ -20,30 +34,49 @@ import dataclasses
 import threading
 from collections import OrderedDict
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph import GraphBatch
-from repro.core.kcore import coral_reduce, kcore
 from repro.core.persistence_jax import Diagrams, persistence_diagrams_batched
-from repro.core.prunit import prunit
+from repro.core.reduction import (
+    apply_passes,
+    engine_exact_from_dim,
+    method_for_passes,
+    passes_for_method,
+    run_reduction,
+    validate_passes,
+)
+from repro.core.repack import (
+    RepackReport,
+    ShapeClass,
+    compact_batch,
+    default_ladder,
+    diagram_size,
+    measure_counts,
+    select_classes,
+    slice_to,
+)
 
 
 REDUCTIONS = ("none", "coral", "prunit", "both")
+REPACK_MODES = ("off", "on")
 
 
 def reduce_graphs(g: GraphBatch, dim: int, method: str = "both",
                   sublevel: bool = True) -> GraphBatch:
-    """Apply the paper's reduction(s) for computing PD_dim."""
+    """Apply the paper's reduction(s) for computing PD_dim (one sweep).
+
+    Thin wrapper over the pass engine: ``method`` maps to a pass tuple
+    (``"both"`` → ``("prunit", "kcore")``) applied once in order — the
+    single-phase reduction every ``repack="off"`` plan compiles.
+    """
     if method not in REDUCTIONS:
         raise ValueError(f"unknown reduction {method!r}; want one of {REDUCTIONS}")
-    if method in ("prunit", "both"):
-        g = prunit(g, sublevel=sublevel)
-    if method in ("coral", "both"):
-        g = coral_reduce(g, dim)
-    return g
+    return apply_passes(g, passes_for_method(method), dim, sublevel)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,39 +86,62 @@ class TopoPlanKey:
     Two calls that agree on every field share one ``TopoPlan`` and therefore
     one jit cache; anything not in this key (batch size, padded order) is a
     jit shape specialization *inside* the plan, not a new plan.
+
+    ``passes`` replaces the former ``method`` string (legacy names still
+    accepted at ``make_topo_plan``); ``repack`` selects single- vs two-phase
+    execution, ``fixpoint`` whether the pass list iterates to its joint
+    fixpoint or runs one sweep, and ``ladder`` optionally pins the persist
+    shape classes (``None`` derives the default ladder from the input shape
+    at execute time — see repro/core/repack.py).
     """
 
     dim: int
-    method: str
+    passes: tuple[str, ...]
     sublevel: bool
     edge_cap: int
     tri_cap: int
     quad_cap: int
     reducer: str
     mesh: Any = None  # jax.sharding.Mesh (hashable) or None for single-host
+    repack: str = "off"
+    fixpoint: bool = False
+    ladder: Optional[tuple[ShapeClass, ...]] = None
 
     def caps(self) -> tuple[int, int, int]:
         return (self.edge_cap, self.tri_cap, self.quad_cap)
+
+    @property
+    def method(self) -> str:
+        return method_for_passes(self.passes)
 
 
 @dataclasses.dataclass(frozen=True)
 class TopoPlan:
     """A compiled reduce->persist pipeline plus its static metadata.
 
-    ``execute`` (alias ``__call__``) maps a GraphBatch to Diagrams through a
-    single jitted (or shard_mapped, when the plan carries a mesh) program.
-    The plan object is safe to hold across requests — re-executing with the
-    same (B, N) shape never recompiles.
+    ``execute`` (alias ``__call__``) maps a GraphBatch to Diagrams.  With
+    ``repack="off"`` that is a single jitted (or shard_mapped, when the plan
+    carries a mesh) program; with ``repack="on"`` it is the two-phase driver
+    — ``reduce_plan`` (jitted) → host repack → per-rung ``persist_plan``
+    execution — and ``execute_info`` additionally returns the
+    :class:`~repro.core.repack.RepackReport` of rung assignments.  The plan
+    object is safe to hold across requests — re-executing with the same
+    (B, N) shape never recompiles.
     """
 
     key: TopoPlanKey
-    executor: Callable[[GraphBatch], Diagrams]
+    executor: Optional[Callable[[GraphBatch], Diagrams]] = None
+    reduce_executor: Optional[Callable] = None
+    _ladders: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False)
 
     def execute(self, g: GraphBatch) -> Diagrams:
+        if self.key.repack == "on":
+            return self.execute_info(g)[0]
         return self.executor(g)
 
     def __call__(self, g: GraphBatch) -> Diagrams:
-        return self.executor(g)
+        return self.execute(g)
 
     @property
     def dim(self) -> int:
@@ -96,13 +152,142 @@ class TopoPlan:
         return self.key.method
 
     @property
+    def passes(self) -> tuple[str, ...]:
+        return self.key.passes
+
+    @property
     def sublevel(self) -> bool:
         return self.key.sublevel
 
+    def exact_from_dim(self) -> int:
+        """Lowest homology dimension this plan's reduction preserves."""
+        return engine_exact_from_dim(self.key.passes, self.key.dim)
+
+    # --------------------------------------------------------- two-phase
+
+    @property
+    def reduce_plan(self) -> Optional[Callable]:
+        """Phase 1 (``repack="on"``): jitted fixpoint-reduce + compact +
+        measure; ``reduce_plan(g) -> (compacted GraphBatch, (nv, ne, nt))``.
+        """
+        return self.reduce_executor
+
+    def persist_plan(self, sc: ShapeClass) -> "TopoPlan":
+        """Phase 2: the compiled no-reduction persist pipeline of one rung.
+
+        Keyed only by ``(dim, (), sublevel, rung caps, reducer)`` in the
+        process-wide cache — every caller whose reduced graphs land on this
+        rung shares the same compiled executable.
+        """
+        return make_topo_plan(
+            dim=self.key.dim, passes=(), sublevel=self.key.sublevel,
+            edge_cap=sc.edge_cap, tri_cap=sc.tri_cap, quad_cap=sc.quad_cap,
+            reducer=self.key.reducer)
+
+    def ladder_for(self, n: int) -> tuple[ShapeClass, ...]:
+        """The persist ladder used for input padded order ``n``.
+
+        Custom ladders (``key.ladder``) are sanitized per input shape: rungs
+        wider than the input order or with caps above the plan's caps are
+        dropped — they can never be *needed* (every graph fits the input
+        shape, and a wider rung would emit more diagram rows than the
+        single-phase row count the output is padded to) — and a top rung at
+        exactly the input shape is appended so first-fit always lands.  This
+        keeps one ladder shareable across serve buckets whose plans differ
+        in caps (non-monotone bucket configs included).
+        """
+        k = self.key
+        lad = self._ladders.get(n)
+        if lad is not None:
+            return lad
+        if k.ladder is not None:
+            top = ShapeClass(n_pad=n, edge_cap=k.edge_cap,
+                             tri_cap=k.tri_cap, quad_cap=k.quad_cap)
+            # tetrahedra are never measured (the one count that does not
+            # pay for itself), so when quads are live (dim >= 2) a rung
+            # must carry the plan's quad_cap verbatim — smaller would
+            # silently truncate, larger would overflow the row budget
+            quads_live = k.dim >= 2 and k.quad_cap
+            fits = {c for c in k.ladder
+                    if (c.n_pad <= n and c.edge_cap <= k.edge_cap
+                        and c.tri_cap <= k.tri_cap
+                        and (c.quad_cap == k.quad_cap if quads_live
+                             else c.quad_cap <= k.quad_cap))}
+            fits.add(top)
+            lad = tuple(sorted(fits))
+        else:
+            lad = default_ladder(
+                n, k.edge_cap, k.tri_cap if k.dim >= 1 else 0,
+                k.quad_cap if k.dim >= 2 else 0)
+        return self._ladders.setdefault(n, lad)
+
+    def execute_info(self, g: GraphBatch
+                     ) -> tuple[Diagrams, Optional[RepackReport]]:
+        """Execute, also returning the repack report (``None`` when off).
+
+        Two-phase driver: reduce/compact/measure under one jitted program,
+        fetch the per-graph counts to the host (the one phase-boundary
+        sync), group graphs by first-fit shape class, run each group —
+        padded to a power-of-two batch so jit signatures stay bounded —
+        through its rung's persist plan, and scatter the rows back into an
+        input-order Diagrams tensor padded to the single-phase row count
+        (rows past a rung's capacity are invalid padding, so downstream
+        masked arithmetic and canonical-pair extraction see one shape).
+        """
+        if self.key.repack != "on":
+            return self.executor(g), None
+        k = self.key
+        gc, counts = self.reduce_executor(g)
+        nv, ne, nt = (np.asarray(c) for c in counts)
+        ladder = self.ladder_for(g.n)
+        cls_idx = select_classes(ladder, nv, ne, nt)
+        s_full = diagram_size(g.n, k.dim, k.edge_cap, k.tri_cap, k.quad_cap)
+        out = _invalid_diagrams(g.batch, s_full)
+        for ci in sorted(set(cls_idx.tolist())):
+            sc = ladder[ci]
+            idx = np.nonzero(cls_idx == ci)[0]
+            n_g = len(idx)
+            r = 1 << (n_g - 1).bit_length()  # pow2-padded group batch
+            idx_p = np.concatenate([idx, np.full(r - n_g, idx[0], idx.dtype)])
+            jidx = jnp.asarray(idx_p)
+            sub = slice_to(jax.tree.map(lambda x: x[jidx], gc), sc.n_pad)
+            d = self.persist_plan(sc).execute(sub)
+            d = _pad_diagram_rows(d, s_full)
+            jdst = jnp.asarray(idx)
+            out = jax.tree.map(
+                lambda o, n_: o.at[jdst].set(n_[:n_g]), out, d)
+        report = RepackReport(ladder=ladder, class_index=cls_idx,
+                              n_vertices=nv, n_edges=ne, n_triangles=nt)
+        return out, report
+
+
+def _invalid_diagrams(b: int, s: int) -> Diagrams:
+    """An all-invalid Diagrams tensor matching pairs_to_diagrams sentinels."""
+    return Diagrams(
+        birth=jnp.full((b, s), jnp.nan, jnp.float32),
+        death=jnp.full((b, s), jnp.nan, jnp.float32),
+        dim=jnp.full((b, s), -1, jnp.int32),
+        valid=jnp.zeros((b, s), bool),
+    )
+
+
+def _pad_diagram_rows(d: Diagrams, s: int) -> Diagrams:
+    """Pad a (B, S_r) Diagrams to (B, s) with invalid sentinel rows."""
+    pad = s - d.birth.shape[-1]
+    if pad <= 0:
+        return d
+    cfg = ((0, 0), (0, pad))
+    return Diagrams(
+        birth=jnp.pad(d.birth, cfg, constant_values=jnp.nan),
+        death=jnp.pad(d.death, cfg, constant_values=jnp.nan),
+        dim=jnp.pad(d.dim, cfg, constant_values=-1),
+        valid=jnp.pad(d.valid, cfg, constant_values=False),
+    )
+
 
 def _pipeline(g: GraphBatch, key: TopoPlanKey) -> Diagrams:
-    """The one reduce->persist body every execution path compiles."""
-    gr = reduce_graphs(g, key.dim, key.method, key.sublevel)
+    """The one reduce->persist body every single-phase execution compiles."""
+    gr = run_reduction(g, key.passes, key.dim, key.sublevel, key.fixpoint)
     return persistence_diagrams_batched(
         gr, max_dim=key.dim, edge_cap=key.edge_cap, tri_cap=key.tri_cap,
         quad_cap=key.quad_cap, sublevel=key.sublevel, reducer=key.reducer,
@@ -140,6 +325,24 @@ def _build_executor(key: TopoPlanKey) -> Callable[[GraphBatch], Diagrams]:
     return executor
 
 
+def _build_reduce_executor(key: TopoPlanKey) -> Callable:
+    """Phase 1 of a two-phase plan: reduce + compact + measure.
+
+    Honors ``key.fixpoint`` like the single-phase body: the default for
+    ``repack="on"`` is fixpoint iteration, but ``fixpoint=False`` keeps the
+    one-sweep reduction (useful for benchmarking sweep vs fixpoint through
+    the identical two-phase machinery).
+    """
+    count_tris = key.dim >= 1 and key.tri_cap > 0
+
+    def reduce_phase(g: GraphBatch):
+        gr = run_reduction(g, key.passes, key.dim, key.sublevel, key.fixpoint)
+        gc, _ = compact_batch(gr)
+        return gc, measure_counts(gc, count_triangles=count_tris)
+
+    return jax.jit(reduce_phase)
+
+
 _PLAN_CACHE: "OrderedDict[TopoPlanKey, TopoPlan]" = OrderedDict()
 _PLAN_CACHE_MAXSIZE = 64
 _PLAN_CACHE_LOCK = threading.Lock()
@@ -155,18 +358,46 @@ def make_topo_plan(
     quad_cap: int = 0,
     reducer: str = "jnp",
     mesh=None,
+    passes: Optional[tuple] = None,
+    repack: str = "off",
+    fixpoint: Optional[bool] = None,
+    ladder: Optional[tuple] = None,
 ) -> TopoPlan:
     """Plan step of the plan->execute split: build or fetch a compiled pipeline.
 
     Returns the process-wide ``TopoPlan`` for this key (LRU-cached, thread
     safe).  Callers that execute many batches — TopoServe buckets, training
     epochs, benchmark sweeps — should hold the plan and call it directly.
+
+    ``passes`` (a tuple of registry names, see repro/core/reduction.py)
+    overrides the legacy ``method`` string.  ``repack="on"`` selects
+    two-phase execution (reduce → repack → persist at reduced shape
+    classes); ``fixpoint`` defaults to True exactly then, so the reduce
+    phase extracts everything the theorems allow before sizing the persist
+    phase.  ``ladder`` pins the persist shape classes (e.g. a serve bucket
+    ladder); ``None`` derives the default pow2 ladder from the input shape.
     """
-    if method not in REDUCTIONS:
-        raise ValueError(f"unknown reduction {method!r}; want one of {REDUCTIONS}")
-    key = TopoPlanKey(dim=dim, method=method, sublevel=bool(sublevel),
+    if passes is None:
+        if method not in REDUCTIONS:
+            raise ValueError(
+                f"unknown reduction {method!r}; want one of {REDUCTIONS}")
+        passes = passes_for_method(method)
+    else:
+        passes = validate_passes(passes)
+    if repack not in REPACK_MODES:
+        raise ValueError(f"repack must be one of {REPACK_MODES}, got {repack!r}")
+    if repack == "on" and mesh is not None:
+        raise ValueError(
+            "repack='on' is host-driven at the phase boundary and is not "
+            "supported under a mesh; shard the single-phase plan instead "
+            "(repack='off') or drive per-host two-phase plans")
+    if fixpoint is None:
+        fixpoint = repack == "on"
+    key = TopoPlanKey(dim=dim, passes=passes, sublevel=bool(sublevel),
                       edge_cap=int(edge_cap), tri_cap=int(tri_cap),
-                      quad_cap=int(quad_cap), reducer=reducer, mesh=mesh)
+                      quad_cap=int(quad_cap), reducer=reducer, mesh=mesh,
+                      repack=repack, fixpoint=bool(fixpoint),
+                      ladder=None if ladder is None else tuple(ladder))
     with _PLAN_CACHE_LOCK:
         plan = _PLAN_CACHE.get(key)
         if plan is not None:
@@ -174,7 +405,11 @@ def make_topo_plan(
             _PLAN_CACHE_STATS["hits"] += 1
             return plan
         _PLAN_CACHE_STATS["misses"] += 1
-        plan = TopoPlan(key=key, executor=_build_executor(key))
+        if repack == "on":
+            plan = TopoPlan(key=key,
+                            reduce_executor=_build_reduce_executor(key))
+        else:
+            plan = TopoPlan(key=key, executor=_build_executor(key))
         _PLAN_CACHE[key] = plan
         while len(_PLAN_CACHE) > _PLAN_CACHE_MAXSIZE:
             _PLAN_CACHE.popitem(last=False)
@@ -206,6 +441,7 @@ def topological_signature(
     tri_cap: int = 512,
     quad_cap: int = 0,
     reducer: str = "jnp",
+    repack: str = "off",
 ) -> Diagrams:
     """End-to-end: reduce with the paper's algorithms, then exact PDs.
 
@@ -215,11 +451,13 @@ def topological_signature(
     The returned Diagrams cover dimensions 0..dim.  (Coral reduction is only
     exact for dimensions >= dim's core level, so when ``method`` includes
     coral, read out only dimension ``dim`` — or use method="prunit" for all
-    dims at once.)
+    dims at once.)  ``repack="on"`` selects the two-phase path; the valid
+    persistence pairs are identical, row positions are not (compare
+    canonically, e.g. via ``diagrams_to_numpy``).
     """
     plan = make_topo_plan(dim=dim, method=method, sublevel=sublevel,
                           edge_cap=edge_cap, tri_cap=tri_cap,
-                          quad_cap=quad_cap, reducer=reducer)
+                          quad_cap=quad_cap, reducer=reducer, repack=repack)
     return plan.execute(g)
 
 

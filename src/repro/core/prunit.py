@@ -59,7 +59,8 @@ def domination_matrix(adj: jax.Array, mask: jax.Array) -> jax.Array:
 
 def eligibility_matrix(adj: jax.Array, mask: jax.Array, f: jax.Array,
                        sublevel: bool = True,
-                       dom_fn=domination_matrix) -> jax.Array:
+                       dom_fn=domination_matrix,
+                       equal_only: bool = False) -> jax.Array:
     """(B, N, N) bool E with E[u, v] = "PrunIT may remove u with witness v".
 
     Theorem 7's full hypothesis: domination (``dom_fn``) plus the filtration
@@ -67,9 +68,16 @@ def eligibility_matrix(adj: jax.Array, mask: jax.Array, f: jax.Array,
     PrunIT reduction rounds below and TopoStream's invalidation predicate
     (repro/stream/topo_stream.py) so the eligibility condition lives in
     exactly one place.
+
+    ``equal_only=True`` tightens the filtration condition to ``f(u) == f(v)``
+    — the orientation-free special case (it satisfies Theorem 7 for sublevel
+    AND superlevel simultaneously), which is the graph-level strong-collapse
+    pass of the ReductionEngine (repro/core/reduction.py).
     """
     dom = dom_fn(adj, mask)  # dom[u, v]: v dominates u
-    if sublevel:
+    if equal_only:
+        f_ok = f[..., :, None] == f[..., None, :]
+    elif sublevel:
         f_ok = f[..., :, None] >= f[..., None, :]  # f(u) >= f(v)
     else:
         f_ok = f[..., :, None] <= f[..., None, :]
@@ -82,9 +90,11 @@ def prune_round_mask(
     f: jax.Array,
     sublevel: bool = True,
     dom_fn=domination_matrix,
+    equal_only: bool = False,
 ) -> jax.Array:
     """One parallel PrunIT round: the mask of vertices that survive."""
-    elig = eligibility_matrix(adj, mask, f, sublevel, dom_fn)  # elig[u, v]
+    elig = eligibility_matrix(adj, mask, f, sublevel, dom_fn,
+                              equal_only=equal_only)  # elig[u, v]
     elig_t = jnp.swapaxes(elig, -1, -2)  # elig[v, u]
     n = adj.shape[-1]
     idx = jnp.arange(n)
@@ -94,13 +104,14 @@ def prune_round_mask(
     return mask & ~removed
 
 
-@partial(jax.jit, static_argnames=("sublevel", "max_rounds"))
+@partial(jax.jit, static_argnames=("sublevel", "max_rounds", "equal_only"))
 def prunit_mask(
     adj: jax.Array,
     mask: jax.Array,
     f: jax.Array,
     sublevel: bool = True,
     max_rounds: int | None = None,
+    equal_only: bool = False,
 ) -> jax.Array:
     """Iterate parallel prune rounds to a fixed point; returns surviving mask."""
 
@@ -114,7 +125,8 @@ def prunit_mask(
     def body(state):
         m, _, r = state
         adj_m = adj & m[..., None, :] & m[..., :, None]
-        new = prune_round_mask(adj_m, m, jnp.where(m, f, jnp.inf), sublevel)
+        new = prune_round_mask(adj_m, m, jnp.where(m, f, jnp.inf), sublevel,
+                               equal_only=equal_only)
         return new, jnp.any(new != m), r + 1
 
     m, _, _ = lax.while_loop(cond, body, (mask, jnp.array(True), jnp.array(0)))

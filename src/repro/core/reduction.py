@@ -1,0 +1,262 @@
+r"""ReductionEngine: composable reduction passes iterated to a fixpoint.
+
+The paper contributes two *lossless* graph reductions (CoralTDA's (k+1)-core,
+Theorem 2; PrunIT's dominated-vertex removal, Theorem 7).  Both are
+*closure operators on the vertex mask* — monotone (they only remove
+vertices), idempotent at their own fixed point, and exactness-preserving for
+a declared range of homology dimensions.  That makes them **composable**:
+any sequence of exact passes is exact, and iterating a pass list until the
+mask stops changing (the joint fixpoint) is still exact while removing
+strictly more than any single sweep — PrunIT can expose new sub-degree
+vertices to the core peel, and the peel can expose new dominated vertices to
+PrunIT (Choi et al. 2023 iterate exactly this way; the paper's own
+experiments iterate PrunIT rounds).
+
+This module is the one registry of such passes plus the scheduler that
+iterates them.  ``repro.core.api`` builds every compiled pipeline on top of
+it: single-phase plans apply one sweep (``apply_passes``, bit-compatible
+with the historical ``reduce_graphs``), two-phase ``repack="on"`` plans run
+``reduce_fixpoint`` as their reduce phase so the boundary-matrix stage
+compiles at the *reduced* graph's shape class (see repro/core/repack.py).
+
+Exactness contract
+------------------
+Each pass declares ``exact_from_dim(target_dim)`` — the lowest homology
+dimension it provably preserves when the pipeline targets ``PD_target_dim``:
+
+* ``prunit``          → 0   (Theorem 7: every ``PD_k`` preserved)
+* ``strong_collapse`` → 0   (equal-``f`` domination collapse: the
+  orientation-free special case of Theorem 7 — ``f(u) == f(v)`` satisfies
+  the filtration condition for sublevel *and* superlevel, so the same
+  reduced graph serves both orientations.  This is the *graph-level*,
+  filtration-compatible restriction of Boissonnat–Pritam strong collapse;
+  the per-threshold baseline of paper Remark 13 lives in
+  repro/core/strong_collapse.py and is not a registered pass because
+  collapsing without the f condition does not preserve diagrams.)
+* ``kcore``           → target_dim   (Theorem 2: ``PD_j`` preserved only for
+  ``j >= target_dim``; dimensions below go stale)
+
+A pipeline's contract is the *maximum* over its passes
+(``engine_exact_from_dim``) — the most restrictive pass wins.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.graph import GraphBatch
+from repro.core.kcore import kcore_mask
+from repro.core.prunit import prunit_mask
+
+
+@dataclasses.dataclass(frozen=True)
+class ReductionPass:
+    """One composable reduction pass.
+
+    apply_mask(adj, mask, f, dim, sublevel) -> new mask.  The scheduler
+    guarantees ``adj``/``f`` are already restricted to ``mask`` (re-masked
+    between passes), and requires the pass to be **mask-monotone**
+    (``new ⊆ mask``) so the fixpoint iteration terminates.
+
+    exact_from_dim(target_dim) -> the lowest homology dimension this pass
+    preserves when the pipeline computes ``PD_target_dim`` (see module
+    docstring).
+    """
+
+    name: str
+    apply_mask: Callable[..., jax.Array]
+    exact_from_dim: Callable[[int], int]
+    description: str = ""
+
+
+def _kcore_apply(adj, mask, f, dim, sublevel):
+    # dim is static at trace time; for dim 0 the 1-core would drop isolated
+    # vertices that DO carry PD_0 classes, so the pass is the identity there
+    if dim < 1:
+        return mask
+    return kcore_mask(adj, mask, dim + 1)
+
+
+def _prunit_apply(adj, mask, f, dim, sublevel):
+    return prunit_mask(adj, mask, f, sublevel)
+
+
+def _strong_collapse_apply(adj, mask, f, dim, sublevel):
+    return prunit_mask(adj, mask, f, sublevel, equal_only=True)
+
+
+PASS_REGISTRY: dict[str, ReductionPass] = {}
+
+
+def register_pass(p: ReductionPass, overwrite: bool = False) -> ReductionPass:
+    """Register a reduction pass under ``p.name`` (extension point)."""
+    if not overwrite and p.name in PASS_REGISTRY:
+        raise ValueError(f"reduction pass {p.name!r} already registered")
+    PASS_REGISTRY[p.name] = p
+    return p
+
+
+def get_pass(name: str) -> ReductionPass:
+    try:
+        return PASS_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduction pass {name!r}; registered: "
+            f"{sorted(PASS_REGISTRY)}") from None
+
+
+register_pass(ReductionPass(
+    name="kcore",
+    apply_mask=_kcore_apply,
+    exact_from_dim=lambda d: d if d >= 1 else 0,
+    description="CoralTDA (dim+1)-core (Thm 2; exact for PD_j, j >= dim)",
+))
+register_pass(ReductionPass(
+    name="prunit",
+    apply_mask=_prunit_apply,
+    exact_from_dim=lambda d: 0,
+    description="PrunIT dominated-vertex pruning (Thm 7; exact for all PD_k)",
+))
+register_pass(ReductionPass(
+    name="strong_collapse",
+    apply_mask=_strong_collapse_apply,
+    exact_from_dim=lambda d: 0,
+    description="equal-f domination collapse (orientation-free Thm 7 case)",
+))
+
+
+# method string -> pass tuple; the historical REDUCTIONS surface of api.py
+METHOD_PASSES: dict[str, tuple[str, ...]] = {
+    "none": (),
+    "coral": ("kcore",),
+    "prunit": ("prunit",),
+    "both": ("prunit", "kcore"),
+}
+
+
+def passes_for_method(method: str) -> tuple[str, ...]:
+    """Map a legacy reduction method name to its pass tuple."""
+    try:
+        return METHOD_PASSES[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown reduction {method!r}; want one of "
+            f"{tuple(METHOD_PASSES)}") from None
+
+
+def method_for_passes(passes: tuple[str, ...]) -> str:
+    """Inverse of ``passes_for_method`` where one exists, else '+'.join."""
+    for m, p in METHOD_PASSES.items():
+        if p == tuple(passes):
+            return m
+    return "+".join(passes)
+
+
+def validate_passes(passes) -> tuple[str, ...]:
+    passes = tuple(passes)
+    for name in passes:
+        get_pass(name)  # raises on unknown
+    return passes
+
+
+def engine_exact_from_dim(passes: tuple[str, ...], dim: int) -> int:
+    """Lowest homology dimension the whole pass pipeline preserves."""
+    return max((get_pass(p).exact_from_dim(dim) for p in passes), default=0)
+
+
+def _sweep_mask(adj, mask, f, passes, dim, sublevel):
+    """One in-order application of every pass, re-masking between passes."""
+    for name in passes:
+        p = get_pass(name)
+        adj_m = adj & mask[..., None, :] & mask[..., :, None]
+        f_m = jnp.where(mask, f, jnp.inf)
+        mask = p.apply_mask(adj_m, mask, f_m, dim, sublevel) & mask
+    return mask
+
+
+def apply_passes(g: GraphBatch, passes, dim: int,
+                 sublevel: bool = True) -> GraphBatch:
+    """One sweep through ``passes`` (the historical single-phase reduction).
+
+    ``apply_passes(g, ("prunit", "kcore"), dim)`` is bit-compatible with the
+    pre-engine ``reduce_graphs(g, dim, "both")`` — it is the parity oracle
+    for everything the fixpoint scheduler and the repack path produce.
+    """
+    passes = validate_passes(passes)
+    if not passes:
+        return g
+    return g.with_mask(_sweep_mask(g.adj, g.mask, g.f, passes, dim, sublevel))
+
+
+def reduce_fixpoint(g: GraphBatch, passes, dim: int, sublevel: bool = True,
+                    max_sweeps: int | None = None) -> GraphBatch:
+    """Iterate the pass list to its joint fixpoint (mask unchanged).
+
+    Termination: every registered pass is mask-monotone, so the live-vertex
+    count strictly decreases on every sweep that changes anything — at most
+    N sweeps.  Exactness: each sweep is a composition of exact reductions
+    applied to the previous sweep's (exact) output, so by induction the
+    fixpoint preserves ``PD_j`` for every ``j >= engine_exact_from_dim``.
+    """
+    passes = validate_passes(passes)
+    if not passes:
+        return g
+
+    def cond(state):
+        _, changed, i = state
+        ok = changed
+        if max_sweeps is not None:
+            ok = ok & (i < max_sweeps)
+        return ok
+
+    def body(state):
+        m, _, i = state
+        new = _sweep_mask(g.adj, m, g.f, passes, dim, sublevel)
+        return new, jnp.any(new != m), i + 1
+
+    m, _, _ = lax.while_loop(
+        cond, body, (g.mask, jnp.array(True), jnp.array(0)))
+    return g.with_mask(m)
+
+
+def run_reduction(g: GraphBatch, passes, dim: int, sublevel: bool,
+                  fixpoint: bool, max_sweeps: int | None = None) -> GraphBatch:
+    """The one sweep-vs-fixpoint dispatch every execution path shares
+    (single-phase plan bodies, two-phase reduce executors, the engine)."""
+    if fixpoint:
+        return reduce_fixpoint(g, passes, dim, sublevel, max_sweeps)
+    return apply_passes(g, passes, dim, sublevel)
+
+
+class ReductionEngine:
+    """Convenience wrapper: a configured pass pipeline as a callable.
+
+    >>> engine = ReductionEngine(("prunit", "kcore"), dim=1)
+    >>> g_red = engine(g)                 # fixpoint-reduced batch
+    >>> engine.exact_from_dim()           # 1: PD_j exact for j >= 1
+    """
+
+    def __init__(self, passes=("prunit", "kcore"), dim: int = 1,
+                 sublevel: bool = True, fixpoint: bool = True,
+                 max_sweeps: int | None = None):
+        self.passes = validate_passes(passes)
+        self.dim = int(dim)
+        self.sublevel = bool(sublevel)
+        self.fixpoint = bool(fixpoint)
+        self.max_sweeps = max_sweeps
+
+    def __call__(self, g: GraphBatch) -> GraphBatch:
+        return run_reduction(g, self.passes, self.dim, self.sublevel,
+                             self.fixpoint, self.max_sweeps)
+
+    def exact_from_dim(self) -> int:
+        return engine_exact_from_dim(self.passes, self.dim)
+
+    def __repr__(self) -> str:
+        mode = "fixpoint" if self.fixpoint else "sweep"
+        return (f"ReductionEngine({'|'.join(self.passes) or 'identity'}, "
+                f"dim={self.dim}, {mode})")

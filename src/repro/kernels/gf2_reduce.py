@@ -7,6 +7,13 @@ whole packed matrix for one complex lives in VMEM (a 2048-simplex complex is
 Grid is a single program per complex; batching is an outer vmap at the ops
 layer.
 
+The kernel is fully caps-polymorphic: every dimension (columns S, packed
+words W, owner rows) is read from the ref shapes, so one definition serves
+any persist shape class — the two-phase repack path (repro/core/repack.py)
+relies on this to compile the same kernel at each ladder rung's *reduced*
+caps instead of the input caps, and the bounded rung ladder is what keeps
+the number of compiled kernel variants small.
+
 Matches repro.core.persistence_jax.reduce_packed bit-for-bit.
 """
 from __future__ import annotations

@@ -163,6 +163,76 @@ def tda_input_specs(mesh, sharded: bool = True):
     return tda_step, (g_abs,)
 
 
+def tda_two_phase_specs(mesh, phase: str):
+    """Cost specs for the two-phase ReductionEngine path (core/api.py,
+    ``repack="on"``), one cell per phase so the roofline separates them:
+
+    * ``phase="reduce"`` — fixpoint pass iteration + vertex compaction +
+      simplex-count measurement at the *input* caps (masked matmul sweeps;
+      the cheap phase), shard_mapped with zero collectives;
+    * ``phase="persist"`` — the ``passes=()`` persistence pipeline at the
+      default repack ladder's middle rung (the shape class the reduced
+      ego-regime graphs re-bucket into) — the phase the refactor shrinks.
+    """
+    from repro.configs.tda_ego import config as tda_config
+    from repro.core.api import topological_signature_sharded
+    from repro.core.graph import GraphBatch
+    from repro.core.reduction import reduce_fixpoint
+    from repro.core.repack import compact_batch, default_ladder, measure_counts
+    from jax.experimental.shard_map import shard_map
+
+    tcfg = tda_config()
+    n_dev = mesh.devices.size
+    b = tcfg.graphs_per_device * n_dev
+    all_axes = tuple(mesh.axis_names)
+    gshard = NamedSharding(mesh, P(all_axes))
+    ladder = default_ladder(tcfg.n_pad, tcfg.edge_cap, tcfg.tri_cap)
+    mid = ladder[len(ladder) // 2]
+
+    def g_abs(n_pad):
+        return GraphBatch(
+            adj=jax.ShapeDtypeStruct((b, n_pad, n_pad), jnp.bool_, sharding=gshard),
+            mask=jax.ShapeDtypeStruct((b, n_pad), jnp.bool_, sharding=gshard),
+            f=jax.ShapeDtypeStruct((b, n_pad), jnp.float32, sharding=gshard),
+        )
+
+    if phase == "reduce":
+        spec = P(all_axes)
+
+        def per_device(adj, mask, f):
+            g = GraphBatch(adj=adj, mask=mask, f=f)
+            gr = reduce_fixpoint(g, ("prunit", "kcore"), tcfg.max_dim,
+                                 tcfg.sublevel)
+            gc, _ = compact_batch(gr)
+            nv, ne, nt = measure_counts(gc)
+            return gc.adj, gc.mask, gc.f, nv, ne, nt
+
+        sharded = shard_map(
+            per_device, mesh=mesh,
+            in_specs=(spec, spec, spec),
+            out_specs=(spec,) * 6,
+            check_rep=False,
+        )
+
+        def reduce_step(g):
+            return sharded(g.adj, g.mask, g.f)
+
+        return reduce_step, (g_abs(tcfg.n_pad),)
+
+    if phase == "persist":
+        def persist_step(g):
+            d = topological_signature_sharded(
+                g, mesh, dim=tcfg.max_dim, method="none",
+                sublevel=tcfg.sublevel, edge_cap=mid.edge_cap,
+                tri_cap=mid.tri_cap,
+            )
+            return d.birth, d.death, d.dim, d.valid
+
+        return persist_step, (g_abs(mid.n_pad),)
+
+    raise ValueError(f"phase must be 'reduce' or 'persist', got {phase!r}")
+
+
 def _depth_period(cfg) -> int:
     """Layer-count granularity at which the block pattern repeats exactly."""
     if cfg.family == "hybrid":
@@ -291,7 +361,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool, unroll: bool = False,
     chips = mesh.devices.size
     t0 = time.time()
     if arch == "tda_ego":
-        step, args = tda_input_specs(mesh)
+        if shape in ("ego_pd_reduce", "ego_pd_persist"):
+            step, args = tda_two_phase_specs(
+                mesh, phase=shape.removeprefix("ego_pd_"))
+        else:
+            step, args = tda_input_specs(mesh)
         cfg = None
         sc = None
     else:
@@ -358,6 +432,9 @@ def main():
         os.makedirs(args.out_dir, exist_ok=True)
         cells = [(a, s) for a in ARCHS if a != "tda_ego" for s in SHAPES]
         cells.append(("tda_ego", "ego_pd"))
+        # two-phase ReductionEngine cells: reduce vs persist roofline terms
+        cells.append(("tda_ego", "ego_pd_reduce"))
+        cells.append(("tda_ego", "ego_pd_persist"))
         failures = []
         for arch, shape in cells:
             tag = f"{arch}__{shape}__{'2pod' if args.multipod else '1pod'}"

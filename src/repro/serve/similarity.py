@@ -16,6 +16,15 @@ Indexing goes through the same diagram path (``add`` submits to the inner
 server and indexes at drain), so corpus and queries share compiled plans
 and the embedding contract of ``TopoIndex`` — a graph served from any
 padding bucket lands in the same embedding space.
+
+With ``repack="on"`` (pass it to the constructor, or set it on the
+``TopoServeConfig``) queries and corpus adds are no longer persisted at
+their *input*-shape bucket caps: the inner server's two-phase plans route
+every reduced graph through the one serve-wide persist ladder
+(``repro.serve.topo_serve.repack_ladder_for`` — the same helper TopoServe
+uses, so there is exactly one bucket-ladder definition), and similarity
+queries share reduced-size compiled persist plans with every other serving
+surface in the process.
 """
 from __future__ import annotations
 
@@ -82,8 +91,15 @@ class SimilarityServe:
     def __init__(self, index: TopoIndex | None = None,
                  config: TopoServeConfig | None = None,
                  index_config: TopoIndexConfig | None = None,
-                 default_k: int = 5, mesh=None):
+                 default_k: int = 5, mesh=None,
+                 repack: str | None = None):
         self.index = index if index is not None else TopoIndex(index_config)
+        if repack is not None:
+            config = dataclasses.replace(config or TopoServeConfig(),
+                                         repack=repack)
+        # the inner TopoServe owns bucket routing AND (repack="on") the
+        # measure/repack helper + persist ladder — similarity queries are
+        # re-bucketed by their *reduced* shape, not just their input shape
         self.server = TopoServe(config, mesh=mesh)
         self.default_k = int(default_k)
         self._lock = threading.Lock()
@@ -117,6 +133,11 @@ class SimilarityServe:
     def pending(self) -> int:
         with self._lock:
             return len(self._pending_queries) + len(self._pending_adds)
+
+    def repack_rungs(self) -> dict:
+        """(bucket n_pad, persist rung n_pad) -> graphs, from the inner
+        server (empty unless ``repack="on"``)."""
+        return dict(self.server.stats["repack_rungs"])
 
     # ------------------------------------------------------------- drain
 

@@ -33,6 +33,7 @@ import numpy as np
 from repro.core.api import TopoPlan, make_topo_plan
 from repro.core.graph import GraphBatch, from_edge_lists
 from repro.core.persistence_jax import Diagrams
+from repro.core.repack import ShapeClass, default_ladder
 from repro.serve.futures import ServeFuture
 
 
@@ -64,7 +65,15 @@ DEFAULT_BUCKETS = (
 
 @dataclasses.dataclass(frozen=True)
 class TopoServeConfig:
-    """Scheduler policy + the pipeline parameters shared by every bucket."""
+    """Scheduler policy + the pipeline parameters shared by every bucket.
+
+    ``repack="on"`` switches every bucket to the two-phase plan: drain
+    becomes reduce → measure → repack → persist, where the persist phase
+    runs at each graph's post-reduction :class:`ShapeClass` instead of the
+    input bucket's caps.  The persist ladder is shared across buckets (see
+    ``repack_ladder_for``), so reduced graphs from different input buckets
+    execute the same compiled persist plans.
+    """
 
     buckets: tuple[Bucket, ...] = DEFAULT_BUCKETS
     dim: int = 1
@@ -75,6 +84,7 @@ class TopoServeConfig:
     max_batch: int = 256      # largest executed batch per bucket flush
     pad_batch_to: int = 1     # executed batches padded to a multiple of this
     record_batches: bool = False  # keep (bucket, requests) per executed batch
+    repack: str = "off"       # "off" | "on": two-phase reduce→repack→persist
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,14 +100,18 @@ class TopoFuture(ServeFuture):
     """Handle for one submitted graph; resolved by a later ``drain()``.
 
     ``result()`` returns the per-graph Diagrams slice (leaves shaped (S,),
-    no batch axis).  Thread-safe plumbing lives in ``ServeFuture``.
+    no batch axis).  Thread-safe plumbing lives in ``ServeFuture``.  With
+    ``repack="on"``, ``repack_class`` carries the persist
+    :class:`ShapeClass` this request was re-bucketed into (set at drain,
+    before the future resolves).
     """
 
-    __slots__ = ("bucket",)
+    __slots__ = ("bucket", "repack_class")
 
     def __init__(self, bucket: Bucket):
         super().__init__()
         self.bucket = bucket
+        self.repack_class: ShapeClass | None = None
 
 
 def pack_requests(reqs: Sequence[TopoRequest], bucket: Bucket) -> GraphBatch:
@@ -127,6 +141,27 @@ def _degree_f(edges: Sequence[tuple[int, int]], n_vertices: int) -> tuple[float,
     return tuple(float(x) for x in deg)
 
 
+def repack_ladder_for(buckets: Sequence[Bucket],
+                      quad_cap: int = 0) -> tuple[ShapeClass, ...]:
+    """The ONE persist-shape ladder shared by every repack-enabled server.
+
+    Rungs are the serve buckets themselves (so a reduced graph that stays
+    large persists at a familiar bucket shape) plus the default pow2
+    sub-rungs below the smallest bucket (where most reduced ego-regime
+    graphs land).  TopoServe and SimilarityServe both derive their ladders
+    here — one definition, one set of persist plan-cache keys, so reduced
+    queries from any serving surface share compiled persist pipelines.
+    """
+    smallest = min(buckets)
+    sub = default_ladder(smallest.n_pad, smallest.edge_cap,
+                         smallest.tri_cap, quad_cap)[:-1]
+    classes = {ShapeClass(n_pad=b.n_pad, edge_cap=b.edge_cap,
+                          tri_cap=b.tri_cap, quad_cap=quad_cap)
+               for b in buckets}
+    classes.update(sub)
+    return tuple(sorted(classes))
+
+
 def _count_triangles(edge_set, n_vertices: int) -> int:
     """Host-side triangle count (trace(A^3)/6) for cap-aware routing."""
     a = np.zeros((n_vertices, n_vertices), dtype=np.int64)
@@ -150,8 +185,18 @@ class TopoServe:
         self.config = config or TopoServeConfig()
         if not self.config.buckets:
             raise ValueError("TopoServeConfig.buckets must be non-empty")
+        if self.config.repack not in ("off", "on"):
+            raise ValueError(
+                f"repack must be 'off' or 'on', got {self.config.repack!r}")
+        if self.config.repack == "on" and mesh is not None:
+            raise ValueError(
+                "repack='on' is not supported under a mesh (the repack "
+                "phase boundary is host-driven); use repack='off'")
         self.mesh = mesh
         self._buckets = tuple(sorted(self.config.buckets))
+        self._repack_ladder = (
+            repack_ladder_for(self._buckets, self.config.quad_cap)
+            if self.config.repack == "on" else None)
         pad = max(1, self.config.pad_batch_to)
         if mesh is not None:
             # executed batches must DIVIDE the mesh (shard_map contract), so
@@ -167,6 +212,9 @@ class TopoServe:
         self.stats = {
             "submitted": 0, "served": 0, "failed": 0, "batches": 0,
             "padded_rows": 0,
+            # repack="on": {(bucket n_pad, persist rung n_pad): graphs} —
+            # rungs keyed by >1 bucket are shared compiled persist plans
+            "repack_rungs": {},
             "per_bucket": {b: {"submitted": 0, "served": 0, "batches": 0}
                            for b in self._buckets},
         }
@@ -190,12 +238,18 @@ class TopoServe:
             f"(largest: {self._buckets[-1]})")
 
     def plan_for(self, bucket: Bucket) -> TopoPlan:
-        """The bucket's compiled pipeline, via the process-wide plan cache."""
+        """The bucket's compiled pipeline, via the process-wide plan cache.
+
+        With ``repack="on"`` every bucket's plan shares the one serve-wide
+        persist ladder, so their reduced-size persist plans coincide in the
+        plan cache whenever reductions land on the same rung.
+        """
         c = self.config
         return make_topo_plan(
             dim=c.dim, method=c.method, sublevel=c.sublevel,
             edge_cap=bucket.edge_cap, tri_cap=bucket.tri_cap,
             quad_cap=c.quad_cap, reducer=c.reducer, mesh=self.mesh,
+            repack=c.repack, ladder=self._repack_ladder,
         )
 
     # ------------------------------------------------------------- ingest
@@ -265,12 +319,19 @@ class TopoServe:
     def _execute(self, bucket: Bucket, items: list) -> int:
         reqs = tuple(r for (r, _) in items)
         futs = [f for (_, f) in items]
+        repack_info = None
         try:
             g = pack_requests(reqs, bucket)
             n_pad_rows = (-len(reqs)) % self._pad_batch_to
             if n_pad_rows:
                 g = _pad_batch(g, n_pad_rows)
-            d = self.plan_for(bucket).execute(g)
+            plan = self.plan_for(bucket)
+            if self.config.repack == "on":
+                # two-phase drain: reduce → measure → repack → persist; the
+                # report carries each request's persist-rung assignment
+                d, repack_info = plan.execute_info(g)
+            else:
+                d = plan.execute(g)
             jax.block_until_ready(d.birth)
         except Exception as e:  # resolve, don't wedge waiting clients
             for f in futs:
@@ -281,11 +342,18 @@ class TopoServe:
         if self.config.record_batches:
             self.executed_batches.append((bucket, reqs, tuple(futs)))
         for i, f in enumerate(futs):
+            if repack_info is not None:
+                f.repack_class = repack_info.shape_class(i)
             f._resolve(jax.tree.map(lambda x: x[i], d))
         with self._lock:
             self.stats["served"] += len(futs)
             self.stats["batches"] += 1
             self.stats["padded_rows"] += n_pad_rows
+            if repack_info is not None:
+                rr = self.stats["repack_rungs"]
+                for i in range(len(futs)):
+                    k = (bucket.n_pad, repack_info.shape_class(i).n_pad)
+                    rr[k] = rr.get(k, 0) + 1
             pb = self.stats["per_bucket"][bucket]
             pb["served"] += len(futs)
             pb["batches"] += 1

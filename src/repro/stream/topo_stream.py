@@ -49,6 +49,7 @@ from repro.core.graph import GraphBatch
 from repro.core.kcore import coreness, kcore_mask
 from repro.core.persistence_jax import Diagrams, diagrams_to_numpy
 from repro.core.prunit import eligibility_matrix as _prunit_eligibility
+from repro.stream.calibration import DriftCalibrator, parse_drift_threshold
 
 # reductions exact in every homology dimension (no coral core restriction)
 _ALL_DIM_METHODS = ("prunit", "none")
@@ -65,7 +66,16 @@ class TopoStreamConfig:
     pay the embedding/distance cost.  ``last_drift`` / ``last_anomaly``
     expose the scores; a score above ``drift_threshold`` flags an anomaly
     (the Azamir–Bennis–Michel change-detection loop as a serve-time
-    by-product).
+    by-product).  ``drift_threshold`` is either a constant float or
+    ``"auto:q0.99"``-style: an online P² quantile estimator over each
+    graph's own drift history (repro/stream/calibration.py) calibrates the
+    flagging threshold per stream, with no flags during the first
+    ``drift_warmup`` observed recomputes per graph.
+
+    ``repack="on"`` makes the session's plan two-phase (reduce → repack →
+    persist, repro/core/api.py): recomputes pay persistence at each graph's
+    *post-reduction* shape class, and the session caches the last
+    reduce-phase repack assignment in ``last_repack``.
     """
 
     dim: int = 1
@@ -78,11 +88,13 @@ class TopoStreamConfig:
     exact_dims: str = "target"   # "target" (coral+prunit) | "all" (prunit)
     recompute_pad: str = "pow2"  # "pow2" | "full" sub-batch padding policy
     check_caps: bool = True      # verify simplex caps still hold after updates
+    repack: str = "off"          # "off" | "on": two-phase persist at reduced size
     drift_metric: str | None = None  # None (off) | "sw"
     drift_dim: int | None = None     # diagram dimension scored (default: dim)
-    drift_threshold: float = 1.0     # score > threshold ⟹ anomaly flag
+    drift_threshold: float | str = 1.0  # constant, or "auto:qX" (P² quantile)
     drift_n_dirs: int = 16           # SW direction-grid resolution
     drift_cap: float = 64.0          # essential-class death cap
+    drift_warmup: int = 10           # auto mode: min observations before flags
 
     def __post_init__(self):
         if self.method not in REDUCTIONS:
@@ -98,6 +110,13 @@ class TopoStreamConfig:
         if self.recompute_pad not in ("pow2", "full"):
             raise ValueError(f"recompute_pad must be 'pow2' or 'full', "
                              f"got {self.recompute_pad!r}")
+        if self.repack not in ("off", "on"):
+            raise ValueError(f"repack must be 'off' or 'on', "
+                             f"got {self.repack!r}")
+        parse_drift_threshold(self.drift_threshold)  # raises on bad spec
+        if self.drift_warmup < 5:
+            raise ValueError(f"drift_warmup must be >= 5 (P² needs 5 "
+                             f"observations), got {self.drift_warmup}")
         if self.drift_metric not in (None, "sw"):
             raise ValueError(f"drift_metric must be None or 'sw', "
                              f"got {self.drift_metric!r}")
@@ -266,9 +285,12 @@ class TopoStream:
         self._plan: TopoPlan = make_topo_plan(
             dim=c.dim, method=c.method, sublevel=c.sublevel,
             edge_cap=c.edge_cap, tri_cap=c.tri_cap, quad_cap=c.quad_cap,
-            reducer=c.reducer)
+            reducer=c.reducer, repack=c.repack)
         self._g = g
-        self._diagrams: Diagrams = self._plan.execute(g)
+        # repack="on": the session caches the last reduce-phase repack report
+        # so recomputes pay reduced-size persistence and callers can inspect
+        # the rung assignments (last_repack)
+        self._diagrams, self.last_repack = self._plan.execute_info(g)
         self._core = kcore_mask(g.adj, g.mask, c.dim + 1)
         self._elig = eligibility_matrix(g, c.sublevel)
         self._all_dims_exact = np.full(
@@ -276,6 +298,11 @@ class TopoStream:
         # drift scoring state (zero-cost when drift_metric is None)
         self.last_drift = np.zeros((g.batch,), np.float32)
         self.last_anomaly = np.zeros((g.batch,), bool)
+        mode, val = parse_drift_threshold(c.drift_threshold)
+        self._drift_calibrator = (
+            DriftCalibrator(g.batch, q=val, warmup=c.drift_warmup)
+            if mode == "auto" else None)
+        self._drift_const = val if mode == "const" else None
         self.stats = {
             "applied": 0,            # apply() calls
             "graph_updates": 0,      # (graph, step) pairs with a real change
@@ -317,6 +344,17 @@ class TopoStream:
         """Fraction of graph updates answered from cache so far."""
         return self.stats["hits"] / max(self.stats["graph_updates"], 1)
 
+    def drift_thresholds(self) -> np.ndarray:
+        """(B,) per-graph anomaly threshold currently in force.
+
+        Constant mode broadcasts the configured value; auto mode returns
+        each graph's online P² quantile estimate (``+inf`` during warmup, so
+        an uncalibrated graph never flags).
+        """
+        if self._drift_calibrator is not None:
+            return self._drift_calibrator.thresholds()
+        return np.full((self._g.batch,), self._drift_const, np.float32)
+
     # ---------------------------------------------------------------- apply
 
     def apply(self, delta: DeltaBatch) -> Diagrams:
@@ -356,8 +394,13 @@ class TopoStream:
 
         if c.drift_metric is not None:
             self.last_drift = drift
-            self.last_anomaly = drift > c.drift_threshold
+            self.last_anomaly = drift > self.drift_thresholds()
             self.stats["anomalies"] += int(self.last_anomaly.sum())
+            if self._drift_calibrator is not None and needs.any():
+                # absorb AFTER flagging: a burst is judged against the
+                # pre-burst history, then becomes part of it
+                idx = np.nonzero(needs)[0]
+                self._drift_calibrator.observe(idx, drift[idx])
 
         # coral-only hits leave dims < dim stale for that graph
         self._all_dims_exact[coral & ~prunit] = False
@@ -407,7 +450,9 @@ class TopoStream:
         b = g_new.batch
         k = len(idx)
         if self.config.recompute_pad == "full" or k >= b:
-            d = self._plan.execute(g_new)
+            d, rep = self._plan.execute_info(g_new)
+            if rep is not None:
+                self.last_repack = rep
             self.stats["recompute_batches"] += 1
             self.stats["recomputed_rows"] += b
             if k >= b:
@@ -418,7 +463,9 @@ class TopoStream:
         r = min(b, 1 << (k - 1).bit_length())
         idx_p = np.concatenate([idx, np.full(r - k, idx[0], idx.dtype)])
         sub = jax.tree.map(lambda x: x[jnp.asarray(idx_p)], g_new)
-        d = self._plan.execute(sub)
+        d, rep = self._plan.execute_info(sub)
+        if rep is not None:
+            self.last_repack = rep  # rung assignment of the gathered misses
         self.stats["recompute_batches"] += 1
         self.stats["recomputed_rows"] += r
         jidx = jnp.asarray(idx)

@@ -400,3 +400,88 @@ def test_drift_config_validation():
         TopoStreamConfig(dim=1, drift_dim=0, drift_metric="sw")
     TopoStreamConfig(dim=1, drift_dim=0, drift_metric="sw",
                      method="prunit", exact_dims="all")  # valid combination
+    with pytest.raises(ValueError, match="auto:q"):
+        TopoStreamConfig(drift_threshold="q0.99")
+    with pytest.raises(ValueError, match="quantile"):
+        TopoStreamConfig(drift_threshold="auto:q1.5")
+    with pytest.raises(ValueError, match="drift_warmup"):
+        TopoStreamConfig(drift_threshold="auto:q0.9", drift_warmup=2)
+    TopoStreamConfig(drift_threshold="auto:q0.99")  # valid spec
+
+
+# ------------------------------------------------- drift auto-calibration
+
+def test_p2_quantile_estimator_converges():
+    from repro.stream.calibration import P2Quantile
+
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(2.0, size=4000)
+    est = P2Quantile(0.9)
+    assert est.value() is None  # < 5 observations
+    for x in xs:
+        est.update(float(x))
+    want = float(np.quantile(xs, 0.9))
+    assert est.value() == pytest.approx(want, rel=0.08)
+
+
+def test_drift_calibrator_warmup_and_thresholds():
+    from repro.stream.calibration import DriftCalibrator
+
+    cal = DriftCalibrator(batch=2, q=0.5, warmup=5)
+    assert np.isinf(cal.thresholds()).all()  # no flags before warmup
+    cal.observe([0] * 5, [1.0, 2.0, 3.0, 4.0, 5.0])
+    thr = cal.thresholds()
+    assert np.isfinite(thr[0]) and thr[0] == pytest.approx(3.0)
+    assert np.isinf(thr[1])  # graph 1 still uncalibrated
+
+
+def test_drift_auto_no_flags_during_warmup():
+    # the same path→cycle recompute that flags under a tiny constant
+    # threshold must NOT flag in auto mode while history is short
+    g = from_edge_lists([[(0, 1), (1, 2), (2, 3)]], [4], n_pad=8)
+    cfg = TopoStreamConfig(dim=1, method="both", drift_metric="sw",
+                           drift_threshold="auto:q0.9", drift_warmup=5,
+                           **CFG)
+    s = TopoStream(g, cfg)
+    s.apply(delta_from_lists([[(0, 3, EDGE_INSERT)]]))
+    assert s.stats["recomputes"] == 1 and s.last_drift[0] > 0
+    assert np.isinf(s.drift_thresholds()).all()
+    assert not s.last_anomaly.any() and s.stats["anomalies"] == 0
+
+
+def test_drift_auto_calibrates_on_burst_workload():
+    # community churn with injected rewiring bursts: quiet recomputes build
+    # each graph's drift history; the burst must exceed the learned quantile
+    import jax as _jax
+
+    from repro.core.delta import delta_step
+    from repro.data.temporal import community_churn_stream
+
+    steps, churn = 26, 8
+    burst_at = {20, 24}
+    schedule = jnp.asarray([churn if t in burst_at else 1
+                            for t in range(steps)])
+    g0, deltas = community_churn_stream(
+        _jax.random.PRNGKey(5), batch=4, n_pad=16, n_vertices=14, n_comm=3,
+        p_in=0.5, p_out=0.06, steps=steps, churn=churn,
+        churn_schedule=schedule)
+    cfg = TopoStreamConfig(dim=1, method="both", edge_cap=96, tri_cap=192,
+                           drift_metric="sw", drift_threshold="auto:q0.9",
+                           drift_warmup=5)
+    s = TopoStream(g0, cfg)
+    burst_flags = quiet_flags = 0
+    quiet_steps_after_warmup = 0
+    for t in range(steps):
+        s.apply(delta_step(deltas, t))
+        calibrated = np.isfinite(s.drift_thresholds()).any()
+        if t in burst_at:
+            burst_flags += int(s.last_anomaly.sum())
+        elif calibrated:
+            quiet_steps_after_warmup += 1
+            quiet_flags += int(s.last_anomaly.sum())
+    assert burst_flags >= 1  # the rewiring bursts are flagged...
+    assert quiet_steps_after_warmup > 0
+    # ...and flags are concentrated there, not sprayed over quiet churn
+    # (q=0.9 admits ~10% steady-state exceedances by construction)
+    assert quiet_flags <= quiet_steps_after_warmup
+    assert np.isfinite(s.drift_thresholds()).any()  # thresholds calibrated
