@@ -1,11 +1,20 @@
 """Paper Fig 2 / Fig 10 + §D.2 conjecture: clustering coefficient vs the
-number of higher (k>=1) topological features.
+number of higher (k>=1) topological features, plus the persistence-kernel
+clustering repro.
 
-Two probes:
+Three probes:
   1. a controlled ER density sweep — the conjecture predicts nontrivial
      PD_1 only in a middle band of clustering coefficient (too sparse: no
      cycles; too dense: every cycle filled by a 2-simplex);
-  2. a TWITTER-regime surrogate sample (the paper's Fig 2 datasets).
+  2. a TWITTER-regime surrogate sample (the paper's Fig 2 datasets);
+  3. **persistence-kernel clustering** — the paper's Fig 2 clustering-
+     quality claim: diagrams of three structural graph families are
+     embedded (``sw_embedding``), the Carrière-style SW kernel matrix
+     ``exp(−γ·D)`` comes from the Pallas pairwise-L1 Gram
+     (``TopoIndex.gram``), and two dependency-free kernel methods —
+     kernel k-means and a kernel nearest-centroid classifier (the
+     in-container stand-in for the paper's kernel SVM) — must recover the
+     family structure (purity / held-out accuracy reported and asserted).
 
 Clustering coefficients come from the Pallas common-neighbors kernel.
 """
@@ -17,8 +26,116 @@ import numpy as np
 
 from benchmarks.common import Report
 from repro.core.api import topological_signature
+from repro.index import TopoIndex, TopoIndexConfig
 from repro.kernels.ops import clustering_coefficients
 from repro.data import graphs as gdata
+
+FAMILIES = (
+    # sparse rewired rings (PD1-rich) vs dense clique-ish vs tree-like
+    ("ws", lambda k, b: gdata.watts_strogatz(k, b, 24, 20, 4, 0.1)),
+    ("er_dense", lambda k, b: gdata.erdos_renyi(k, b, 24, 20, 0.45)),
+    ("ba_tree", lambda k, b: gdata.barabasi_albert(k, b, 24, 20, 1)),
+)
+
+
+def _family_diagrams(key, per_family: int):
+    """Diagrams + labels for ``per_family`` graphs of each family."""
+    batches, labels = [], []
+    for fam, (name, gen) in enumerate(FAMILIES):
+        key, sub = jax.random.split(key)
+        g = gdata.with_degree_filtration(gen(sub, per_family))
+        batches.append(topological_signature(g, dim=1, method="both",
+                                             edge_cap=160, tri_cap=384))
+        labels += [fam] * per_family
+    d = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *batches)
+    return d, np.asarray(labels)
+
+
+def kernel_kmeans(kmat: np.ndarray, n_clusters: int, seed: int = 0,
+                  n_iters: int = 30) -> np.ndarray:
+    """Kernel k-means on a precomputed PSD kernel matrix (pure numpy).
+
+    Feature-space distance to a cluster mean expands to
+    ``K_xx − 2·mean_{y∈c} K_xy + mean_{y,y'∈c} K_yy'``; assignments are
+    iterated from a seeded random init until fixpoint (empty clusters are
+    reseeded with the farthest point).
+    """
+    n = kmat.shape[0]
+    rng = np.random.default_rng(seed)
+    assign = rng.integers(0, n_clusters, n)
+    diag = np.diag(kmat)
+    for _ in range(n_iters):
+        dist = np.empty((n, n_clusters))
+        for c in range(n_clusters):
+            in_c = assign == c
+            if not in_c.any():  # reseed an empty cluster
+                far = int(np.argmax(dist[:, :c].min(axis=1))) if c else 0
+                in_c = np.zeros(n, bool)
+                in_c[far] = True
+            kc = kmat[:, in_c]
+            dist[:, c] = (diag - 2.0 * kc.mean(axis=1)
+                          + kmat[np.ix_(in_c, in_c)].mean())
+        new = dist.argmin(axis=1)
+        if (new == assign).all():
+            break
+        assign = new
+    return assign
+
+
+def cluster_purity(assign: np.ndarray, labels: np.ndarray) -> float:
+    """Majority-label purity of a clustering vs ground-truth families."""
+    correct = 0
+    for c in np.unique(assign):
+        members = labels[assign == c]
+        correct += np.bincount(members).max()
+    return correct / len(labels)
+
+
+def kernel_ncc_accuracy(kmat: np.ndarray, labels: np.ndarray,
+                        train: np.ndarray) -> float:
+    """Held-out accuracy of a kernel nearest-centroid classifier.
+
+    Classifies each test point to the training class with the nearest
+    feature-space mean under the same kernel expansion kernel k-means uses
+    — the dependency-free stand-in for the paper's kernel SVM.
+    """
+    test = ~train
+    classes = np.unique(labels[train])
+    diag = np.diag(kmat)[test]
+    dist = np.empty((test.sum(), len(classes)))
+    for ci, c in enumerate(classes):
+        in_c = train & (labels == c)
+        dist[:, ci] = (diag - 2.0 * kmat[np.ix_(test, in_c)].mean(axis=1)
+                       + kmat[np.ix_(in_c, in_c)].mean())
+    pred = classes[dist.argmin(axis=1)]
+    return float((pred == labels[test]).mean())
+
+
+def _bench_persistence_kernel(report: Report, quick: bool) -> None:
+    per_family = 8 if quick else 24
+    d, labels = _family_diagrams(jax.random.PRNGKey(5), per_family)
+    # "both": SW block + feature block — tree-like and dense families both
+    # have near-empty PD_1, so PD_0 statistics must contribute to separate
+    # them (same configuration the similarity example serves)
+    index = TopoIndex(TopoIndexConfig(embedding="both", k=1, n_points=12,
+                                      n_dirs=12, res=6))
+    index.add(d)
+    dist = index.gram()                    # Pallas pairwise-L1 Gram
+    gamma = 1.0 / max(np.median(dist[dist > 0]), 1e-9)
+    kmat = np.exp(-gamma * dist)           # Carrière-style SW kernel
+
+    assign = kernel_kmeans(kmat, n_clusters=len(FAMILIES), seed=3)
+    purity = cluster_purity(assign, labels)
+    # deterministic interleaved split: 2 of every 3 per family train
+    train = (np.arange(len(labels)) % 3) != 2
+    acc = kernel_ncc_accuracy(kmat, labels, train)
+    report.add("fig2_kernel", "graphs", len(labels))
+    report.add("fig2_kernel", "kmeans_purity", purity)
+    report.add("fig2_kernel", "ncc_holdout_accuracy", acc)
+    if purity < 0.66 or acc < 0.66:
+        raise AssertionError(
+            f"persistence-kernel clustering degraded: purity={purity:.2f}, "
+            f"ncc accuracy={acc:.2f} (want >= 0.66)")
 
 
 def _mean_cc(g) -> jax.Array:
@@ -26,7 +143,7 @@ def _mean_cc(g) -> jax.Array:
     return jnp.sum(cc, -1) / jnp.maximum(jnp.sum(g.mask, -1), 1)
 
 
-def run(report: Report) -> None:
+def run(report: Report, quick: bool = False) -> None:
     key = jax.random.PRNGKey(31)
     # --- probe 1: ER density sweep (N=40, B=8 per density) ---
     densities = (0.05, 0.12, 0.25, 0.45, 0.7, 0.9)
@@ -56,6 +173,9 @@ def run(report: Report) -> None:
                               edge_cap=192, tri_cap=192)
     report.add("fig2_cc", "TWITTER_mean_clustering", float(jnp.mean(_mean_cc(g))))
     report.add("fig2_cc", "TWITTER_mean_pd1_features", float(jnp.mean(d.count(1))))
+
+    # --- probe 3: persistence-kernel kmeans / nearest-centroid (Fig 2) ---
+    _bench_persistence_kernel(report, quick)
 
 
 if __name__ == "__main__":

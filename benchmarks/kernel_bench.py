@@ -34,6 +34,49 @@ def run(report: Report) -> None:
     bench_pairwise_gram(report, "kernel_pairwise_gram",
                         ((64, 256), (128, 512)))
 
+    bench_auction_lap(report)
+    bench_sinkhorn_lse(report)
+
+
+def bench_auction_lap(report: Report) -> None:
+    """Batched auction-LAP kernel vs its jnp oracle on random costs."""
+    kg = jax.random.PRNGKey(9)
+    for (b, m) in ((64, 32), (256, 32)):
+        c = jax.random.uniform(kg, (b, m, m), jnp.float32, 0.0, 5.0)
+        (_, tot, conv, _), t = timed(ops.auction_lap, c, repeats=1)
+        _, tot_ref, _, _ = jax.vmap(ref.auction_lap_ref)(c)
+        diff = float(jnp.max(jnp.abs(tot - tot_ref)))
+        report.add("kernel_auction_lap", f"B{b}_M{m}_pallas_s", t)
+        report.add("kernel_auction_lap", f"B{b}_M{m}_solves_per_s",
+                   b / max(t, 1e-9))
+        report.add("kernel_auction_lap", f"B{b}_M{m}_converged_frac",
+                   float(jnp.mean(conv)))
+        report.add("kernel_auction_lap", f"B{b}_M{m}_ref_max_abs_diff", diff)
+
+
+def bench_sinkhorn_lse(report: Report) -> None:
+    """Blocked LSE kernel vs its dense jnp oracle (one half-update)."""
+    from repro.metrics.distances import _cloud_planes
+
+    kg = jax.random.PRNGKey(11)
+    for (b, m) in ((8, 256), (4, 1024)):
+        ks = jax.random.split(kg, 4)
+        x = jax.random.normal(ks[0], (b, m, 2), jnp.float32)
+        y = jax.random.normal(ks[1], (b, m, 2), jnp.float32)
+        flags = jnp.arange(m) >= m // 2
+        xp, yp = _cloud_planes(x, flags), _cloud_planes(y, flags)
+        dual = jax.random.normal(ks[2], (b, m), jnp.float32)
+        logw = jnp.where(jax.random.uniform(ks[3], (b, m)) > 0.1,
+                         0.0, -jnp.inf)
+        e_t = jnp.full((b, 1), 0.5, jnp.float32)
+        got, t = timed(ops.sinkhorn_lse, xp, yp, dual, logw, e_t, repeats=1)
+        want, t_ref = timed(jax.jit(ref.sinkhorn_lse_ref),
+                            xp, yp, dual, logw, e_t, repeats=1)
+        diff = float(jnp.max(jnp.abs(got - want)))
+        report.add("kernel_sinkhorn_lse", f"B{b}_M{m}_pallas_s", t)
+        report.add("kernel_sinkhorn_lse", f"B{b}_M{m}_jnp_s", t_ref)
+        report.add("kernel_sinkhorn_lse", f"B{b}_M{m}_max_abs_diff", diff)
+
 
 def bench_pairwise_gram(report: Report, bench: str, sizes) -> float:
     """Time jnp vs Pallas pairwise-L1 Gram on random embeddings.

@@ -1,6 +1,6 @@
-"""TopoMetric benchmark: distance throughput, Gram kernel, parity, drift.
+"""MetricEngine benchmark: throughput, kernels, parity, drift, retrieval.
 
-Four panels (docs/ARCHITECTURE.md §TopoMetric):
+Seven panels (docs/ARCHITECTURE.md §MetricEngine):
 
 * **pairs/s** — batched sliced-Wasserstein and Sinkhorn-W2 throughput on
   diagram pairs produced by the real reduce->persist pipeline;
@@ -9,6 +9,18 @@ Four panels (docs/ARCHITECTURE.md §TopoMetric):
 * **parity** — the acceptance sweep: random small diagram pairs checked
   against the host references (SW within rtol 1e-5 of ``sw_dense``;
   Sinkhorn within 5% of exact W2) — failures are counted and raised;
+* **auction parity** — the exact-Wasserstein acceptance sweep: the batched
+  auction-LAP ``exact_w`` backend vs the Hungarian/scipy oracle within
+  atol 1e-5 on randomized masked pairs (0 mismatches required), plus the
+  bisection ``bottleneck_approx`` vs ``bottleneck_exact``;
+* **blocked Sinkhorn** — ``impl="blocked"`` vs ``impl="dense"`` agreement
+  at tile-fitting sizes (f32-roundoff consistency), and the memory-ceiling
+  demo: blocked runs full-tensor clouds whose dense cost matrices dwarf
+  the previous ``n_points²`` working set;
+* **rerank recall** — two-stage retrieval (LSH coarse → Gram → exact_w
+  re-rank, the SimilarityServe stage-2 code path) vs an exhaustive exact
+  re-rank over a ≥10k-diagram synthetic corpus: recall@10 ≥ 0.95 required,
+  with per-stage candidate counts and wall times;
 * **drift** — the change-detection demo: a ``community_churn_stream`` whose
   churn schedule is quiet except for injected rewiring bursts, replayed
   through a drift-scoring ``TopoStream``; the bench asserts every burst is
@@ -33,9 +45,23 @@ from repro.core.delta import delta_step
 from repro.core.persistence_jax import Diagrams
 from repro.data import graphs as gdata
 from repro.data.temporal import community_churn_stream
+from repro.index import TopoIndex, TopoIndexConfig
+from repro.metrics import (
+    bottleneck_approx,
+    compare,
+    exact_w_info,
+    pairwise,
+    sinkhorn_w2,
+    sw_embedding,
+)
 from repro.metrics import reference as mref
-from repro.metrics import sinkhorn_w2, sliced_wasserstein, sw_embedding
-from repro.metrics.testing import diagram_points, random_diagram
+from repro.metrics.testing import (
+    diagram_points,
+    noisy_copies,
+    random_diagram,
+    seed_diagram_arrays,
+)
+from repro.serve import SimilarityServe
 from repro.stream import TopoStream, TopoStreamConfig
 
 CAP = 64.0
@@ -55,11 +81,17 @@ def _bench_throughput(report: Report, quick: bool) -> None:
     d1 = jax.tree.map(lambda x: x[0::2], d)
     d2 = jax.tree.map(lambda x: x[1::2], d)
 
-    _, t_sw = timed(lambda a, b: sliced_wasserstein(a, b, k=1, cap=CAP), d1, d2)
+    _, t_sw = timed(lambda a, b: compare(a, b, metric="sw", k=1, cap=CAP),
+                    d1, d2)
     report.add("metrics_sw", f"B{batch}_pairs_per_s", batch / max(t_sw, 1e-9))
-    _, t_sk = timed(lambda a, b: sinkhorn_w2(a, b, k=1, cap=CAP), d1, d2)
+    _, t_sk = timed(
+        lambda a, b: compare(a, b, metric="sinkhorn", k=1, cap=CAP), d1, d2)
     report.add("metrics_sinkhorn", f"B{batch}_pairs_per_s",
                batch / max(t_sk, 1e-9))
+    _, t_ew = timed(
+        lambda a, b: compare(a, b, metric="exact_w", k=1, cap=CAP), d1, d2)
+    report.add("metrics_exact_w", f"B{batch}_pairs_per_s",
+               batch / max(t_ew, 1e-9))
     _, t_emb = timed(lambda a: sw_embedding(a, k=1, cap=CAP), d)
     report.add("metrics_sw_embedding", f"B{2*batch}_diagrams_per_s",
                2 * batch / max(t_emb, 1e-9))
@@ -85,8 +117,8 @@ def _bench_parity(report: Report, quick: bool) -> tuple[int, int]:
              for _ in range(n_pairs)]
     d1 = jax.tree.map(lambda *xs: jnp.stack(xs), *[a for a, _ in pairs])
     d2 = jax.tree.map(lambda *xs: jnp.stack(xs), *[b for _, b in pairs])
-    sw = np.asarray(sliced_wasserstein(d1, d2, k=1, n_dirs=32, cap=CAP))
-    sk = np.asarray(sinkhorn_w2(d1, d2, k=1, cap=CAP))
+    sw = np.asarray(compare(d1, d2, metric="sw", k=1, n_dirs=32, cap=CAP))
+    sk = np.asarray(compare(d1, d2, metric="sinkhorn", k=1, cap=CAP))
 
     checked = failed = 0
     for i, (a, b) in enumerate(pairs):
@@ -103,6 +135,197 @@ def _bench_parity(report: Report, quick: bool) -> tuple[int, int]:
     report.add("metrics_parity", "checked", checked)
     report.add("metrics_parity", "failed", failed)
     return checked, failed
+
+
+def _bench_auction_parity(report: Report, quick: bool) -> tuple[int, int]:
+    """exact_w (auction-LAP) vs the Hungarian oracle; returns (checked, failed).
+
+    The acceptance sweep for the exact backend: randomized masked diagram
+    pairs, atol 1e-5 on W2, 0 mismatches required.  The bisection
+    bottleneck backend rides along against ``bottleneck_exact``.
+    """
+    n_pairs = 60 if quick else 200
+    rng = np.random.default_rng(35)
+    pairs = [(random_diagram(rng, essential=int(rng.integers(0, 3))),
+              random_diagram(rng))
+             for _ in range(n_pairs)]
+    d1 = jax.tree.map(lambda *xs: jnp.stack(xs), *[a for a, _ in pairs])
+    d2 = jax.tree.map(lambda *xs: jnp.stack(xs), *[b for _, b in pairs])
+    (w, conv, rounds), t_w = timed(
+        lambda a, b: exact_w_info(a, b, k=1, q=2.0, n_points=16), d1, d2,
+        repeats=1)
+    w, conv, rounds = np.asarray(w), np.asarray(conv), np.asarray(rounds)
+    bn = np.asarray(bottleneck_approx(d1, d2, k=1, n_points=16))
+
+    checked = failed = bn_failed = 0
+    for i, (a, b) in enumerate(pairs):
+        pa, pb = diagram_points(a, k=1, cap=CAP), diagram_points(b, k=1,
+                                                                 cap=CAP)
+        checked += 2
+        if abs(w[i] - mref.wasserstein_exact(pa, pb, q=2.0)) > 1e-5:
+            failed += 1
+        bref = mref.bottleneck_exact(pa, pb)
+        if abs(bn[i] - bref) > max(1e-4, 1e-4 * bref):
+            bn_failed += 1
+    report.add("metrics_auction_parity", "checked", checked)
+    report.add("metrics_auction_parity", "failed", failed)
+    report.add("metrics_auction_parity", "bottleneck_failed", bn_failed)
+    report.add("metrics_auction_parity", "converged_frac", conv.mean())
+    report.add("metrics_auction_parity", "rounds_mean", rounds.mean())
+    report.add("metrics_auction_parity", f"B{n_pairs}_pairs_per_s",
+               n_pairs / max(t_w, 1e-9))
+    return checked, failed + bn_failed
+
+
+def _bench_blocked_sinkhorn(report: Report, quick: bool) -> None:
+    """Blocked (Pallas tiled) vs dense Sinkhorn: consistency + memory demo.
+
+    At tile-fitting sizes the two paths run identical accumulation algebra
+    and must agree to f32 roundoff; at full-tensor sizes the blocked path
+    runs where the dense per-pair cost matrices would dwarf the previous
+    ``n_points²`` working-set ceiling.
+    """
+    rng = np.random.default_rng(37)
+
+    def stacked(n, s):
+        rows = [random_diagram(rng, s=s, n=int(rng.integers(2, 9)))
+                for _ in range(n)]
+        return jax.tree.map(lambda *x: jnp.stack(x), *rows)
+
+    d1, d2 = stacked(16, 12), stacked(16, 12)
+    dense = np.asarray(sinkhorn_w2(d1, d2, k=1, impl="dense"))
+    blocked = np.asarray(sinkhorn_w2(d1, d2, k=1, impl="blocked"))
+    rel = float(np.max(np.abs(dense - blocked) / np.maximum(dense, 1e-9)))
+    report.add("metrics_blocked_sinkhorn", "tilefit_max_rel_diff", rel)
+    if rel >= 1e-4:
+        raise AssertionError(
+            f"blocked Sinkhorn diverged from the dense path by {rel} "
+            "relative at tile-fitting size (want f32 roundoff, < 1e-4)")
+
+    # memory-ceiling demo: full-tensor clouds, cost never materialized
+    s_full = 256 if quick else 512
+    b1, b2 = stacked(2, s_full), stacked(2, s_full)
+    kw = dict(k=1, n_points=None, n_iters=15, n_scales=3)
+    got_d, t_dense = timed(
+        lambda a, b: sinkhorn_w2(a, b, impl="dense", **kw), b1, b2,
+        repeats=1)
+    got_b, t_blocked = timed(
+        lambda a, b: sinkhorn_w2(a, b, impl="blocked", **kw), b1, b2,
+        repeats=1)
+    rel_full = float(np.max(np.abs(np.asarray(got_d) - np.asarray(got_b))
+                            / np.maximum(np.asarray(got_d), 1e-9)))
+    dense_bytes = 3 * (2 * s_full) ** 2 * 4     # per pair: c_xy, c_xx, c_yy
+    tile_bytes = 128 * 128 * 4
+    report.add("metrics_blocked_sinkhorn", f"S{s_full}_full_rel_diff",
+               rel_full)
+    report.add("metrics_blocked_sinkhorn", f"S{s_full}_dense_s", t_dense)
+    report.add("metrics_blocked_sinkhorn", f"S{s_full}_blocked_s", t_blocked)
+    report.add("metrics_blocked_sinkhorn", "dense_cost_bytes_per_pair",
+               dense_bytes)
+    report.add("metrics_blocked_sinkhorn", "blocked_tile_bytes", tile_bytes)
+    if rel_full >= 1e-3:
+        raise AssertionError(
+            f"blocked Sinkhorn diverged at full-tensor size: {rel_full}")
+
+
+def _bench_rerank_recall(report: Report, quick: bool) -> float:
+    """Two-stage retrieval vs exhaustive exact re-rank; returns recall@10.
+
+    Stage 1 is the LSH-prefiltered Gram retrieval of ``TopoIndex``; stage 2
+    is the very ``SimilarityServe._rerank_exact`` code path production
+    drains run (batched auction exact_w over the stored clouds).  Ground
+    truth is the exhaustive exact_w over the whole corpus.
+    """
+    corpus_n = 2048 if quick else 10240
+    q_n = 8 if quick else 16
+    k = 10
+    rng = np.random.default_rng(36)
+    seeds = seed_diagram_arrays(rng, n_seeds=32, s=16)
+    corpus = noisy_copies(seeds, rng, corpus_n, 0.02, 0.4)
+    queries = noisy_copies(seeds, rng, q_n, 0.01, 0.02)
+
+    cfg = TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8,
+                          coarse="lsh", lsh_bits=128, lsh_overfetch=8)
+    index = TopoIndex(cfg)
+    t0 = time.perf_counter()
+    for s0 in range(0, corpus_n, 1024):
+        index.add(jax.tree.map(lambda x: x[s0:s0 + 1024], corpus))
+    t_add = time.perf_counter() - t0
+
+    srv = SimilarityServe(index=index, rerank="exact_w", overfetch=4)
+    t0 = time.perf_counter()
+    res = index.query(queries, k=k * srv.overfetch)
+    ids2, _, backends2 = srv._rerank_exact(queries, res)
+    t_two_stage = time.perf_counter() - t0
+    assert all(b == "exact_w" for row in backends2 for b in row)
+
+    # exhaustive ground truth: exact_w of every (corpus row, query) pair
+    all_clouds = index.clouds(np.arange(len(index)))
+    t0 = time.perf_counter()
+    hits = 0
+    for i in range(q_n):
+        qi = jax.tree.map(lambda x: x[i][None], queries)
+        d = np.asarray(pairwise(all_clouds, qi, metric="exact_w",
+                                k=cfg.k, cap=cfg.cap, n_points=cfg.n_points,
+                                block_rows=2048))[:, 0]
+        gt = {index.ids[j] for j in np.argsort(d, kind="stable")[:k]}
+        hits += len(gt & set(ids2[i][:k]))
+    t_exhaustive = time.perf_counter() - t0
+    recall = hits / (k * q_n)
+
+    report.add("metrics_rerank", "corpus", corpus_n)
+    report.add("metrics_rerank", "queries", q_n)
+    report.add("metrics_rerank", "recall_at_10", recall)
+    report.add("metrics_rerank", "coarse_candidates",
+               res.stats["coarse_candidates"])
+    report.add("metrics_rerank", "stage2_pairs", srv.stats["stage2_pairs"])
+    report.add("metrics_rerank", "index_add_s", t_add)
+    report.add("metrics_rerank", "two_stage_s", t_two_stage)
+    report.add("metrics_rerank", "exhaustive_s", t_exhaustive)
+    report.add("metrics_rerank", "speedup_vs_exhaustive",
+               t_exhaustive / max(t_two_stage, 1e-9))
+    return recall
+
+
+def _bench_two_stage_serve(report: Report, quick: bool) -> None:
+    """Per-stage stats through the real SimilarityServe two-phase drain."""
+    from benchmarks.fig2_clustering import FAMILIES
+
+    srv = SimilarityServe(
+        index_config=TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8),
+        default_k=3, rerank="exact_w", overfetch=3)
+    per = 4 if quick else 8
+    key = jax.random.PRNGKey(38)
+    futs = []
+    for name, gen in FAMILIES:
+        key, sub = jax.random.split(key)
+        g = gdata.with_degree_filtration(gen(sub, per + 1))
+        for i in range(per + 1):
+            adj = np.asarray(g.adj[i])
+            n = int(np.asarray(g.mask[i]).sum())
+            u, v = np.nonzero(np.triu(adj))
+            edges = list(zip(u.tolist(), v.tolist()))
+            if i < per:
+                srv.add(edges=edges, n_vertices=n, gid=f"{name}/{i}")
+            else:
+                futs.append(srv.submit(edges=edges, n_vertices=n))
+    t0 = time.perf_counter()
+    srv.drain()
+    wall = time.perf_counter() - t0
+    for f in futs:
+        r = f.result(timeout=30)
+        assert r.backends == ("exact_w",) * len(r.ids), r.backends
+    if not (srv.stats["stage1_candidates"] and srv.stats["stage2_pairs"]):
+        raise AssertionError(f"two-stage drain stats missing: {srv.stats}")
+    report.add("metrics_serve_two_stage", "indexed", srv.stats["indexed"])
+    report.add("metrics_serve_two_stage", "queries", srv.stats["queries"])
+    report.add("metrics_serve_two_stage", "stage1_candidates",
+               srv.stats["stage1_candidates"])
+    report.add("metrics_serve_two_stage", "stage2_pairs",
+               srv.stats["stage2_pairs"])
+    report.add("metrics_serve_two_stage", "stage1_s", srv.stats["stage1_s"])
+    report.add("metrics_serve_two_stage", "stage2_s", srv.stats["stage2_s"])
+    report.add("metrics_serve_two_stage", "drain_s", wall)
 
 
 def _bench_drift(report: Report, quick: bool) -> tuple[int, int, int]:
@@ -147,17 +370,30 @@ def run(report: Report, quick: bool = False) -> None:
     _bench_throughput(report, quick)
     _bench_gram(report, quick)
     checked, failed = _bench_parity(report, quick)
+    a_checked, a_failed = _bench_auction_parity(report, quick)
+    _bench_blocked_sinkhorn(report, quick)   # asserts internally
+    recall = _bench_rerank_recall(report, quick)
+    _bench_two_stage_serve(report, quick)    # asserts internally
     bursts, hits, false_pos = _bench_drift(report, quick)
     if failed:
         raise AssertionError(
             f"{failed}/{checked} distance checks diverged from the host "
             "references")
+    if a_failed:
+        raise AssertionError(
+            f"{a_failed}/{a_checked} auction/bottleneck checks diverged "
+            "from the exact host oracles")
+    if recall < 0.95:
+        raise AssertionError(
+            f"two-stage retrieval recall@10 {recall:.3f} < 0.95 vs "
+            "exhaustive exact re-rank")
     if hits != bursts or false_pos:
         raise AssertionError(
             f"drift demo: {hits}/{bursts} bursts flagged, "
             f"{false_pos} false positives")
-    print(f"[metrics_bench] parity OK: {checked} checks; drift OK: "
-          f"{hits}/{bursts} bursts flagged, 0 false positives")
+    print(f"[metrics_bench] parity OK: {checked} checks; auction parity "
+          f"OK: {a_checked} checks; rerank recall@10: {recall:.3f}; drift "
+          f"OK: {hits}/{bursts} bursts flagged, 0 false positives")
 
 
 def main() -> None:

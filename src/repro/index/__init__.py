@@ -1,5 +1,5 @@
-"""TopoIndex: persistence-diagram similarity index over SW/feature
-embeddings (docs/ARCHITECTURE.md §TopoIndex)."""
-from repro.index.topo_index import TopoIndex, TopoIndexConfig
+"""TopoIndex: retrieve→re-rank persistence-diagram similarity index over
+SW/feature embeddings (docs/ARCHITECTURE.md §TopoIndex)."""
+from repro.index.topo_index import QueryResult, TopoIndex, TopoIndexConfig
 
-__all__ = ["TopoIndex", "TopoIndexConfig"]
+__all__ = ["QueryResult", "TopoIndex", "TopoIndexConfig"]

@@ -4,10 +4,24 @@ The metrics layer turns diagrams into fixed-size vectors whose pairwise L1
 distance is a diagram metric (``repro.metrics.sw_embedding``; optionally
 concatenated with the ``repro.topo.features`` signature vector).  TopoIndex
 stores those vectors host-side and answers batched k-nearest-neighbor
-queries by running the tiled Pallas Gram kernel
-(``repro.kernels.ops.pairwise_l1``) between the query embeddings and the
-index, then ``top_k`` over the negated distances — the "which known graphs
-look like this one" serving primitive (Aktas et al. §applications).
+queries as a **retrieve → re-rank pipeline**:
+
+* **coarse stage** (``coarse="lsh"``): packed hyperplane codes over the
+  embeddings, Hamming-ranked with bit-count arithmetic — O(N·bits/64) per
+  query, the only stage that touches all N rows, built for the >10⁶-graph
+  regime;
+* **Gram stage**: the tiled Pallas pairwise-L1 kernel
+  (``repro.kernels.ops.pairwise_l1``) over the surviving candidates (or
+  over the whole index when ``coarse="none"`` / the index is small) —
+  the exact embedding metric, now demoted to stage one of serving;
+* **exact stage** (serve-level): ``serve/similarity.py`` re-ranks the top
+  Gram candidates with the auction-LAP ``exact_w`` backend, using the
+  compacted top-persistence clouds this index stores per entry.
+
+Every query answer is a :class:`QueryResult` that records, per returned
+distance, which backend produced it (``"gram"`` embedding-L1 here;
+``"exact_w"`` after the serve re-rank) — callers never silently mix
+distance scales.
 
 Embedding contract (docs/ARCHITECTURE.md §TopoIndex):
 
@@ -16,12 +30,9 @@ Embedding contract (docs/ARCHITECTURE.md §TopoIndex):
   buckets / plans index into the same space;
 * ``embed`` is pure and jit-backed — ``add`` and ``query`` accept the
   batched ``Diagrams`` layout directly;
-* distances returned by ``query`` are exactly the metric the Gram kernel
-  computes (L1 between embeddings; for the ``"sw"`` embedding that is the
-  anchored sliced-Wasserstein approximation of ``repro.metrics``).
-
-The index is deliberately exact and dense (a (Q, N) Gram per query batch);
-an ANN structure for >10⁶ graphs is a ROADMAP item.
+* the LSH projection is a pure function of ``(width, lsh_bits, lsh_seed)``,
+  so codes computed at different ``add`` calls (or after ``load``) are
+  mutually consistent.
 """
 from __future__ import annotations
 
@@ -35,10 +46,15 @@ import numpy as np
 
 from repro.core.persistence_jax import Diagrams
 from repro.kernels import ops
-from repro.metrics.distances import sw_embedding
+from repro.metrics.distances import compact_top_k, sw_embedding
 from repro.topo.features import feature_vector
 
 EMBEDDINGS = ("sw", "features", "both")
+COARSE = ("none", "lsh")
+
+# byte → set-bit-count table: packed-code Hamming distances without the
+# NumPy-2-only np.bitwise_count (the declared pin allows numpy >= 1.24)
+_POPCOUNT = np.array([bin(i).count("1") for i in range(256)], np.uint8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,12 +69,23 @@ class TopoIndexConfig:
     res: int = 8               # persistence-image resolution (features)
     max_dim: int = 1           # feature dims 0..max_dim (features)
     feature_weight: float = 1.0  # scale of the features block ("both")
+    coarse: str = "none"       # "none" | "lsh": Hamming prefilter stage
+    lsh_bits: int = 128        # hyperplane code width (multiple of 8)
+    lsh_seed: int = 7          # projection seed (defines the code space)
+    lsh_overfetch: int = 8     # coarse candidates per query = k · overfetch
 
     def __post_init__(self):
         if self.embedding not in EMBEDDINGS:
             raise ValueError(
                 f"unknown embedding {self.embedding!r}; want one of "
                 f"{EMBEDDINGS}")
+        if self.coarse not in COARSE:
+            raise ValueError(
+                f"unknown coarse stage {self.coarse!r}; want one of {COARSE}")
+        if self.lsh_bits % 8 or self.lsh_bits <= 0:
+            raise ValueError(
+                f"lsh_bits must be a positive multiple of 8, "
+                f"got {self.lsh_bits}")
 
     @property
     def width(self) -> int:
@@ -71,8 +98,51 @@ class TopoIndexConfig:
         return w
 
 
+class QueryResult:
+    """One batched kNN answer with per-distance backend provenance.
+
+    ``ids``: (B, k') nested id lists, nearest first; ``distances``:
+    (B, k') float32; ``backends``: (B, k') nested lists naming the backend
+    each distance came from (``"gram"`` = embedding-L1; the serve re-rank
+    substitutes ``"exact_w"``); ``rows``: (B, k') int index rows of the
+    returned entries (what the serve re-rank gathers stored clouds by);
+    ``stats``: per-stage query statistics (``stage``,
+    ``coarse_candidates``).
+
+    Iterates and indexes like the legacy ``(ids, distances)`` tuple, so
+    ``ids, dists = index.query(...)`` keeps working.
+    """
+
+    __slots__ = ("ids", "distances", "backends", "rows", "stats")
+
+    def __init__(self, ids, distances, backends, rows, stats):
+        self.ids = ids
+        self.distances = distances
+        self.backends = backends
+        self.rows = rows
+        self.stats = stats
+
+    def __iter__(self):
+        return iter((self.ids, self.distances))
+
+    def __getitem__(self, i):
+        # exactly the legacy 2-tuple surface (negative indices included);
+        # backends/stats are attribute-only so no old call site silently
+        # picks up a different element
+        return (self.ids, self.distances)[i]
+
+    def __len__(self):
+        return 2
+
+    def __repr__(self):
+        b = len(self.ids)
+        k = len(self.ids[0]) if self.ids else 0
+        return (f"QueryResult(B={b}, k={k}, stage={self.stats.get('stage')!r}"
+                f", coarse_candidates={self.stats.get('coarse_candidates')})")
+
+
 class TopoIndex:
-    """Exact kNN index over diagram embeddings.
+    """Retrieve→re-rank kNN index over diagram embeddings.
 
     >>> index = TopoIndex()
     >>> index.add(diagrams, ids=["a", "b", "c"])
@@ -83,6 +153,13 @@ class TopoIndex:
         self.config = config or TopoIndexConfig()
         self._emb = np.zeros((0, self.config.width), np.float32)
         self._ids: list[str] = []
+        # compacted top-persistence clouds (N, 3, n_points): birth, death,
+        # keep — what the serve-level exact_w re-rank matches against
+        self._clouds = np.zeros((0, 3, self.config.n_points), np.float32)
+        self._has_clouds = True  # False only for pre-1.4 loads
+        # packed LSH codes (N, lsh_bits/8) u8, maintained when coarse="lsh"
+        self._codes = np.zeros((0, self.config.lsh_bits // 8), np.uint8)
+        self._proj: Optional[np.ndarray] = None
         # device-resident copy of _emb, built lazily and invalidated by add()
         # so steady-state queries skip the O(N·D) host-to-device re-upload
         self._emb_device: Optional[jax.Array] = None
@@ -111,6 +188,26 @@ class TopoIndex:
             emb = emb[None]
         return emb.astype(jnp.float32)
 
+    def _projection(self) -> np.ndarray:
+        """(width, lsh_bits) hyperplane normals — pure in (width, bits, seed)."""
+        if self._proj is None:
+            rng = np.random.default_rng(self.config.lsh_seed)
+            self._proj = rng.standard_normal(
+                (self.config.width, self.config.lsh_bits)).astype(np.float32)
+        return self._proj
+
+    def _lsh_codes(self, emb: np.ndarray) -> np.ndarray:
+        """(B, lsh_bits/8) packed hyperplane codes of (B, width) embeddings.
+
+        Embeddings are row-centered first: SW embeddings share a large
+        positive common component (sorted nonnegative projections), and
+        hyperplane signs only discriminate after that shared direction is
+        projected out.
+        """
+        centered = emb - emb.mean(axis=-1, keepdims=True)
+        bits = (centered @ self._projection()) > 0
+        return np.packbits(bits, axis=-1)
+
     # -------------------------------------------------------- add / query
 
     def add(self, d: Diagrams, ids: Optional[Sequence[str]] = None) -> list[str]:
@@ -124,7 +221,17 @@ class TopoIndex:
         dup = set(ids) & set(self._ids)
         if dup:
             raise ValueError(f"duplicate ids: {sorted(dup)}")
+        c = self.config
+        b, e, keep = compact_top_k(d, c.k, c.n_points, c.cap)
+        clouds = np.stack([np.asarray(b, np.float32),
+                           np.asarray(e, np.float32),
+                           np.asarray(keep, np.float32)], axis=-2)
+        clouds = clouds.reshape(-1, 3, c.n_points)
         self._emb = np.concatenate([self._emb, emb], axis=0)
+        self._clouds = np.concatenate([self._clouds, clouds], axis=0)
+        if c.coarse == "lsh":
+            self._codes = np.concatenate(
+                [self._codes, self._lsh_codes(emb)], axis=0)
         self._ids.extend(ids)
         self._emb_device = None
         return ids
@@ -134,23 +241,83 @@ class TopoIndex:
             self._emb_device = jnp.asarray(self._emb)
         return self._emb_device
 
-    def query(self, d: Diagrams, k: int = 5) -> tuple[list[list[str]], np.ndarray]:
-        """Batched kNN: returns ``(ids, distances)``, nearest first.
+    def clouds(self, rows: np.ndarray) -> Diagrams:
+        """Diagrams rebuilt from the stored compacted clouds of ``rows``.
 
-        ``ids`` is a (B, k') nested list and ``distances`` a (B, k') float32
-        array with ``k' = min(k, len(index))``.  The (Q, N) distance matrix
-        is one Pallas Gram call (``kernels/pairwise_gram.py``).
+        Leaves are shaped ``rows.shape + (n_points,)`` — the fixed-width
+        dim-``k`` sub-diagrams the exact re-rank backend matches against
+        (deaths already capped at ``config.cap``).
+        """
+        if not self._has_clouds:
+            raise ValueError(
+                "index was loaded from a save without stored clouds "
+                "(pre-1.4 format); re-add the diagrams to enable the "
+                "exact re-rank stage")
+        cl = self._clouds[rows]
+        keep = cl[..., 2, :] > 0
+        return Diagrams(
+            birth=jnp.asarray(cl[..., 0, :]),
+            death=jnp.asarray(cl[..., 1, :]),
+            dim=jnp.where(jnp.asarray(keep), self.config.k, -1),
+            valid=jnp.asarray(keep))
+
+    def _coarse_candidates(self, emb_q: np.ndarray, m: int) -> np.ndarray:
+        """(Q, m) Hamming-nearest row indices (coarse LSH stage)."""
+        codes_q = self._lsh_codes(emb_q)
+        # XOR + popcount over the packed axis: (Q, N) Hamming distances.
+        # Chunked over N so the (Q, chunk, bits/8) byte temporaries stay
+        # bounded however large the index grows (the whole point of the
+        # coarse stage is to be cheap at >10⁶ entries).
+        n = self._codes.shape[0]
+        chunk = 1 << 16
+        ham = np.empty((codes_q.shape[0], n), np.int32)
+        for s in range(0, n, chunk):
+            ham[:, s:s + chunk] = _POPCOUNT[
+                codes_q[:, None, :] ^ self._codes[None, s:s + chunk, :]
+            ].sum(axis=-1, dtype=np.int32)
+        part = np.argpartition(ham, m - 1, axis=-1)[:, :m]
+        order = np.take_along_axis(ham, part, axis=-1).argsort(
+            axis=-1, kind="stable")
+        return np.take_along_axis(part, order, axis=-1)
+
+    def query(self, d: Diagrams, k: int = 5) -> QueryResult:
+        """Batched kNN: nearest first, with per-distance backend labels.
+
+        ``coarse="none"`` (or a small index): one (Q, N) Pallas Gram call.
+        ``coarse="lsh"``: Hamming top ``k·lsh_overfetch`` per query, then
+        the Gram kernel over the candidate union — distances returned are
+        always the embedding-L1 metric (backend ``"gram"``), never raw
+        Hamming counts.
         """
         if not self._ids:
             raise ValueError("query on an empty TopoIndex")
         emb_q = self.embed(d)
-        gram = ops.pairwise_l1(emb_q, self._device_emb())
+        c = self.config
         kk = min(int(k), len(self._ids))
-        neg, idx = jax.lax.top_k(-gram, kk)
-        dists = np.asarray(-neg, np.float32)
-        idx = np.asarray(idx)
+        n_coarse = min(max(kk, 1) * c.lsh_overfetch, len(self._ids))
+        if c.coarse == "lsh" and n_coarse < len(self._ids):
+            cand = self._coarse_candidates(np.asarray(emb_q), n_coarse)
+            union, inv = np.unique(cand, return_inverse=True)
+            inv = inv.reshape(cand.shape)
+            gram_u = np.asarray(ops.pairwise_l1(
+                emb_q, jnp.asarray(self._emb[union])))
+            # per query: distances to its own candidates only
+            q_idx = np.arange(cand.shape[0])[:, None]
+            cand_d = gram_u[q_idx, inv]                       # (Q, m)
+            order = np.argsort(cand_d, axis=-1, kind="stable")[:, :kk]
+            dists = np.take_along_axis(cand_d, order, axis=-1)
+            idx = np.take_along_axis(cand, order, axis=-1)
+            stats = {"stage": "lsh+gram", "coarse_candidates": int(n_coarse)}
+        else:
+            gram = ops.pairwise_l1(emb_q, self._device_emb())
+            neg, idx = jax.lax.top_k(-gram, kk)
+            dists = np.asarray(-neg, np.float32)
+            idx = np.asarray(idx)
+            stats = {"stage": "gram", "coarse_candidates": len(self._ids)}
         ids = [[self._ids[j] for j in row] for row in idx]
-        return ids, dists
+        backends = [["gram"] * len(row) for row in idx]
+        return QueryResult(ids, np.asarray(dists, np.float32), backends,
+                           idx, stats)
 
     def gram(self) -> np.ndarray:
         """(N, N) self-distance matrix of the whole index (clustering input)."""
@@ -160,18 +327,25 @@ class TopoIndex:
     # -------------------------------------------------------- persistence
 
     def save(self, path: str) -> None:
-        """Write embeddings + ids + config as one ``.npz``.
+        """Write embeddings + clouds + ids + config as one ``.npz``.
 
         Writes to ``path`` verbatim (via a file handle — ``np.savez`` on a
         bare path would append ``.npz`` and break the save/load round-trip).
+        LSH codes are not stored: they are a pure function of the config
+        and the embeddings and are rebuilt on load.  An index loaded from a
+        pre-clouds save re-saves *without* a clouds array (its placeholder
+        is all-zero), so a later load keeps the re-rank stage disabled
+        instead of silently matching against garbage.
         """
+        payload = dict(
+            emb=self._emb,
+            ids=np.asarray(self._ids, dtype=np.str_),
+            config=np.str_(json.dumps(dataclasses.asdict(self.config))),
+        )
+        if self._has_clouds:
+            payload["clouds"] = self._clouds
         with open(path, "wb") as fh:
-            np.savez(
-                fh,
-                emb=self._emb,
-                ids=np.asarray(self._ids, dtype=np.str_),
-                config=np.str_(json.dumps(dataclasses.asdict(self.config))),
-            )
+            np.savez(fh, **payload)
 
     @classmethod
     def load(cls, path: str) -> "TopoIndex":
@@ -185,4 +359,12 @@ class TopoIndex:
                     f"width {config.width}")
             index._emb = emb
             index._ids = [str(i) for i in z["ids"]]
+            if "clouds" in z.files:
+                index._clouds = np.asarray(z["clouds"], np.float32)
+            else:  # pre-1.4 save: queryable, but no exact re-rank stage
+                index._clouds = np.zeros(
+                    (len(index._ids), 3, config.n_points), np.float32)
+                index._has_clouds = False
+            if config.coarse == "lsh":
+                index._codes = index._lsh_codes(emb)
         return index

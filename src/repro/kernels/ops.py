@@ -9,11 +9,16 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.auction_lap import auction_lap_pallas
 from repro.kernels.common_neighbors import common_neighbors_pallas
 from repro.kernels.domination import domination_pallas
 from repro.kernels.gf2_reduce import gf2_reduce_pallas
 from repro.kernels.kcore_peel import kcore_peel_pallas
 from repro.kernels.pairwise_gram import pairwise_l1_pallas
+from repro.kernels.sinkhorn_lse import (
+    sinkhorn_lse_pallas,
+    sinkhorn_pair_sum_pallas,
+)
 
 
 def _interpret() -> bool:
@@ -56,6 +61,34 @@ def pairwise_l1(x: jax.Array, y: jax.Array, tile_m: int = 8,
     return pairwise_l1_pallas(
         x, y, tile_m=tile_m, tile_n=tile_n, tile_d=tile_d,
         interpret=_interpret())
+
+
+def auction_lap(cost: jax.Array, n_scales: int = 10,
+                max_rounds: int | None = None):
+    """Batched ε-scaled auction assignment: (B, M, M) → matchings + totals.
+
+    Returns ``(assign, total, converged, rounds)`` — see
+    ``kernels/auction_lap.py`` for the termination/optimality contract.
+    """
+    return auction_lap_pallas(cost, n_scales=n_scales, max_rounds=max_rounds,
+                              interpret=_interpret())
+
+
+def sinkhorn_lse(xp: jax.Array, yp: jax.Array, dual: jax.Array,
+                 logw: jax.Array, e_t: jax.Array, tile: int = 128) -> jax.Array:
+    """Blocked online-LSE Sinkhorn half-update (cost built on the fly)."""
+    return sinkhorn_lse_pallas(xp, yp, dual, logw, e_t, tile_m=tile,
+                               tile_n=tile, interpret=_interpret())
+
+
+def sinkhorn_pair_sum(xp: jax.Array, yp: jax.Array, f: jax.Array,
+                      g: jax.Array, log_a: jax.Array, log_b: jax.Array,
+                      e_t: jax.Array, mode: str = "plan",
+                      tile: int = 128) -> jax.Array:
+    """Blocked masked pair reduction: ⟨P, C⟩ (``"plan"``) or Σc (``"cost"``)."""
+    return sinkhorn_pair_sum_pallas(xp, yp, f, g, log_a, log_b, e_t,
+                                    mode=mode, tile_m=tile, tile_n=tile,
+                                    interpret=_interpret())
 
 
 def clustering_coefficients(adj: jax.Array, mask: jax.Array, tile: int = 128) -> jax.Array:

@@ -49,6 +49,38 @@ def pairwise_l1_ref(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
 
 
+def auction_lap_ref(cost: jax.Array, **kw):
+    """ε-scaled Jacobi auction on one (M, M) cost matrix (pure jnp).
+
+    Delegates to :func:`repro.kernels.auction_lap.auction_solve` — the same
+    algorithm the Pallas kernel runs per grid step, so kernel-vs-ref parity
+    is semantic.  *Optimality* is asserted separately against the host-side
+    Hungarian/scipy oracle (``repro.metrics.reference``).
+    """
+    from repro.kernels.auction_lap import auction_solve
+
+    return auction_solve(cost, **kw)
+
+
+def sinkhorn_lse_ref(xp: jax.Array, yp: jax.Array, dual: jax.Array,
+                     logw: jax.Array, e_t: jax.Array) -> jax.Array:
+    """Dense reference for the blocked LSE kernel (materializes (M, N)).
+
+    ``xp``/``yp`` are the (B, 8, M) coordinate planes of
+    ``repro.metrics.distances._cloud_planes``; returns (B, M) rows
+    ``LSE_j(logw_j + (dual_j − c_ij)/ε)`` with diagonal↔diagonal cost 0.
+    """
+    xb, xd, xf = xp[:, 0], xp[:, 1], xp[:, 2]
+    yb, yd, yf = yp[:, 0], yp[:, 1], yp[:, 2]
+    c = ((xb[:, :, None] - yb[:, None, :]) ** 2
+         + (xd[:, :, None] - yd[:, None, :]) ** 2)
+    c = jnp.where((xf[:, :, None] > 0) & (yf[:, None, :] > 0), 0.0, c)
+    z = logw[:, None, :] + (dual[:, None, :] - c) / e_t[:, :, None]
+    m = jnp.max(z, axis=-1)
+    s = jnp.sum(jnp.exp(z - m[..., None]), axis=-1)
+    return jnp.where(jnp.isfinite(m), m + jnp.log(s), -jnp.inf)
+
+
 def gf2_reduce_ref(b: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Bit-packed GF(2) boundary reduction (delegates to the core module)."""
     from repro.core.persistence_jax import reduce_packed

@@ -1,18 +1,42 @@
-"""TopoMetric: batched persistence-diagram distances + host-side exact
-references (docs/ARCHITECTURE.md §TopoMetric).  The batched functions
-operate directly on the fixed-size ``Diagrams`` layout; ``reference`` holds
-the small-diagram oracles they are parity-tested against."""
+"""MetricEngine: batched persistence-diagram distances behind one backend
+registry (docs/ARCHITECTURE.md §MetricEngine).  The batched functions
+operate directly on the fixed-size ``Diagrams`` layout; ``engine`` holds
+the registry + ``compare``/``pairwise`` entry points every consumer routes
+through; ``reference`` holds the small-diagram host oracles everything is
+parity-tested against."""
 from repro.metrics.distances import (
+    compact_top_k,
     direction_grid,
     masked_points,
     sinkhorn_w2,
     sliced_wasserstein,
     sw_embedding,
 )
+from repro.metrics.engine import (
+    METRIC_REGISTRY,
+    MetricBackend,
+    compare,
+    get_metric,
+    metric_params,
+    pairwise,
+    register_metric,
+)
+from repro.metrics.exact import bottleneck_approx, exact_w, exact_w_info
 
 __all__ = [
+    "METRIC_REGISTRY",
+    "MetricBackend",
+    "bottleneck_approx",
+    "compact_top_k",
+    "compare",
     "direction_grid",
+    "exact_w",
+    "exact_w_info",
+    "get_metric",
     "masked_points",
+    "metric_params",
+    "pairwise",
+    "register_metric",
     "sinkhorn_w2",
     "sliced_wasserstein",
     "sw_embedding",

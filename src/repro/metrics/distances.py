@@ -70,20 +70,32 @@ def masked_points(d: Diagrams, k: int, cap: float):
     return jnp.where(sel, birth, 0.0), jnp.where(sel, death, 0.0), sel
 
 
-def topk_points(d: Diagrams, k: int, n_points: int, cap: float):
-    """``masked_points`` compacted to the top-``n_points`` rows by persistence.
+def compact_top_k(d: Diagrams, k: int, n_points: int, cap: float):
+    """``masked_points`` compacted to exactly ``n_points`` slots by persistence.
+
+    The one cloud-compaction convention shared by every backend that works
+    on fixed-width point sets — ``sinkhorn_w2``, ``sw_embedding`` and the
+    auction-LAP ``exact_w`` path (repro/metrics/exact.py) all call this, so
+    "top points by persistence, absent slots zeroed with ``keep=False``"
+    is defined in one place.  Returns ``(birth, death, keep)`` of width
+    ``n_points`` regardless of the diagram tensor size ``S``: diagrams from
+    different serve buckets compact into the same shape, which is what lets
+    the batched assignment kernels jit once per ``n_points``.
 
     Diagram tensors carry one row per *potential* birth simplex (S = n +
     edge_cap + tri_cap), but real diagrams occupy a handful of rows; the
     compaction keeps distance working sets proportional to diagram content
     instead of tensor capacity.  Exact whenever the dim-``k`` sub-diagram
     has at most ``n_points`` points; beyond that the lowest-persistence
-    points are dropped (documented truncation, same policy as
-    ``sw_embedding``).
+    points are dropped (documented truncation).
     """
     b, e, sel = masked_points(d, k, cap)
     s = b.shape[-1]
-    if s <= n_points:
+    if s < n_points:  # tiny diagram tensors: pad rows up to the slot count
+        pad = [(0, 0)] * (b.ndim - 1) + [(0, n_points - s)]
+        b, e = jnp.pad(b, pad), jnp.pad(e, pad)
+        return b, e, jnp.pad(sel, pad)
+    if s == n_points:
         return b, e, sel
     pers = jnp.where(sel, e - b, -jnp.inf)
     top_pers, top_idx = lax.top_k(pers, n_points)
@@ -143,12 +155,7 @@ def sw_embedding(d: Diagrams, k: int = 1, n_points: int = 16,
     direction-averaged 1-D W1 of the anchored multisets — the ``TopoIndex``
     metric.
     """
-    tb, te, keep = topk_points(d, k, n_points, cap)
-    s = tb.shape[-1]
-    if s < n_points:  # tiny diagram tensors: pad rows up to the slot count
-        pad = [(0, 0)] * (tb.ndim - 1) + [(0, n_points - s)]
-        tb, te = jnp.pad(tb, pad), jnp.pad(te, pad)
-        keep = jnp.pad(keep, pad)
+    tb, te, keep = compact_top_k(d, k, n_points, cap)
     cos, sin = direction_grid(n_dirs)
     pt = tb[..., None, :] * cos[:, None] + te[..., None, :] * sin[:, None]
     dg = ((tb + te) / 2.0)[..., None, :] * (cos + sin)[:, None]
@@ -169,9 +176,118 @@ def _diag_free_cost(x, y, xd, yd):
     return jnp.where(xd[:, None] & yd[None, :], 0.0, c)
 
 
-def _entropic_plan_cost(c, xv, yv, scale, eps, n_iters, n_scales):
+def _lse(z, axis):
+    """Log-sum-exp ``m + log Σ exp(z − m)`` with all-masked rows → −inf.
+
+    This accumulation contract — block max, shifted-exp sum, final
+    ``m + log s`` — is what the blocked Pallas kernel
+    (kernels/sinkhorn_lse.py) reproduces tile-by-tile: at tile-fitting
+    sizes the two paths run the identical algebra in the identical order
+    and agree to float32 roundoff (≤ ~1 ulp per update; XLA fusion keeps
+    strict bit equality out of reach), asserted in tests and
+    ``metrics_bench``.
+    """
+    m = jnp.max(z, axis=axis, keepdims=True)
+    s = jnp.sum(jnp.exp(z - m), axis=axis)
+    m = jnp.squeeze(m, axis=axis)
+    return jnp.where(jnp.isfinite(m), m + jnp.log(s), -jnp.inf)
+
+
+class _DenseSinkhornOps:
+    """Sinkhorn update primitives on a materialized (…, M, N) cost matrix.
+
+    O(M·N) memory per pair — fine for compacted clouds (``n_points``), the
+    ceiling ``_BlockedSinkhornOps`` lifts for full diagram tensors.
+    """
+
+    def __init__(self, c):
+        self.c = c
+
+    def lse_cols(self, dual, logw, e_t):
+        """(…, M): LSE over the y side, row i gets LSE_j(logw_j + (dual_j − c_ij)/ε)."""
+        z = logw[..., None, :] + (dual[..., None, :] - self.c) / e_t[..., None]
+        return _lse(z, -1)
+
+    def lse_rows(self, dual, logw, e_t):
+        """(…, N): LSE over the x side (transposed reduction of the same c)."""
+        z = logw[..., :, None] + (dual[..., :, None] - self.c) / e_t[..., None]
+        return _lse(z, -2)
+
+    def plan_cost(self, f, g, log_a, log_b, e_t):
+        """⟨P, C⟩ of the final potentials (masked pairs only)."""
+        log_p = (log_a[..., :, None] + log_b[..., None, :]
+                 + (f[..., :, None] + g[..., None, :] - self.c)
+                 / e_t[..., None])
+        pair = (jnp.isfinite(log_a)[..., :, None]
+                & jnp.isfinite(log_b)[..., None, :])
+        return jnp.sum(jnp.where(pair, jnp.exp(log_p) * self.c, 0.0),
+                       axis=(-1, -2))
+
+    def masked_cost_sum(self, log_a, log_b):
+        """Σ of cost over valid pairs (the ε scale statistic)."""
+        pair = (jnp.isfinite(log_a)[..., :, None]
+                & jnp.isfinite(log_b)[..., None, :])
+        return jnp.sum(jnp.where(pair, self.c, 0.0), axis=(-1, -2))
+
+
+class _BlockedSinkhornOps:
+    """Sinkhorn update primitives with the cost computed on the fly in VMEM
+    tiles (kernels/sinkhorn_lse.py) — no (M, N) cost matrix ever exists.
+
+    Clouds are passed as coordinate planes ``(B, 8, M)``; every reduction is
+    a Pallas call with grid ``(B, M/tile, N/tile)`` and an online-LSE (or
+    running-sum) accumulator in VMEM scratch, so the working set per pair is
+    O(tile²) regardless of the diagram tensor size ``S``.
+    """
+
+    def __init__(self, x, y, xd, yd, tile):
+        from repro.kernels import ops as kops
+
+        self._kops = kops
+        self.xp = _cloud_planes(x, xd)
+        self.yp = _cloud_planes(y, yd)
+        self.tile = tile
+
+    def lse_cols(self, dual, logw, e_t):
+        return self._kops.sinkhorn_lse(self.xp, self.yp, dual, logw, e_t,
+                                       tile=self.tile)
+
+    def lse_rows(self, dual, logw, e_t):
+        return self._kops.sinkhorn_lse(self.yp, self.xp, dual, logw, e_t,
+                                       tile=self.tile)
+
+    def plan_cost(self, f, g, log_a, log_b, e_t):
+        return self._kops.sinkhorn_pair_sum(self.xp, self.yp, f, g,
+                                            log_a, log_b, e_t, mode="plan",
+                                            tile=self.tile)
+
+    def masked_cost_sum(self, log_a, log_b):
+        one = jnp.ones(log_a.shape[:-1] + (1,), jnp.float32)
+        zf = jnp.zeros_like(log_a)
+        zg = jnp.zeros_like(log_b)
+        return self._kops.sinkhorn_pair_sum(self.xp, self.yp, zf, zg,
+                                            log_a, log_b, one, mode="cost",
+                                            tile=self.tile)
+
+
+def _cloud_planes(pts, dflag):
+    """(…, M, 2) cloud + (M,) diagonal flags → (…, 8, M) coordinate planes.
+
+    Plane 0/1 = birth/death coordinate, plane 2 = diagonal-slot flag,
+    planes 3..7 zero (pads the sublane axis to the f32 tile height so the
+    kernel's x/y blocks are natively tileable).
+    """
+    b, d = pts[..., 0], pts[..., 1]
+    f = jnp.broadcast_to(dflag.astype(jnp.float32), b.shape)
+    z = jnp.zeros_like(b)
+    return jnp.stack([b, d, f, z, z, z, z, z], axis=-2)
+
+
+def _entropic_plan_cost(pair_ops, xv, yv, scale, eps, n_iters, n_scales):
     """⟨P, C⟩ of log-domain Sinkhorn under ε-scaling (masked uniform mass).
 
+    ``pair_ops`` supplies the two LSE reductions and the final plan cost
+    (dense materialized cost, or blocked cost-on-the-fly Pallas tiles);
     ``scale`` is the per-pair cost scale ε is relative to; ``n_scales``
     stages anneal geometrically from ``eps·2^(n_scales-1)`` down to ``eps``,
     warm-starting the potentials, ``n_iters`` iterations each.
@@ -188,13 +304,9 @@ def _entropic_plan_cost(c, xv, yv, scale, eps, n_iters, n_scales):
 
         def it(_, fg):
             f, g = fg
-            f = -e_t * jax.nn.logsumexp(
-                log_b[..., None, :] + (g[..., None, :] - c) / e_t[..., None],
-                axis=-1)
+            f = -e_t * pair_ops.lse_cols(g, log_b, e_t)
             f = jnp.where(xv, f, 0.0)
-            g = -e_t * jax.nn.logsumexp(
-                log_a[..., :, None] + (f[..., :, None] - c) / e_t[..., None],
-                axis=-2)
+            g = -e_t * pair_ops.lse_rows(f, log_a, e_t)
             g = jnp.where(yv, g, 0.0)
             return f, g
 
@@ -203,17 +315,15 @@ def _entropic_plan_cost(c, xv, yv, scale, eps, n_iters, n_scales):
 
     (f, g), _ = lax.scan(stage, (jnp.zeros_like(log_a), jnp.zeros_like(log_b)),
                          eps_ladder)
-    e_t = eps * scale
-    log_p = (log_a[..., :, None] + log_b[..., None, :]
-             + (f[..., :, None] + g[..., None, :] - c) / e_t[..., None])
-    pair = xv[..., :, None] & yv[..., None, :]
-    return jnp.sum(jnp.where(pair, jnp.exp(log_p) * c, 0.0), axis=(-1, -2))
+    return pair_ops.plan_cost(f, g, log_a, log_b, eps * scale)
 
 
-@partial(jax.jit, static_argnames=("k", "n_iters", "n_scales", "n_points"))
+@partial(jax.jit, static_argnames=("k", "n_iters", "n_scales", "n_points",
+                                   "impl", "tile"))
 def sinkhorn_w2(d1: Diagrams, d2: Diagrams, k: int = 1, cap: float = 64.0,
                 eps: float = 1e-2, n_iters: int = 50,
-                n_scales: int = 6, n_points: int | None = 32) -> jax.Array:
+                n_scales: int = 6, n_points: int | None = 32,
+                impl: str = "dense", tile: int = 128) -> jax.Array:
     """Debiased entropic 2-Wasserstein between dim-``k`` diagrams (batched).
 
     Squared-Euclidean OT between the diagonal-augmented clouds
@@ -228,13 +338,19 @@ def sinkhorn_w2(d1: Diagrams, d2: Diagrams, k: int = 1, cap: float = 64.0,
     square-rooted: ``sqrt(divergence · (n1+n2))``.
 
     ``n_points`` compacts each cloud to the top points by persistence
-    (``topk_points``) so the Sinkhorn working set is O(n_points²), not
+    (``compact_top_k``) so the Sinkhorn working set is O(n_points²), not
     O(S²) — exact for diagrams with at most ``n_points`` dim-``k`` points;
     pass ``None`` to run on the full tensor.
+
+    ``impl`` selects the update implementation: ``"dense"`` materializes the
+    (2S)² cost matrices; ``"blocked"`` streams the cost tile-by-tile through
+    the Pallas online-LSE kernel (kernels/sinkhorn_lse.py) so memory stays
+    O(tile²) per pair — the full-tensor (``n_points=None``) regime for dense
+    diagrams.  The two are bit-consistent whenever the cloud fits one tile.
     """
     if n_points is not None:
-        b1, e1, sel1 = topk_points(d1, k, n_points, cap)
-        b2, e2, sel2 = topk_points(d2, k, n_points, cap)
+        b1, e1, sel1 = compact_top_k(d1, k, n_points, cap)
+        b2, e2, sel2 = compact_top_k(d2, k, n_points, cap)
     else:
         b1, e1, sel1 = masked_points(d1, k, cap)
         b2, e2, sel2 = masked_points(d2, k, cap)
@@ -251,19 +367,37 @@ def sinkhorn_w2(d1: Diagrams, d2: Diagrams, k: int = 1, cap: float = 64.0,
     xd = jnp.arange(s1 + s2) >= s1  # diagonal-image slots of each cloud
     yd = jnp.arange(s1 + s2) >= s2
 
-    c_xy = _diag_free_cost(x, y, xd, yd)
+    # the update skeleton is shared; only the cost realization differs
+    lead = x.shape[:-2]
+    if impl == "dense":
+        ops_xy = _DenseSinkhornOps(_diag_free_cost(x, y, xd, yd))
+        ops_xx = _DenseSinkhornOps(_diag_free_cost(x, x, xd, xd))
+        ops_yy = _DenseSinkhornOps(_diag_free_cost(y, y, yd, yd))
+    elif impl == "blocked":
+        # the kernel grid carries one leading batch axis; flatten to (B, …)
+        fl = lambda a: a.reshape((-1,) + a.shape[len(lead):])
+        x, y, xv, yv = fl(x), fl(y), fl(xv), fl(yv)
+        sel1, sel2 = fl(sel1), fl(sel2)
+        ops_xy = _BlockedSinkhornOps(x, y, xd, yd, tile)
+        ops_xx = _BlockedSinkhornOps(x, x, xd, xd, tile)
+        ops_yy = _BlockedSinkhornOps(y, y, yd, yd, tile)
+    else:
+        raise ValueError(f"unknown sinkhorn impl {impl!r}; "
+                         "want 'dense' or 'blocked'")
+
     n = (jnp.sum(sel1, axis=-1) + jnp.sum(sel2, axis=-1)).astype(jnp.float32)
     nz = jnp.maximum(n, 1.0)
+    log0 = lambda v: jnp.where(v, 0.0, -jnp.inf)
 
     # ε relative to the mean inter-cloud cost so one setting spans filtrations
-    scale = jnp.sum(jnp.where(xv[..., :, None] & yv[..., None, :], c_xy, 0.0),
-                    axis=(-1, -2)) / (nz ** 2)
+    scale = ops_xy.masked_cost_sum(log0(xv), log0(yv)) / (nz ** 2)
     scale = jnp.maximum(scale, 1e-6)[..., None]
 
     ot = partial(_entropic_plan_cost, scale=scale, eps=eps,
                  n_iters=n_iters, n_scales=n_scales)
-    div = (ot(c_xy, xv, yv)
-           - 0.5 * ot(_diag_free_cost(x, x, xd, xd), xv, xv)
-           - 0.5 * ot(_diag_free_cost(y, y, yd, yd), yv, yv))
+    div = (ot(ops_xy, xv, yv)
+           - 0.5 * ot(ops_xx, xv, xv)
+           - 0.5 * ot(ops_yy, yv, yv))
     w2sq = div * n  # undo the uniform 1/(n1+n2) mass normalization
-    return jnp.where(n > 0, jnp.sqrt(jnp.maximum(w2sq, 0.0)), 0.0)
+    out = jnp.where(n > 0, jnp.sqrt(jnp.maximum(w2sq, 0.0)), 0.0)
+    return out.reshape(lead) if impl == "blocked" else out

@@ -1,0 +1,159 @@
+"""Exact q-Wasserstein on accelerator: auction-LAP over compacted clouds.
+
+``repro.metrics.reference.wasserstein_exact`` solves the standard
+diagonal-augmented assignment problem host-side (scipy / Hungarian, one
+small pair at a time).  This module is the batched accelerator-resident
+formulation of the *same* problem: both diagrams are compacted to the
+shared fixed-width top-persistence cloud (``distances.compact_top_k``), the
+(2·n_points)² augmented cost matrix is built with masked arithmetic, and
+the matching is solved by the batched Pallas auction kernel
+(``kernels/auction_lap.py``) — jit/vmap-able over arbitrary leading pair
+axes, which is what makes exact distances servable (the re-rank stage of
+``serve/similarity.py``).
+
+Augmented-matrix convention (identical to the host reference): rows are
+the points of D1 followed by diagonal "reservoir" slots, columns the
+points of D2 followed by reservoirs; point↔reservoir costs the point's
+distance to the diagonal (**q), reservoir↔reservoir is free.  Invalid
+compacted slots behave exactly like reservoir slots, so the fixed-width
+problem has the same optimal total as the reference's (n1+n2)² one — the
+extra slots only add free reservoir↔reservoir matches.
+
+Exactness: ``exact_w`` is exact up to (a) the documented top-``n_points``
+persistence truncation (exact whenever each diagram has ≤ ``n_points``
+dim-``k`` points) and (b) the auction's ``M·ε_final``-suboptimality bound,
+which in float32 practice resolves to the true optimum (0 mismatches vs
+the Hungarian oracle across the test/bench sweeps).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.persistence_jax import Diagrams
+from repro.kernels import ops
+from repro.metrics.distances import compact_top_k
+
+GROUNDS = ("l2", "linf")
+
+
+def augmented_cost(b1, e1, keep1, b2, e2, keep2, q: float = 2.0,
+                   ground: str = "l2"):
+    """Batched (…, 2K, 2K) diagonal-augmented assignment costs, entries **q.
+
+    ``(b, e, keep)`` per side are fixed-width compacted clouds
+    (``compact_top_k``).  Invalid slots act as extra diagonal reservoirs
+    (zero cost against other reservoirs / invalid slots), preserving the
+    host reference's optimum.
+    """
+    if ground not in GROUNDS:
+        raise ValueError(f"unknown ground metric {ground!r}; want {GROUNDS}")
+    k = b1.shape[-1]
+    db = b1[..., :, None] - b2[..., None, :]
+    de = e1[..., :, None] - e2[..., None, :]
+    if ground == "l2":
+        dsq = db * db + de * de
+        pp = dsq if q == 2.0 else dsq ** (q / 2.0)
+        diag1 = ((e1 - b1) / jnp.sqrt(2.0)) ** q
+        diag2 = ((e2 - b2) / jnp.sqrt(2.0)) ** q
+    else:
+        pp = jnp.maximum(jnp.abs(db), jnp.abs(de)) ** q
+        diag1 = ((e1 - b1) / 2.0) ** q
+        diag2 = ((e2 - b2) / 2.0) ** q
+
+    pad_tail = [(0, 0)] * (b1.ndim - 1) + [(0, k)]
+    rp = jnp.pad(keep1, pad_tail)            # (…, 2K) row is a real point
+    cp = jnp.pad(keep2, pad_tail)
+    d1 = jnp.pad(jnp.where(keep1, diag1, 0.0), pad_tail)
+    d2 = jnp.pad(jnp.where(keep2, diag2, 0.0), pad_tail)
+    pp_full = jnp.pad(pp, [(0, 0)] * (pp.ndim - 2) + [(0, k), (0, k)])
+    cost = jnp.where(
+        rp[..., :, None] & cp[..., None, :], pp_full,
+        jnp.where(rp[..., :, None], d1[..., :, None],
+                  jnp.where(cp[..., None, :], d2[..., None, :], 0.0)))
+    return cost
+
+
+@partial(jax.jit, static_argnames=("k", "q", "ground", "n_points",
+                                   "n_scales"))
+def exact_w_info(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
+                 ground: str = "l2", cap: float = 64.0, n_points: int = 16,
+                 n_scales: int = 10):
+    """``exact_w`` plus per-pair solver diagnostics.
+
+    Returns ``(w, converged, rounds)`` with ``w`` the q-Wasserstein
+    distances, ``converged`` whether the reported matching came from one of
+    the two finest ε rungs (the tight-suboptimality guarantee — see
+    ``kernels/auction_lap.py::auction_solve``), and ``rounds`` the total
+    bidding rounds (the ε-scaling convergence surface the tests probe).
+    """
+    b1, e1, k1 = compact_top_k(d1, k, n_points, cap)
+    b2, e2, k2 = compact_top_k(d2, k, n_points, cap)
+    cost = augmented_cost(b1, e1, k1, b2, e2, k2, q=q, ground=ground)
+    lead = cost.shape[:-2]
+    flat = cost.reshape((-1,) + cost.shape[-2:])
+    _, total, conv, rounds = ops.auction_lap(flat, n_scales=n_scales)
+    w = jnp.maximum(total, 0.0) ** (1.0 / q)
+    return w.reshape(lead), conv.reshape(lead), rounds.reshape(lead)
+
+
+def exact_w(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
+            ground: str = "l2", cap: float = 64.0, n_points: int = 16,
+            n_scales: int = 10) -> jax.Array:
+    """Exact q-Wasserstein between dim-``k`` diagrams (batched, auction-LAP).
+
+    The accelerator-resident equivalent of
+    ``reference.wasserstein_exact(q, ground)`` — exact up to the documented
+    top-``n_points`` compaction.  Leaves may carry arbitrary leading batch
+    axes (pairs aligned row-wise); returns ``(…,)`` distances.
+    """
+    w, _, _ = exact_w_info(d1, d2, k=k, q=q, ground=ground, cap=cap,
+                           n_points=n_points, n_scales=n_scales)
+    return w
+
+
+@partial(jax.jit, static_argnames=("k", "n_points", "n_iters"))
+def bottleneck_approx(d1: Diagrams, d2: Diagrams, k: int = 1,
+                      cap: float = 64.0, n_points: int = 16,
+                      n_iters: int = 24) -> jax.Array:
+    """Bottleneck distance via batched threshold search (auction feasibility).
+
+    The bottleneck distance is the smallest ``t`` admitting a perfect
+    matching that uses only L∞ costs ≤ ``t`` — the same binary search
+    ``reference.bottleneck_exact`` runs host-side, except the feasibility
+    oracle here is the batched auction kernel on a 0/1 cost matrix
+    (``c ≤ t`` → 0, else 1): a zero-total assignment exists iff ``t`` is
+    feasible, and 0/1 auctions converge in a handful of rounds.  ``n_iters``
+    midpoint bisections bound the answer within ``max_cost · 2^-n_iters``
+    of the exact bottleneck on the compacted clouds (≈1e-7 relative at the
+    default), so the only structural approximation left is the documented
+    top-``n_points`` compaction — the registry records both.
+    """
+    b1, e1, k1 = compact_top_k(d1, k, n_points, cap)
+    b2, e2, k2 = compact_top_k(d2, k, n_points, cap)
+    c1 = augmented_cost(b1, e1, k1, b2, e2, k2, q=1.0, ground="linf")
+    lead = c1.shape[:-2]
+    flat = c1.reshape((-1,) + c1.shape[-2:])
+    hi = jnp.max(flat, axis=(-1, -2))
+    lo = jnp.zeros_like(hi)
+    # the 0/1 feasibility read (total < 0.5) is only sound if the auction's
+    # M·ε_final suboptimality stays below ½ a unit cost — deepen the ε
+    # ladder with the matrix size (M = 2·n_points) so it always does
+    m = 2 * n_points
+    n_scales = max(4, int(np.ceil(np.log(4.0 * m) / np.log(5.0))) + 1)
+
+    def bisect(_, bounds):
+        lo, hi = bounds
+        t = (lo + hi) / 2.0
+        cost01 = jnp.where(flat <= t[:, None, None], 0.0, 1.0)
+        _, total, conv, _ = ops.auction_lap(cost01, n_scales=n_scales)
+        # an unconverged solve is untrusted: treat as infeasible, which can
+        # only push the (upper-bound) answer up, never below W∞
+        feasible = (total < 0.5) & conv
+        return jnp.where(feasible, lo, t), jnp.where(feasible, t, hi)
+
+    lo, hi = jax.lax.fori_loop(0, n_iters, bisect, (lo, hi))
+    return hi.reshape(lead)

@@ -39,6 +39,44 @@ def random_diagram(rng: np.random.Generator, s: int = 12,
                     dim=jnp.asarray(dim), valid=jnp.asarray(val))
 
 
+def seed_diagram_arrays(rng: np.random.Generator, n_seeds: int, s: int):
+    """Seed diagrams as plain arrays ``(birth, death, dim, valid)``.
+
+    The raw material for :func:`noisy_copies` — kept as numpy arrays so
+    corpora of noisy copies can be built vectorized.
+    """
+    sb = np.full((n_seeds, s), np.nan, np.float32)
+    sd = np.full((n_seeds, s), np.nan, np.float32)
+    dims = np.full((n_seeds, s), -1, np.int32)
+    val = np.zeros((n_seeds, s), bool)
+    for j in range(n_seeds):
+        dg = random_diagram(rng, s=s, n=int(rng.integers(3, 8)))
+        sb[j], sd[j] = np.asarray(dg.birth), np.asarray(dg.death)
+        dims[j], val[j] = np.asarray(dg.dim), np.asarray(dg.valid)
+    return sb, sd, dims, val
+
+
+def noisy_copies(seeds, rng: np.random.Generator, n: int,
+                 sigma_lo: float, sigma_hi: float) -> Diagrams:
+    """(n,) Diagrams batch of noisy seed copies (retrieval corpora).
+
+    Cycles through the seeds with per-copy noise graded uniformly in
+    ``[sigma_lo, sigma_hi]`` — neighbor ranks become continuous (no ties),
+    which is what the retrieve→re-rank recall sweeps need.  Deaths are
+    clamped to ``birth + 1e-3`` so persistence stays positive.
+    """
+    sb, sd, dims, val = seeds
+    n_seeds, s = sb.shape
+    rep = np.arange(n) % n_seeds
+    sigma = (sigma_lo + (sigma_hi - sigma_lo)
+             * rng.random(n)).astype(np.float32)[:, None]
+    b = sb[rep] + rng.normal(0, 1, (n, s)).astype(np.float32) * sigma
+    d = sd[rep] + rng.normal(0, 1, (n, s)).astype(np.float32) * sigma
+    d = np.maximum(d, b + 1e-3)
+    return Diagrams(birth=jnp.asarray(b), death=jnp.asarray(d),
+                    dim=jnp.asarray(dims[rep]), valid=jnp.asarray(val[rep]))
+
+
 def diagram_points(d: Diagrams, k: int = 1, cap: float = 64.0):
     """Host-side ``[(birth, death)]`` extraction with the ``cap`` convention
     (the bridge from the tensor layout to the reference oracles)."""

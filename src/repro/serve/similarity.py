@@ -2,15 +2,26 @@
 
 The third serving surface (after stateless TopoServe and session-ful
 StreamServe): a client submits a *graph* and gets back the ``k`` nearest
-*indexed* graphs with their diagram distances.  The pipeline is
+*indexed* graphs with their diagram distances.  The drain is **two-phase**
+— the same coarse→exact shape PR 4 gave reduce→repack→persist:
 
 ```
 submit(edges, n, f, k) ──► TopoServe.submit          (bucketed PD batch path)
 drain() ──► TopoServe.drain()                         (diagrams computed)
-        ──► stack resolved per-query diagram rows, ONE TopoIndex.query
-            (one embed + one Pallas Gram per drain, not per request)
-        ──► resolve SimilarityFuture(ids, distances, diagrams)
+        ──► stage 1 (retrieve): ONE TopoIndex.query per shape group for
+            top k·overfetch candidates — embedding-L1 Gram kernel, itself
+            optionally LSH-prefiltered inside the index
+        ──► stage 2 (re-rank, ``rerank="exact_w"``): batched auction-LAP
+            exact Wasserstein between each query diagram and its
+            candidates' stored compacted clouds, one MetricEngine
+            ``compare`` per shape group
+        ──► resolve SimilarityFuture(ids, distances, backends, diagrams)
 ```
+
+``stats`` reports the stages separately (``stage1_candidates``,
+``stage2_pairs``, per-stage wall seconds), and every resolved distance
+carries its backend label (``"gram"`` vs ``"exact_w"``) so clients never
+mix the coarse and exact distance scales silently.
 
 Indexing goes through the same diagram path (``add`` submits to the inner
 server and indexes at drain), so corpus and queries share compiled plans
@@ -30,24 +41,32 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.index.topo_index import TopoIndex, TopoIndexConfig
+from repro.metrics.engine import compare
 from repro.serve.futures import ServeFuture
 from repro.serve.topo_serve import TopoFuture, TopoServe, TopoServeConfig
+
+RERANKS = ("off", "exact_w")
 
 
 @dataclasses.dataclass(frozen=True)
 class SimilarityResult:
     """kNN answer for one query graph: parallel id/distance lists plus the
-    query's own Diagrams slice (so clients can inspect or re-index it)."""
+    query's own Diagrams slice (so clients can inspect or re-index it).
+    ``backends[i]`` names the metric backend that produced ``distances[i]``
+    (``"gram"`` embedding-L1, or ``"exact_w"`` after the re-rank stage)."""
 
     ids: tuple[str, ...]
     distances: tuple[float, ...]
     diagrams: object  # per-graph Diagrams slice (leaves shaped (S,))
+    backends: tuple[str, ...] = ()
 
 
 class SimilarityFuture(ServeFuture):
@@ -92,7 +111,10 @@ class SimilarityServe:
                  config: TopoServeConfig | None = None,
                  index_config: TopoIndexConfig | None = None,
                  default_k: int = 5, mesh=None,
-                 repack: str | None = None):
+                 repack: str | None = None,
+                 rerank: str = "off", overfetch: int = 4):
+        if rerank not in RERANKS:
+            raise ValueError(f"unknown rerank {rerank!r}; want {RERANKS}")
         self.index = index if index is not None else TopoIndex(index_config)
         if repack is not None:
             config = dataclasses.replace(config or TopoServeConfig(),
@@ -102,13 +124,17 @@ class SimilarityServe:
         # re-bucketed by their *reduced* shape, not just their input shape
         self.server = TopoServe(config, mesh=mesh)
         self.default_k = int(default_k)
+        self.rerank = rerank
+        self.overfetch = max(int(overfetch), 1)
         self._lock = threading.Lock()
         # serializes drains: the TopoIndex is not internally synchronized, so
         # concurrent index.add/query (embedding store mutation) must not race
         self._drain_lock = threading.Lock()
         self._pending_queries: list[tuple[TopoFuture, SimilarityFuture]] = []
         self._pending_adds: list[tuple[TopoFuture, Optional[str]]] = []
-        self.stats = {"queries": 0, "indexed": 0, "add_failures": 0}
+        self.stats = {"queries": 0, "indexed": 0, "add_failures": 0,
+                      "stage1_candidates": 0, "stage2_pairs": 0,
+                      "stage1_s": 0.0, "stage2_s": 0.0}
 
     # ------------------------------------------------------------- ingest
 
@@ -204,7 +230,16 @@ class SimilarityServe:
                 sims = [ready[i][1] for i in idxs]
                 try:
                     k_max = max(sim.k for sim in sims)
-                    ids, dists = self.index.query(batch, k=k_max)
+                    k_fetch = (k_max * self.overfetch
+                               if self.rerank != "off" else k_max)
+                    t0 = time.perf_counter()
+                    res = self.index.query(batch, k=k_fetch)
+                    self.stats["stage1_s"] += time.perf_counter() - t0
+                    self.stats["stage1_candidates"] += sum(
+                        len(row) for row in res.ids)
+                    ids, dists, backends = res.ids, res.distances, res.backends
+                    if self.rerank == "exact_w":
+                        ids, dists, backends = self._rerank_exact(batch, res)
                 except Exception as e:  # resolve, never wedge waiting clients
                     for sim in sims:
                         sim._fail(e)
@@ -215,7 +250,50 @@ class SimilarityServe:
                         ids=tuple(ids[j][:kk]),
                         distances=tuple(float(x) for x in dists[j][:kk]),
                         diagrams=ready[i][0],
+                        backends=tuple(backends[j][:kk]),
                     ))
                     resolved += 1
             self.stats["queries"] += resolved
             return resolved
+
+    # ------------------------------------------------------------- rerank
+
+    def _rerank_exact(self, batch, res):
+        """Stage 2: exact re-rank of the stage-1 candidates.
+
+        One batched MetricEngine ``compare(metric="exact_w")`` between the
+        query diagrams (broadcast per candidate) and the candidates' stored
+        compacted clouds; the pair count is padded to the next power of two
+        so the auction kernel sees a bounded ladder of batch shapes.
+        Returns ``(ids, dists, backends)`` reordered by exact distance.
+        """
+        rows = res.rows                             # (Q, C) index rows
+        q, c = rows.shape
+        t0 = time.perf_counter()
+        cand = self.index.clouds(rows)        # leaves (Q, C, n_points)
+        left = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[:, None], (q, c) + x.shape[1:]),
+            batch)
+        qc = q * c
+        r = 1 << (qc - 1).bit_length()
+
+        def flat_pad(t):
+            def one(x):
+                x = x.reshape((qc,) + x.shape[2:])
+                if r == qc:
+                    return x
+                fill = jnp.broadcast_to(x[:1], (r - qc,) + x.shape[1:])
+                return jnp.concatenate([x, fill], axis=0)
+            return jax.tree.map(one, t)
+
+        cfg = self.index.config
+        d = np.asarray(compare(flat_pad(left), flat_pad(cand),
+                               metric="exact_w", k=cfg.k, cap=cfg.cap,
+                               n_points=cfg.n_points))[:qc].reshape(q, c)
+        order = np.argsort(d, axis=-1, kind="stable")
+        self.stats["stage2_pairs"] += qc
+        self.stats["stage2_s"] += time.perf_counter() - t0
+        ids = [[res.ids[i][j] for j in order[i]] for i in range(q)]
+        dists = np.take_along_axis(d, order, axis=-1).astype(np.float32)
+        backends = [["exact_w"] * c for _ in range(q)]
+        return ids, dists, backends

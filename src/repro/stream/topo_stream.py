@@ -59,9 +59,10 @@ _ALL_DIM_METHODS = ("prunit", "none")
 class TopoStreamConfig:
     """Pipeline parameters + invalidation policy for one stream session.
 
-    Drift scoring (``drift_metric="sw"``): each apply step also reports, per
-    graph, the sliced-Wasserstein distance between the previous and the new
-    cached ``PD_drift_dim`` — cache hits are provably distance 0 (the
+    Drift scoring (``drift_metric="sw"`` or any registered MetricEngine
+    backend, e.g. ``"sinkhorn"``/``"exact_w"``): each apply step also
+    reports, per graph, the backend's distance between the previous and the
+    new cached ``PD_drift_dim`` — cache hits are provably distance 0 (the
     theorems certify the diagram did not move), so only recomputed graphs
     pay the embedding/distance cost.  ``last_drift`` / ``last_anomaly``
     expose the scores; a score above ``drift_threshold`` flags an anomaly
@@ -89,7 +90,7 @@ class TopoStreamConfig:
     recompute_pad: str = "pow2"  # "pow2" | "full" sub-batch padding policy
     check_caps: bool = True      # verify simplex caps still hold after updates
     repack: str = "off"          # "off" | "on": two-phase persist at reduced size
-    drift_metric: str | None = None  # None (off) | "sw"
+    drift_metric: str | None = None  # None (off) | any MetricEngine backend
     drift_dim: int | None = None     # diagram dimension scored (default: dim)
     drift_threshold: float | str = 1.0  # constant, or "auto:qX" (P² quantile)
     drift_n_dirs: int = 16           # SW direction-grid resolution
@@ -117,9 +118,15 @@ class TopoStreamConfig:
         if self.drift_warmup < 5:
             raise ValueError(f"drift_warmup must be >= 5 (P² needs 5 "
                              f"observations), got {self.drift_warmup}")
-        if self.drift_metric not in (None, "sw"):
-            raise ValueError(f"drift_metric must be None or 'sw', "
-                             f"got {self.drift_metric!r}")
+        if self.drift_metric is not None:
+            # any registered MetricEngine backend may score drift; resolve
+            # through the registry so the config rejects unknown names with
+            # the full backend list (import here: metrics ↛ stream)
+            from repro.metrics.engine import get_metric
+            try:
+                get_metric(self.drift_metric)
+            except ValueError as e:
+                raise ValueError(f"drift_metric: {e}") from None
         if self.drift_dim is not None and not (0 <= self.drift_dim <= self.dim):
             raise ValueError(
                 f"drift_dim {self.drift_dim} outside computed dims 0..{self.dim}")
@@ -389,7 +396,7 @@ class TopoStream:
             self._diagrams = self._recompute(g_new, idx)
             self.stats["recomputes"] += int(needs.sum())
             self._all_dims_exact[idx] = c.method in _ALL_DIM_METHODS
-            if c.drift_metric == "sw":
+            if c.drift_metric is not None:
                 drift[idx] = self._drift_scores(old, self._diagrams, idx)
 
         if c.drift_metric is not None:
@@ -418,14 +425,18 @@ class TopoStream:
 
     def _drift_scores(self, old: Diagrams, new: Diagrams,
                       idx: np.ndarray) -> np.ndarray:
-        """SW distance between previous and fresh diagrams of ``idx`` graphs.
+        """Drift distances between previous and fresh diagrams of ``idx``.
 
-        Hits are skipped by construction (their diagram provably did not
-        move, so the score is exactly 0); the gather is padded to the next
-        power of two so the jitted distance sees the same bounded ladder of
-        shapes as the recompute path.
+        Routed through the MetricEngine registry (``compare``) so any
+        registered backend — approximate ``sw``/``sinkhorn`` or the exact
+        auction-LAP ``exact_w`` — can score drift; per-backend tunables
+        (``n_dirs``) are forwarded only where declared.  Hits are skipped
+        by construction (their diagram provably did not move, so the score
+        is exactly 0); the gather is padded to the next power of two so
+        the jitted distance sees the same bounded ladder of shapes as the
+        recompute path.
         """
-        from repro.metrics.distances import sliced_wasserstein
+        from repro.metrics.engine import compare, metric_params
 
         c = self.config
         k = len(idx)
@@ -433,10 +444,13 @@ class TopoStream:
         idx_p = np.concatenate([idx, np.full(r - k, idx[0], idx.dtype)])
         jidx = jnp.asarray(idx_p)
         rows = lambda d: jax.tree.map(lambda x: x[jidx], d)
-        scores = sliced_wasserstein(
-            rows(old), rows(new),
+        params = {}
+        if "n_dirs" in metric_params(c.drift_metric):
+            params["n_dirs"] = c.drift_n_dirs
+        scores = compare(
+            rows(old), rows(new), metric=c.drift_metric,
             k=c.drift_dim if c.drift_dim is not None else c.dim,
-            n_dirs=c.drift_n_dirs, cap=c.drift_cap)
+            cap=c.drift_cap, **params)
         return np.asarray(scores, np.float32)[:k]
 
     def _recompute(self, g_new: GraphBatch, idx: np.ndarray) -> Diagrams:

@@ -139,6 +139,102 @@ def test_similarity_serve_duplicate_gid_does_not_wedge_queries():
     assert srv.stats["add_failures"] == 1 and len(srv.index) == 1
 
 
+def test_query_result_backends_and_legacy_unpack():
+    index = TopoIndex(TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8))
+    d = corpus_diagrams()
+    index.add(d, ids=["a", "b", "c", "d"])
+    res = index.query(d, k=2)
+    ids, dists = res                      # legacy tuple unpack still works
+    assert ids == res[0] and (dists == res[1]).all()
+    assert res.backends == [["gram", "gram"]] * 4  # provenance per distance
+    assert res.stats["stage"] == "gram"
+    assert res.stats["coarse_candidates"] == 4
+
+
+def test_lsh_coarse_stage_recall():
+    from repro.metrics.testing import noisy_copies, seed_diagram_arrays
+
+    rng = np.random.default_rng(23)
+    corpus = noisy_copies(seed_diagram_arrays(rng, n_seeds=8, s=16),
+                          rng, 256, 0.02, 0.32)
+    cfg_lsh = TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8,
+                              coarse="lsh", lsh_bits=128, lsh_overfetch=8)
+    lsh = TopoIndex(cfg_lsh)
+    full = TopoIndex(TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8))
+    lsh.add(corpus)
+    full.add(corpus)
+    q = jax.tree.map(lambda x: x[:6], corpus)
+    res_l = lsh.query(q, k=5)
+    res_f = full.query(q, k=5)
+    assert res_l.stats["stage"] == "lsh+gram"
+    assert res_l.stats["coarse_candidates"] == 40  # k·overfetch of 256
+    assert res_f.stats["stage"] == "gram"
+    # self is indexed: distance 0 must survive the coarse stage
+    np.testing.assert_allclose(res_l.distances[:, 0], 0.0, atol=1e-5)
+    recall = np.mean([len(set(a) & set(b)) / 5
+                      for a, b in zip(res_l.ids, res_f.ids)])
+    assert recall >= 0.9, recall
+    # tiny fetches fall back to the dense Gram (candidates == index)
+    small = TopoIndex(cfg_lsh)
+    small.add(jax.tree.map(lambda x: x[:8], corpus))
+    assert small.query(q, k=5).stats["stage"] == "gram"
+
+
+def test_index_clouds_roundtrip_for_rerank(tmp_path):
+    from repro.metrics import compare
+
+    cfg = TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8,
+                          coarse="lsh")
+    index = TopoIndex(cfg)
+    d = corpus_diagrams()
+    index.add(d, ids=["cycle4", "twotri", "path", "star"])
+    # the stored cloud of each entry is exactly its compacted diagram:
+    # exact_w between the original and the rebuilt cloud is 0
+    rebuilt = index.clouds(np.arange(4))
+    dist = np.asarray(compare(d, rebuilt, metric="exact_w", k=cfg.k,
+                              cap=cfg.cap, n_points=cfg.n_points))
+    np.testing.assert_allclose(dist, 0.0, atol=1e-5)
+    # clouds + lsh config survive save/load (codes rebuilt deterministically)
+    path = str(tmp_path / "index.npz")
+    index.save(path)
+    loaded = TopoIndex.load(path)
+    assert loaded.config == index.config
+    np.testing.assert_array_equal(loaded._clouds, index._clouds)
+    np.testing.assert_array_equal(loaded._codes, index._codes)
+
+
+def test_similarity_serve_exact_rerank():
+    srv = SimilarityServe(
+        index_config=TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8),
+        default_k=2, rerank="exact_w", overfetch=2)
+    srv.add(edges=CYCLE4, n_vertices=4, gid="cycle4")
+    srv.add(edges=TWO_TRI, n_vertices=5, gid="twotri")
+    srv.add(edges=PATH, n_vertices=5, gid="path")
+    fut = srv.submit(edges=CYCLE4, n_vertices=4)
+    assert srv.drain() == 1
+    r = fut.result(timeout=10)
+    # exact self-match, exact backend labels, per-stage stats populated
+    assert r.ids[0] == "cycle4" and r.distances[0] == pytest.approx(0.0)
+    assert r.backends == ("exact_w",) * len(r.ids)
+    assert srv.stats["stage1_candidates"] >= 2
+    assert srv.stats["stage2_pairs"] >= 2
+    assert srv.stats["stage2_s"] > 0
+    with pytest.raises(ValueError, match="unknown rerank"):
+        SimilarityServe(rerank="bogus")
+
+
+def test_similarity_serve_rerank_off_labels_gram():
+    srv = SimilarityServe(
+        index_config=TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8),
+        default_k=1)
+    srv.add(edges=CYCLE4, n_vertices=4, gid="cycle4")
+    fut = srv.submit(edges=CYCLE4, n_vertices=4)
+    srv.drain()
+    r = fut.result(timeout=10)
+    assert r.backends == ("gram",)
+    assert srv.stats["stage2_pairs"] == 0
+
+
 def test_similarity_serve_mixed_buckets_in_one_drain():
     # a small and a large graph route to different padding buckets, so their
     # Diagrams rows have different tensor sizes S; one drain must index and
