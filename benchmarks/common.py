@@ -50,14 +50,16 @@ def pct(before, after) -> float:
     return 100.0 * (float(before) - float(after)) / before
 
 
-def git_rev() -> str | None:
+def git_rev(cwd: str | None = None) -> str | None:
     """Short git revision of the working tree, or None outside a checkout.
 
     A ``-dirty`` suffix marks uncommitted changes — a bench run from a
     dirty tree measured code that HEAD does not contain, and the JSON must
-    not attribute the numbers to that commit.
+    not attribute the numbers to that commit.  ``cwd`` overrides the repo
+    the revision is read from (tests point it at a scratch checkout).
     """
-    cwd = os.path.dirname(os.path.abspath(__file__))
+    if cwd is None:
+        cwd = os.path.dirname(os.path.abspath(__file__))
     try:
         rev = subprocess.run(
             ["git", "rev-parse", "--short", "HEAD"],

@@ -7,32 +7,116 @@ executed suite (rows + wall time + environment metadata — the cross-PR perf
 trajectory), and prints per-row CSV as it goes.  ``--quick`` shrinks each
 suite to a CI/CPU smoke size: suites whose ``run`` accepts a ``quick=``
 kwarg get it directly; the rest can read ``report.quick``.
+
+Each :class:`Suite` also carries the perf-reference policy PerfGate
+(``python -m repro.perfgate check``) applies when diffing a fresh run
+against the committed baseline: a tuple of
+:class:`repro.perfgate.references.RefSpec` declarations (first ``fnmatch``
+over ``"<benchmark>.<metric>"`` wins), with the metric-name classifier in
+``repro/perfgate/references.py`` supplying defaults for everything not
+declared.  ``quick_invariant=True`` marks suites whose workload sizes do
+not change under ``--quick`` — their relative bands gate even when the
+fresh run's quick flag differs from the baseline's.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import inspect
 import os
 import time
 import traceback
 
 from benchmarks.common import Report, write_suite_json
+from repro.perfgate.references import RefSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Suite:
+    """One registered benchmark suite + its perf-reference policy."""
+
+    module: str
+    description: str
+    references: tuple[RefSpec, ...] = ()
+    quick_invariant: bool = False
+
 
 SUITES = {
-    "fig4": ("benchmarks.fig4_coral_reduction", "CoralTDA vertex reduction (Fig 4)"),
-    "fig5a": ("benchmarks.fig5_prunit", "PrunIT vertex reduction (Fig 5a)"),
-    "fig5b": ("benchmarks.fig5b_ego_time", "PrunIT ego-net PD0 time (Fig 5b)"),
-    "table1": ("benchmarks.table1_large_networks", "PrunIT on large networks (Table 1)"),
-    "fig6": ("benchmarks.fig6_combined", "PrunIT+CoralTDA combined (Fig 6)"),
-    "fig7_9": ("benchmarks.fig7_9_secondary", "clique/time/edge reduction (Figs 7-9)"),
-    "table3": ("benchmarks.table3_strong_collapse", "PrunIT vs Strong Collapse (Table 3)"),
-    "fig2": ("benchmarks.fig2_clustering", "clustering coeff vs higher PDs (Fig 2/10)"),
-    "kernels": ("benchmarks.kernel_bench", "Pallas kernel microbenchmarks"),
-    "serve": ("benchmarks.serve_bench", "TopoServe throughput/latency + parity"),
-    "stream": ("benchmarks.stream_bench", "TopoStream updates/s + skip-rate + parity"),
-    "metrics": ("benchmarks.metrics_bench", "diagram distances + Gram kernel + parity + drift"),
-    "reduction": ("benchmarks.reduction_bench",
-                  "ReductionEngine two-phase repack win + reduction ratio + parity"),
+    "fig4": Suite("benchmarks.fig4_coral_reduction",
+                  "CoralTDA vertex reduction (Fig 4)"),
+    "fig5a": Suite("benchmarks.fig5_prunit",
+                   "PrunIT vertex reduction (Fig 5a)"),
+    "fig5b": Suite("benchmarks.fig5b_ego_time",
+                   "PrunIT ego-net PD0 time (Fig 5b)"),
+    "table1": Suite("benchmarks.table1_large_networks",
+                    "PrunIT on large networks (Table 1)"),
+    "fig6": Suite("benchmarks.fig6_combined",
+                  "PrunIT+CoralTDA combined (Fig 6)"),
+    "fig7_9": Suite("benchmarks.fig7_9_secondary",
+                    "clique/time/edge reduction (Figs 7-9)"),
+    "table3": Suite("benchmarks.table3_strong_collapse",
+                    "PrunIT vs Strong Collapse (Table 3)"),
+    "fig2": Suite(
+        "benchmarks.fig2_clustering",
+        "clustering coeff vs higher PDs (Fig 2/10)",
+        references=(
+            RefSpec("*.kmeans_purity", "higher", rel_band=0.08,
+                    note="Fig 10 clustering separation must hold"),
+            RefSpec("*.ncc_holdout_accuracy", "higher", rel_band=0.08,
+                    note="nearest-class-centroid holdout accuracy"),
+        ),
+    ),
+    "kernels": Suite(
+        "benchmarks.kernel_bench",
+        "Pallas kernel microbenchmarks",
+        quick_invariant=True,  # fixed sizes: quick runs gate too
+        references=(
+            RefSpec("*_converged_frac", "higher", rel_band=0.02,
+                    note="auction must converge on (near) every pair"),
+            RefSpec("*_pallas_speedup", "higher", rel_band=0.60,
+                    note="speedup ratios compound two timings' jitter"),
+        ),
+    ),
+    "serve": Suite(
+        "benchmarks.serve_bench",
+        "TopoServe throughput/latency + parity",
+        references=(
+            RefSpec("*.plan_cache_misses", "info",
+                    note="depends on request mix, not perf"),
+        ),
+    ),
+    "stream": Suite(
+        "benchmarks.stream_bench",
+        "TopoStream updates/s + skip-rate + parity",
+        references=(
+            RefSpec("*.skip_rate", "higher", rel_band=0.10,
+                    note="reduction-certificate hit rate is the win"),
+        ),
+    ),
+    "metrics": Suite(
+        "benchmarks.metrics_bench",
+        "diagram distances + Gram kernel + parity + drift",
+        references=(
+            RefSpec("*.recall_at_10", "higher", rel_band=0.03,
+                    note="two-stage retrieval quality (CI asserts >= 0.95)"),
+            RefSpec("*_bytes*", "lower", rel_band=0.0,
+                    note="analytic working-set sizes; any growth is an "
+                         "algorithmic change, not jitter"),
+            RefSpec("*.speedup_vs_exhaustive", "higher", rel_band=0.60,
+                    note="two-stage vs exhaustive ratio"),
+        ),
+    ),
+    "reduction": Suite(
+        "benchmarks.reduction_bench",
+        "ReductionEngine two-phase repack win + reduction ratio + parity",
+        references=(
+            RefSpec("*_reduction_pct", "higher", rel_band=0.05,
+                    note="paper's reduction ratios are structural, "
+                         "not timing-jittery"),
+            RefSpec("*.persist_speedup", "higher", rel_band=0.60),
+            RefSpec("*.total_speedup", "higher", rel_band=0.60),
+        ),
+    ),
 }
 
 
@@ -61,20 +145,21 @@ def main() -> None:
     report = Report(quick=args.quick)
     failures = []
     for k in keys:
-        mod_name, desc = SUITES[k]
-        print(f"[bench] {k}: {desc}", flush=True)
+        suite = SUITES[k]
+        print(f"[bench] {k}: {suite.description}", flush=True)
         row_start = len(report.rows)
         t0 = time.time()
         ok = True
         try:
-            mod = __import__(mod_name, fromlist=["run"])
+            mod = __import__(suite.module, fromlist=["run"])
             _call_suite(mod, report, args.quick)
             print(f"[bench] {k} done in {time.time()-t0:.1f}s", flush=True)
         except Exception:
             failures.append(k)
             ok = False
             traceback.print_exc()
-        write_suite_json(out_dir, k, desc, report.rows[row_start:],
+        write_suite_json(out_dir, k, suite.description,
+                         report.rows[row_start:],
                          wall_s=time.time() - t0, quick=args.quick, ok=ok)
     os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:

@@ -176,52 +176,64 @@ def auction_solve(cost, eps0: float = DEFAULT_EPS0,
 
 def _kernel(cost_ref, assign_ref, total_ref, conv_ref, rounds_ref, *,
             eps0, eps_factor, n_scales, max_rounds):
-    assign, total, converged, rounds = auction_solve(
-        cost_ref[0], eps0=eps0, eps_factor=eps_factor, n_scales=n_scales,
-        max_rounds=max_rounds)
-    assign_ref[...] = assign[None].astype(jnp.int32)
-    total_ref[...] = total.reshape(1, 1)
-    conv_ref[...] = converged.reshape(1, 1)
-    rounds_ref[...] = rounds.reshape(1, 1).astype(jnp.int32)
+    assign, total, converged, rounds = jax.vmap(functools.partial(
+        auction_solve, eps0=eps0, eps_factor=eps_factor, n_scales=n_scales,
+        max_rounds=max_rounds))(cost_ref[...])
+    assign_ref[...] = assign.astype(jnp.int32)
+    total_ref[...] = total[:, None]
+    conv_ref[...] = converged[:, None]
+    rounds_ref[...] = rounds[:, None].astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "eps0", "eps_factor", "n_scales", "max_rounds", "interpret"))
+    "eps0", "eps_factor", "n_scales", "max_rounds", "tile_b", "interpret"))
 def auction_lap_pallas(cost: jax.Array, eps0: float = DEFAULT_EPS0,
                        eps_factor: float = DEFAULT_EPS_FACTOR,
                        n_scales: int = DEFAULT_N_SCALES,
                        max_rounds: int | None = None,
+                       tile_b: int = 1,
                        interpret: bool = True):
     """Batched assignment solve: (B, M, M) costs → matchings + totals.
 
     Returns ``(assign (B, M) i32, total (B,) f32, converged (B,) bool,
-    rounds (B,) i32)``.  One grid step per pair; the pair's cost matrix
-    stays in VMEM for the entire data-dependent bidding loop.
+    rounds (B,) i32)``.  ``tile_b`` pairs are solved per grid step (their
+    cost matrices co-resident in VMEM for the entire data-dependent
+    bidding loop; the batch is zero-padded to a ``tile_b`` multiple —
+    an all-zero cost matrix converges in a handful of rounds).  The
+    autotuner (``python -m repro.perfgate tune``) sweeps ``tile_b``; the
+    ops wrapper loads the pinned winner per device.
     """
     b, m, m2 = cost.shape
     if m != m2:
         raise ValueError(f"cost must be square per pair, got {(m, m2)}")
     if max_rounds is None:
         max_rounds = default_max_rounds(m)
+    bp = -(-b // tile_b) * tile_b
+    costp = jnp.pad(cost.astype(jnp.float32),
+                    ((0, bp - b), (0, 0), (0, 0)))
     assign, total, conv, rounds = pl.pallas_call(
         functools.partial(_kernel, eps0=eps0, eps_factor=eps_factor,
                           n_scales=n_scales, max_rounds=max_rounds),
-        grid=(b,),
-        in_specs=[pl.BlockSpec((1, m, m), lambda i: (i, 0, 0),
+        grid=(bp // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, m, m), lambda i: (i, 0, 0),
                                memory_space=pltpu.VMEM)],
         out_specs=[
-            pl.BlockSpec((1, m), lambda i: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, 1), lambda i: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, 1), lambda i: (i, 0), memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, 1), lambda i: (i, 0), memory_space=pltpu.VMEM),
+            pl.BlockSpec((tile_b, m), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((tile_b, 1), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((b, m), jnp.int32),
-            jax.ShapeDtypeStruct((b, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b, 1), jnp.bool_),
-            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, m), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
         ],
         interpret=interpret,
         name="auction_lap",
-    )(cost.astype(jnp.float32))
-    return assign, total[:, 0], conv[:, 0], rounds[:, 0]
+    )(costp)
+    return assign[:b], total[:b, 0], conv[:b, 0], rounds[:b, 0]

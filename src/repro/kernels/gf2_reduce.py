@@ -40,12 +40,15 @@ def _low_of(col: jax.Array) -> jax.Array:
     return jnp.where(widx >= 0, widx * WORD + bit, -1)
 
 
-def _kernel(b_ref, bm_ref, owner_ref, positive_ref):
-    s, w = b_ref.shape
-    r = owner_ref.shape[0]  # rows may differ from columns (block reduction)
-    bm_ref[...] = b_ref[...]
-    owner_ref[...] = jnp.full((r,), -1, jnp.int32)
-    positive_ref[...] = jnp.zeros((s,), jnp.bool_)
+def _reduce_columns(s, get_col, put_col, get_owner, put_owner,
+                    put_positive):
+    """The column reduction loop, parameterized over ref accessors.
+
+    One definition serves both the flat single-matrix kernel (refs
+    ``(S, W)``) and the grid-batched kernel (refs ``(1, S, W)``, one
+    complex per grid step): the accessors close over the refs and hide
+    the leading-axis indexing difference.
+    """
 
     def col_body(j, _):
         def w_cond(cs):
@@ -60,35 +63,73 @@ def _kernel(b_ref, bm_ref, owner_ref, positive_ref):
                 return col, jnp.array(True), jnp.int32(-1)
 
             def has_bits(col):
-                p = pl.load(owner_ref, (pl.dslice(l, 1),))[0]
+                p = get_owner(l)
 
                 def claim(col):
                     return col, jnp.array(True), l
 
                 def xor(col):
-                    other = pl.load(bm_ref, (pl.dslice(p, 1), slice(None)))
-                    return col ^ other, jnp.array(False), jnp.int32(-1)
+                    return col ^ get_col(p), jnp.array(False), jnp.int32(-1)
 
                 return lax.cond(p < 0, claim, xor, col)
 
             return lax.cond(l < 0, no_bits, has_bits, col)
 
-        col0 = pl.load(bm_ref, (pl.dslice(j, 1), slice(None)))
         col, _, claimed = lax.while_loop(
-            w_cond, w_body, (col0, jnp.array(False), jnp.int32(-1))
+            w_cond, w_body, (get_col(j), jnp.array(False), jnp.int32(-1))
         )
-        pl.store(bm_ref, (pl.dslice(j, 1), slice(None)), col)
+        put_col(j, col)
 
         @pl.when(claimed >= 0)
         def _claim():
-            pl.store(owner_ref, (pl.dslice(claimed, 1),),
-                     jnp.full((1,), j, jnp.int32))
+            put_owner(claimed, j)
 
-        pl.store(positive_ref, (pl.dslice(j, 1),),
-                 jnp.full((1,), claimed < 0, jnp.bool_))
+        put_positive(j, claimed < 0)
         return 0
 
     lax.fori_loop(0, s, col_body, 0)
+
+
+def _kernel(b_ref, bm_ref, owner_ref, positive_ref):
+    s, w = b_ref.shape
+    r = owner_ref.shape[0]  # rows may differ from columns (block reduction)
+    bm_ref[...] = b_ref[...]
+    owner_ref[...] = jnp.full((r,), -1, jnp.int32)
+    positive_ref[...] = jnp.zeros((s,), jnp.bool_)
+    _reduce_columns(
+        s,
+        get_col=lambda j: pl.load(bm_ref, (pl.dslice(j, 1), slice(None))),
+        put_col=lambda j, col: pl.store(
+            bm_ref, (pl.dslice(j, 1), slice(None)), col),
+        get_owner=lambda l: pl.load(owner_ref, (pl.dslice(l, 1),))[0],
+        put_owner=lambda l, j: pl.store(
+            owner_ref, (pl.dslice(l, 1),), jnp.full((1,), j, jnp.int32)),
+        put_positive=lambda j, pos: pl.store(
+            positive_ref, (pl.dslice(j, 1),),
+            jnp.full((1,), pos, jnp.bool_)),
+    )
+
+
+def _batch_kernel(b_ref, bm_ref, owner_ref, positive_ref):
+    _, s, w = b_ref.shape
+    r = owner_ref.shape[-1]
+    bm_ref[...] = b_ref[...]
+    owner_ref[...] = jnp.full((1, r), -1, jnp.int32)
+    positive_ref[...] = jnp.zeros((1, s), jnp.bool_)
+    z = pl.dslice(0, 1)
+    _reduce_columns(
+        s,
+        get_col=lambda j: pl.load(
+            bm_ref, (z, pl.dslice(j, 1), slice(None)))[0],
+        put_col=lambda j, col: pl.store(
+            bm_ref, (z, pl.dslice(j, 1), slice(None)), col[None]),
+        get_owner=lambda l: pl.load(owner_ref, (z, pl.dslice(l, 1)))[0, 0],
+        put_owner=lambda l, j: pl.store(
+            owner_ref, (z, pl.dslice(l, 1)), jnp.full((1, 1), j, jnp.int32)),
+        put_positive=lambda j, pos: pl.store(
+            positive_ref, (z, pl.dslice(j, 1)),
+            jnp.full((1, 1), pos, jnp.bool_)),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "n_rows"))
@@ -118,5 +159,43 @@ def gf2_reduce_pallas(b: jax.Array, interpret: bool = True,
         ],
         interpret=interpret,
         name="gf2_boundary_reduce",
+    )(b)
+    return bm, owner, positive
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "n_rows"))
+def gf2_reduce_batch_pallas(b: jax.Array, interpret: bool = True,
+                            n_rows: int | None = None):
+    """Grid-batched reduction of (B, S, W) packed matrices.
+
+    One grid step per complex (block ``(1, S, W)`` resident in VMEM) —
+    the alternative to vmapping :func:`gf2_reduce_pallas` over the batch
+    (which batches every column op across complexes instead).  Which
+    wins is device-dependent; ``python -m repro.perfgate tune`` times
+    both and pins the winner as the ``gf2_reduce.batch_mode`` tile
+    (``repro.kernels.ops.gf2_reduce_batch`` consults it).
+    """
+    bsz, s, w = b.shape
+    r = s if n_rows is None else n_rows
+    bm, owner, positive = pl.pallas_call(
+        _batch_kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((1, s, w), lambda i: (i, 0, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=[
+            pl.BlockSpec((1, s, w), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, r), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, s), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, w), jnp.uint32),
+            jax.ShapeDtypeStruct((bsz, r), jnp.int32),
+            jax.ShapeDtypeStruct((bsz, s), jnp.bool_),
+        ],
+        interpret=interpret,
+        name="gf2_boundary_reduce_batch",
     )(b)
     return bm, owner, positive

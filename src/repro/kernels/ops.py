@@ -3,16 +3,26 @@
 On TPU the kernels compile natively; everywhere else they run in
 ``interpret=True`` mode (the kernel body executed with real JAX ops on CPU),
 which is how correctness is validated in this container (see tests/).
+
+Tile shapes resolve through :mod:`repro.kernels.tuning`: a winner pinned
+by ``python -m repro.perfgate tune`` in ``results/TUNED_tiles.json`` (and
+matching the current device string) overrides the hardcoded defaults;
+explicit keyword arguments override both.  Absent or foreign-device files
+silently fall back to the hardcoded tiles.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.auction_lap import auction_lap_pallas
 from repro.kernels.common_neighbors import common_neighbors_pallas
 from repro.kernels.domination import domination_pallas
-from repro.kernels.gf2_reduce import gf2_reduce_pallas
+from repro.kernels.gf2_reduce import (
+    gf2_reduce_batch_pallas,
+    gf2_reduce_pallas,
+)
 from repro.kernels.kcore_peel import kcore_peel_pallas
 from repro.kernels.pairwise_gram import pairwise_l1_pallas
 from repro.kernels.sinkhorn_lse import (
@@ -25,10 +35,12 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def domination(adj: jax.Array, mask: jax.Array, tile: int = 128) -> jax.Array:
+def domination(adj: jax.Array, mask: jax.Array,
+               tile: int | None = None) -> jax.Array:
     """(B, N, N) dom[u, v] = "v dominates u" (closed neighborhoods)."""
+    t = tuning.resolve_tiles("domination", tile=tile)["tile"]
     return domination_pallas(
-        adj, mask, tile_u=tile, tile_v=tile, tile_w=tile, interpret=_interpret()
+        adj, mask, tile_u=t, tile_v=t, tile_w=t, interpret=_interpret()
     )
 
 
@@ -55,39 +67,70 @@ def gf2_reduce(b: jax.Array, n_rows: int | None = None):
     return owner, positive
 
 
-def pairwise_l1(x: jax.Array, y: jax.Array, tile_m: int = 8,
-                tile_n: int = 128, tile_d: int = 128) -> jax.Array:
+def gf2_reduce_batch(b: jax.Array, n_rows: int | None = None,
+                     batch_mode: str | None = None):
+    """Reduce a (B, S, W) packed batch -> (owner (B, R), positive (B, S)).
+
+    ``batch_mode="vmap"`` batches the column ops across complexes (one
+    vectorized program); ``"grid"`` gives each complex its own grid step
+    (the native TPU shape).  Defaults to the winner pinned in
+    ``results/TUNED_tiles.json`` for this device, else ``"vmap"``.
+    """
+    mode = tuning.resolve_tiles("gf2_reduce",
+                                batch_mode=batch_mode)["batch_mode"]
+    if mode == "grid":
+        _, owner, positive = gf2_reduce_batch_pallas(
+            b, interpret=_interpret(), n_rows=n_rows)
+        return owner, positive
+    if mode != "vmap":
+        raise ValueError(f"unknown gf2 batch_mode {mode!r}")
+    owner, positive = jax.vmap(
+        lambda bb: gf2_reduce(bb, n_rows=n_rows))(b)
+    return owner, positive
+
+
+def pairwise_l1(x: jax.Array, y: jax.Array, tile_m: int | None = None,
+                tile_n: int | None = None,
+                tile_d: int | None = None) -> jax.Array:
     """(M, D) × (N, D) → (M, N) pairwise-L1 Gram over SW embeddings."""
+    t = tuning.resolve_tiles("pairwise_gram", tile_m=tile_m, tile_n=tile_n,
+                             tile_d=tile_d)
     return pairwise_l1_pallas(
-        x, y, tile_m=tile_m, tile_n=tile_n, tile_d=tile_d,
+        x, y, tile_m=t["tile_m"], tile_n=t["tile_n"], tile_d=t["tile_d"],
         interpret=_interpret())
 
 
 def auction_lap(cost: jax.Array, n_scales: int = 10,
-                max_rounds: int | None = None):
+                max_rounds: int | None = None,
+                tile_b: int | None = None):
     """Batched ε-scaled auction assignment: (B, M, M) → matchings + totals.
 
     Returns ``(assign, total, converged, rounds)`` — see
     ``kernels/auction_lap.py`` for the termination/optimality contract.
+    ``tile_b`` pairs share one grid step (pinned winner by default).
     """
+    tb = tuning.resolve_tiles("auction_lap", tile_b=tile_b)["tile_b"]
     return auction_lap_pallas(cost, n_scales=n_scales, max_rounds=max_rounds,
-                              interpret=_interpret())
+                              tile_b=tb, interpret=_interpret())
 
 
 def sinkhorn_lse(xp: jax.Array, yp: jax.Array, dual: jax.Array,
-                 logw: jax.Array, e_t: jax.Array, tile: int = 128) -> jax.Array:
+                 logw: jax.Array, e_t: jax.Array,
+                 tile: int | None = None) -> jax.Array:
     """Blocked online-LSE Sinkhorn half-update (cost built on the fly)."""
-    return sinkhorn_lse_pallas(xp, yp, dual, logw, e_t, tile_m=tile,
-                               tile_n=tile, interpret=_interpret())
+    t = tuning.resolve_tiles("sinkhorn_lse", tile=tile)["tile"]
+    return sinkhorn_lse_pallas(xp, yp, dual, logw, e_t, tile_m=t,
+                               tile_n=t, interpret=_interpret())
 
 
 def sinkhorn_pair_sum(xp: jax.Array, yp: jax.Array, f: jax.Array,
                       g: jax.Array, log_a: jax.Array, log_b: jax.Array,
                       e_t: jax.Array, mode: str = "plan",
-                      tile: int = 128) -> jax.Array:
+                      tile: int | None = None) -> jax.Array:
     """Blocked masked pair reduction: ⟨P, C⟩ (``"plan"``) or Σc (``"cost"``)."""
+    t = tuning.resolve_tiles("sinkhorn_lse", tile=tile)["tile"]
     return sinkhorn_pair_sum_pallas(xp, yp, f, g, log_a, log_b, e_t,
-                                    mode=mode, tile_m=tile, tile_n=tile,
+                                    mode=mode, tile_m=t, tile_n=t,
                                     interpret=_interpret())
 
 

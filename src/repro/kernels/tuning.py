@@ -1,0 +1,128 @@
+"""Pinned Pallas tile shapes: load ``results/TUNED_tiles.json`` winners.
+
+``python -m repro.perfgate tune`` sweeps each kernel's grid/block space
+and persists the argmin configs here; the ops layer
+(:mod:`repro.kernels.ops`) resolves every tile parameter through
+:func:`resolve_tiles` so a pinned winner is used automatically, with the
+hardcoded defaults below as the fallback whenever the file is absent,
+unparseable, from a different device, or from an older schema.  Explicit
+keyword arguments always win over pinned values.
+
+The file is keyed by a device string (``"<backend>:<device_kind>"``) —
+tiles tuned on a TPU must never be silently applied on CPU interpret
+runs and vice versa.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+
+TILES_ENV = "TOPOPIPE_TUNED_TILES"
+TILES_SCHEMA = 1
+
+# the hardcoded fallbacks — one entry per tunable kernel, and the full
+# set of tunable parameter names each kernel accepts (unknown keys in a
+# pinned config are dropped, so a stale file can never inject kwargs)
+DEFAULT_TILES: dict[str, dict] = {
+    "pairwise_gram": {"tile_m": 8, "tile_n": 128, "tile_d": 128},
+    "sinkhorn_lse": {"tile": 128},
+    "auction_lap": {"tile_b": 1},
+    "gf2_reduce": {"batch_mode": "vmap"},
+    "domination": {"tile": 128},
+}
+
+_lock = threading.Lock()
+_cache: dict[str, dict | None] = {}
+
+
+def device_string() -> str:
+    """``"<backend>:<device_kind>"`` of the default device."""
+    dev = jax.devices()[0]
+    return f"{jax.default_backend()}:{dev.device_kind}"
+
+
+def tiles_path() -> str:
+    """``$TOPOPIPE_TUNED_TILES`` or ``<repo-root>/results/TUNED_tiles.json``."""
+    env = os.environ.get(TILES_ENV)
+    if env:
+        return env
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, "results", "TUNED_tiles.json")
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if not isinstance(payload, dict):
+        return None
+    if payload.get("version") != TILES_SCHEMA:
+        return None
+    return payload
+
+
+def load_tuned(path: str | None = None) -> dict | None:
+    """The parsed tile file (cached per path), or None when unusable."""
+    path = path or tiles_path()
+    with _lock:
+        if path not in _cache:
+            _cache[path] = _load(path)
+        return _cache[path]
+
+
+def reload_tuned() -> None:
+    """Drop the cache (tests, and after ``perfgate tune`` writes)."""
+    with _lock:
+        _cache.clear()
+
+
+def tuned_tiles(kernel: str, path: str | None = None) -> dict:
+    """Pinned config for ``kernel`` on *this* device, or ``{}``.
+
+    Empty when the file is absent/bad, records a different device string,
+    or has no entry for the kernel.  Keys not in the kernel's declared
+    tunable set are dropped.
+    """
+    payload = load_tuned(path)
+    if payload is None or payload.get("device") != device_string():
+        return {}
+    entry = payload.get("kernels", {}).get(kernel)
+    if not isinstance(entry, dict):
+        return {}
+    tiles = entry.get("tiles", {})
+    known = DEFAULT_TILES.get(kernel, {})
+    return {k: v for k, v in tiles.items() if k in known}
+
+
+def resolve_tiles(kernel: str, **overrides) -> dict:
+    """defaults < pinned winners < explicit non-None keyword overrides."""
+    out = dict(DEFAULT_TILES.get(kernel, {}))
+    out.update(tuned_tiles(kernel))
+    for k, v in overrides.items():
+        if v is not None:
+            out[k] = v
+    return out
+
+
+def save_tuned(winners: dict[str, dict], path: str | None = None,
+               meta: dict | None = None) -> str:
+    """Persist sweep winners: ``{kernel: {"tiles": {...}, ...}}``."""
+    path = path or tiles_path()
+    payload = {
+        "version": TILES_SCHEMA,
+        "device": device_string(),
+        "kernels": winners,
+    }
+    payload.update(meta or {})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    reload_tuned()
+    return path

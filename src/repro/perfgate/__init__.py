@@ -1,0 +1,30 @@
+"""PerfGate: the perf-regression gate + Pallas tile autotuner.
+
+Turns the committed ``results/BENCH_*.json`` trajectory from passive
+artifacts into an enforced contract (ROADMAP: "continuous perf gate +
+kernel autotuner", in the mold of the ReFrame perf-reference checks):
+
+* :mod:`repro.perfgate.references` — parses committed baselines into
+  per-metric perf references with tolerance bands (per-suite
+  ``RefSpec`` declarations live next to the suite registry in
+  ``benchmarks/run.py``; defaults are derived from the metric name and
+  widened by the run-to-run jitter each baseline records in its
+  ``deltas`` block).
+* :mod:`repro.perfgate.gate` — ``python -m repro.perfgate check``: runs
+  benchmark suites through the existing ``benchmarks/run.py`` registry,
+  diffs fresh rows against the reference store, attributes regressions
+  to a cost cell (:mod:`repro.perfgate.cost_cells`, riding
+  ``launch/roofline.py``), writes ``results/GATE_report.json`` and exits
+  nonzero on any regression.
+* :mod:`repro.perfgate.autotune` — ``python -m repro.perfgate tune``:
+  sweeps Pallas grid/block shapes per kernel, persists winners to
+  ``results/TUNED_tiles.json`` (``repro.kernels.tuning`` is the loader
+  the ops layer consults, hardcoded tiles staying the fallback).
+"""
+from repro.perfgate.references import (  # noqa: F401
+    PerfReference,
+    RefSpec,
+    load_reference_store,
+)
+from repro.perfgate.gate import check, diff_rows  # noqa: F401
+from repro.perfgate.autotune import TUNABLES, tune  # noqa: F401

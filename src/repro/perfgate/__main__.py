@@ -1,0 +1,69 @@
+"""CLI: ``python -m repro.perfgate {check,tune}``.
+
+``check`` runs benchmark suites and gates fresh numbers against the
+committed ``results/BENCH_*.json`` baselines (exit 1 on any regression
+past its band, or on a suite crash).  ``tune`` sweeps the Pallas tile
+spaces and pins per-device winners to ``results/TUNED_tiles.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _csv(s: str) -> list[str]:
+    return [t for t in s.replace(",", " ").split() if t]
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.perfgate",
+        description=__doc__.strip().splitlines()[0])
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    c = sub.add_parser("check", help="gate fresh benchmark runs against "
+                                     "committed BENCH_*.json references")
+    c.add_argument("--only", type=_csv, default=None, metavar="SUITE,...",
+                   help="subset of benchmark suites (default: all)")
+    c.add_argument("--quick", action="store_true",
+                   help="CI-sized workloads; size-dependent rows demote to "
+                        "info unless the baseline is also quick")
+    c.add_argument("--band-scale", type=float, default=1.0, metavar="F",
+                   help="multiply every relative tolerance band "
+                        "(abs_upper correctness rows never loosen)")
+    c.add_argument("--results", default="results", metavar="DIR",
+                   help="directory holding BENCH_*.json baselines")
+    c.add_argument("--out", default=None, metavar="PATH",
+                   help="gate report path (default: RESULTS/GATE_report.json)")
+
+    t = sub.add_parser("tune", help="sweep Pallas tile spaces, pin winners "
+                                    "to results/TUNED_tiles.json")
+    t.add_argument("--only", type=_csv, default=None, metavar="KERNEL,...",
+                   help="subset of tunable kernels (default: all)")
+    t.add_argument("--quick", action="store_true",
+                   help="smaller sweep workloads (CI)")
+    t.add_argument("--repeats", type=int, default=2, metavar="N",
+                   help="timed repetitions per candidate (best-of)")
+    t.add_argument("--out", default=None, metavar="PATH",
+                   help="tile file path (default: results/TUNED_tiles.json)")
+    t.add_argument("--dry-run", action="store_true",
+                   help="sweep and report, but do not write the tile file")
+
+    args = p.parse_args(argv)
+    if args.cmd == "check":
+        from repro.perfgate.gate import check
+
+        report = check(only=args.only, quick=args.quick,
+                       band_scale=args.band_scale, results_dir=args.results,
+                       out=args.out)
+        return 0 if report["ok"] else 1
+
+    from repro.perfgate.autotune import tune
+
+    tune(only=args.only, quick=args.quick, repeats=args.repeats,
+         path=args.out, save=not args.dry_run)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,147 @@
+"""Cost-cell attribution for gate regressions.
+
+When the gate flags ``kernel_pairwise_gram.G128_D512_pallas_s`` as
+regressed, the report should say *where the time goes*, not just that it
+went up.  Each benchmark family carries a coarse cost model — FLOPs and
+bytes as a function of the shape tokens embedded in the metric name
+(``B32_N128``, ``G128_D512``, ``B64_M32``, ``S512``) — and the regression
+is attributed to the dominant roofline term via the same
+``launch/roofline.py::roofline_terms`` machinery the dry-run lowering
+reports use.  Benchmarks without a closed-form model fall back to a
+subsystem cell (serve drain, stream verdict, two-stage retrieval, …) so
+every regression still names the layer that owns it.
+"""
+from __future__ import annotations
+
+import re
+from typing import Callable
+
+from repro.launch.roofline import roofline_terms
+
+# shape tokens: a capital letter immediately followed by digits, delimited
+# by "_" (B32_N128, G64_D256, S512_...)
+_TOKEN_RE = re.compile(r"(?:^|_)([A-Z])(\d+)(?=_|$)")
+
+
+def parse_shape(metric: str) -> dict[str, int]:
+    """{"B": 32, "N": 128} from a metric name like ``B32_N128_jnp_s``."""
+    return {m.group(1): int(m.group(2))
+            for m in _TOKEN_RE.finditer(metric)}
+
+
+def _f32(*dims: int) -> float:
+    total = 4.0
+    for d in dims:
+        total *= d
+    return total
+
+
+# benchmark-name prefix -> (cell label, flops(shape), bytes(shape))
+# Shapes may be partial; model fns must tolerate missing tokens by
+# raising KeyError (caught -> unmodeled fallback).
+_MODELS: dict[str, tuple[str, Callable[[dict], float],
+                         Callable[[dict], float]]] = {
+    "kernel_pairwise_gram": (
+        "pairwise_gram VPU L1 reduction (tile (TM,TN,TD) VMEM acc)",
+        lambda s: 3.0 * s["G"] * s["G"] * s["D"],
+        lambda s: _f32(2 * s["G"], s["D"]) + _f32(s["G"], s["G"]),
+    ),
+    "metrics_gram": (
+        "pairwise_gram VPU L1 reduction (tile (TM,TN,TD) VMEM acc)",
+        lambda s: 3.0 * s["G"] * s["G"] * s["D"],
+        lambda s: _f32(2 * s["G"], s["D"]) + _f32(s["G"], s["G"]),
+    ),
+    "kernel_domination": (
+        "domination closed-neighborhood subset check (tiled bool VPU)",
+        lambda s: 2.0 * s["B"] * s["N"] ** 3,
+        lambda s: 3.0 * _f32(s["B"], s["N"], s["N"]),
+    ),
+    "kernel_kcore": (
+        "kcore peel degree sweep (jnp reduction)",
+        lambda s: float(s["B"] * s["N"] ** 2),
+        lambda s: _f32(s["B"], s["N"], s["N"]),
+    ),
+    "kernel_common_neighbors": (
+        "common-neighbors A·A masked count (tiled int VPU)",
+        lambda s: 2.0 * s["B"] * s["N"] ** 3,
+        lambda s: 2.0 * _f32(s["B"], s["N"], s["N"]),
+    ),
+    "kernel_auction_lap": (
+        "auction_lap bidding rounds (VMEM-resident (M,M) value matrix)",
+        # ~3 row/col reductions per round, round count ~ 64 + 32·M
+        lambda s: 3.0 * s["B"] * (64 + 32 * s["M"]) * s["M"] ** 2,
+        lambda s: _f32(s["B"], s["M"], s["M"]),
+    ),
+    "kernel_sinkhorn_lse": (
+        "sinkhorn_lse blocked online-LSE half-update (cost on the fly)",
+        lambda s: 8.0 * s["B"] * s["M"] ** 2,
+        lambda s: 6.0 * _f32(s["B"], s["M"]),
+    ),
+    "kernel_gf2_reduce": (
+        "gf2_reduce packed GF(2) pivot chase (whole matrix in VMEM)",
+        # worst-case column XOR chains: S^2 word ops over W = S/32 words
+        lambda s: float(s["B"] * s["S"] ** 2 * max(s["S"] // 32, 1)),
+        lambda s: _f32(s["B"], s["S"], max(s["S"] // 32, 1)),
+    ),
+    "metrics_blocked_sinkhorn": (
+        "sinkhorn_lse blocked online-LSE vs dense cost materialization",
+        lambda s: 8.0 * s["S"] ** 2,
+        lambda s: 6.0 * _f32(s["S"]),
+    ),
+}
+
+# benchmark-name prefix -> subsystem cell for unmodeled rows
+_SUBSYSTEMS: tuple[tuple[str, str], ...] = (
+    ("metrics_rerank", "TopoIndex two-stage retrieval (LSH coarse → "
+                       "auction exact re-rank)"),
+    ("metrics_serve_two_stage", "SimilarityServe drain (coarse top-k → "
+                                "batched auction compare)"),
+    ("metrics_drift", "TopoStream drift scoring through the metric "
+                      "registry"),
+    ("metrics_exact_w", "MetricEngine exact_w (auction-LAP on augmented "
+                        "clouds)"),
+    ("metrics_auction_parity", "MetricEngine exact_w (auction-LAP on "
+                               "augmented clouds)"),
+    ("metrics", "MetricEngine distance path (compare/pairwise)"),
+    ("serve", "TopoServe drain (bucketed reduce→persist plan execution)"),
+    ("stream", "TopoStream verdict + gathered recompute"),
+    ("ego_decay", "ReductionEngine two-phase reduce→repack→persist"),
+    ("coral_heavy", "ReductionEngine two-phase reduce→repack→persist"),
+    ("reduction", "ReductionEngine two-phase reduce→repack→persist"),
+    ("fig2", "persistence-kernel clustering (Gram + kernel kmeans)"),
+    ("kernel", "Pallas kernel microbench"),
+)
+
+
+def attribute(suite: str, benchmark: str, metric: str) -> dict:
+    """Cost cell for one regressed row.
+
+    Returns ``{"cell", "bound", "modeled"}`` plus — for modeled kernels —
+    the roofline terms (``compute_s``/``memory_s`` per-device estimates at
+    the mesh's peak numbers, useful as a *ratio*, not a wall-clock
+    prediction on CPU).
+    """
+    shape = parse_shape(metric)
+    for prefix, (cell, flops_fn, bytes_fn) in _MODELS.items():
+        if benchmark.startswith(prefix):
+            try:
+                flops, nbytes = flops_fn(shape), bytes_fn(shape)
+            except KeyError:
+                break  # metric name carries no shape tokens -> subsystem
+            terms = roofline_terms(flops, nbytes, {})
+            return {
+                "cell": cell,
+                "bound": terms["dominant"],
+                "modeled": True,
+                "flops": flops,
+                "bytes": nbytes,
+                "compute_s": terms["compute_s"],
+                "memory_s": terms["memory_s"],
+                "shape": shape,
+            }
+    for prefix, cell in _SUBSYSTEMS:
+        if benchmark.startswith(prefix):
+            return {"cell": cell, "bound": "unmodeled", "modeled": False,
+                    "shape": shape}
+    return {"cell": f"{suite}/{benchmark}", "bound": "unmodeled",
+            "modeled": False, "shape": shape}

@@ -1,0 +1,248 @@
+"""The gate runner: fresh benchmark rows vs the committed reference store.
+
+``python -m repro.perfgate check [--only SUITE,...] [--quick]`` executes
+benchmark suites through the existing ``benchmarks/run.py`` registry,
+diffs every fresh ``(benchmark, metric)`` row against the reference store
+(:mod:`repro.perfgate.references`), attributes each regression to a cost
+cell (:mod:`repro.perfgate.cost_cells`), writes a machine-readable
+``results/GATE_report.json`` next to the ``BENCH_*.json`` baselines, and
+exits nonzero when anything regressed past its band.
+
+Quick-vs-full semantics: a row only gates on a *relative* band (``lower``
+/ ``higher`` directions) when the fresh run's ``--quick`` flag matches
+the baseline's — quick suites shrink their workloads, so "pairs/s at
+quick size" is not comparable to the committed full-run number.  Rows
+whose workload is quick-invariant (the kernel microbenches) gate either
+way because their suite declares fixed sizes.  ``abs_upper`` correctness
+counters (parity failures, max-abs-diffs) gate regardless of size.
+
+The gate itself never rewrites the ``BENCH_*.json`` baselines — suites
+run through an in-memory :class:`benchmarks.common.Report`; refreshing a
+baseline stays an explicit ``python -m benchmarks.run`` + commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import traceback
+
+from repro.perfgate import cost_cells
+from repro.perfgate.references import PerfReference, load_reference_store
+
+GATE_REPORT = "GATE_report.json"
+
+
+# ---------------------------------------------------------------- row diff
+
+def evaluate_row(ref: PerfReference, value: float, band_scale: float = 1.0,
+                 quick_mismatch: bool = False) -> dict:
+    """Verdict for one matched row: ok / regression / improvement / info."""
+    rec = {
+        "benchmark": ref.benchmark, "metric": ref.metric,
+        "value": value, "ref": ref.value, "direction": ref.direction,
+        "band": ref.rel_band, "band_scale": band_scale,
+        "source": ref.source,
+    }
+    if ref.direction == "info":
+        rec["status"] = "info"
+        return rec
+    if ref.direction == "abs_upper":
+        # correctness counter: never loosened by band_scale
+        allowed = max(ref.value * 2.0, ref.abs_tol)
+        rec["allowed"] = allowed
+        rec["status"] = "ok" if value <= allowed else "regression"
+        return rec
+    if quick_mismatch:
+        # workload size differs from the baseline's -> not comparable
+        rec["status"] = "info_quick_mismatch"
+        return rec
+    band = min(ref.rel_band * band_scale, 0.95 if ref.direction == "higher"
+               else 100.0)
+    rec["band_scaled"] = band
+    if ref.direction == "lower":
+        rec["allowed"] = ref.value * (1.0 + band)
+        if value > rec["allowed"]:
+            rec["status"] = "regression"
+        elif value < ref.value * (1.0 - band):
+            rec["status"] = "improvement"
+        else:
+            rec["status"] = "ok"
+    else:  # higher
+        rec["allowed"] = ref.value * (1.0 - band)
+        if value < rec["allowed"]:
+            rec["status"] = "regression"
+        elif value > ref.value * (1.0 + band):
+            rec["status"] = "improvement"
+        else:
+            rec["status"] = "ok"
+    if rec["status"] == "regression":
+        denom = max(abs(ref.value), 1e-12)
+        rec["rel_change"] = (value - ref.value) / denom
+    return rec
+
+
+def diff_rows(suite: str, rows, refs: dict, band_scale: float = 1.0,
+              fresh_quick: bool = False,
+              quick_invariant: bool = False) -> dict:
+    """Diff one suite's fresh ``(benchmark, metric, value)`` rows.
+
+    ``refs``: ``{(benchmark, metric): PerfReference}`` for this suite.
+    Returns the per-suite report block: regressions (with cost cells),
+    improvements, per-status counts, unreferenced fresh rows and stale
+    references (baseline rows the fresh run no longer produced).
+    ``quick_invariant`` suites gate relative bands even across a
+    quick-flag mismatch (their workload sizes don't change).
+    """
+    regressions, improvements, unreferenced = [], [], []
+    counts = {"ok": 0, "info": 0, "info_quick_mismatch": 0}
+    seen = set()
+    for (bench, metric, value) in rows:
+        ref = refs.get((bench, metric))
+        if ref is None:
+            unreferenced.append(f"{bench}.{metric}")
+            continue
+        seen.add((bench, metric))
+        mismatch = (not quick_invariant) and (fresh_quick != ref.quick)
+        rec = evaluate_row(ref, float(value), band_scale,
+                           quick_mismatch=mismatch)
+        status = rec["status"]
+        if status == "regression":
+            rec["cost_cell"] = cost_cells.attribute(suite, bench, metric)
+            regressions.append(rec)
+        elif status == "improvement":
+            improvements.append(rec)
+        else:
+            counts[status] = counts.get(status, 0) + 1
+    stale = sorted(f"{b}.{m}" for (b, m) in set(refs) - seen)
+    return {
+        "suite": suite,
+        "gated_ok": counts.get("ok", 0),
+        "info": counts.get("info", 0) + counts.get("info_quick_mismatch", 0),
+        "quick_mismatched": counts.get("info_quick_mismatch", 0),
+        "regressions": regressions,
+        "improvements": improvements,
+        "unreferenced": unreferenced,
+        "stale_refs": stale,
+    }
+
+
+# ---------------------------------------------------------------- execution
+
+def _suite_registry():
+    """The benchmark suite registry (imported lazily: ``benchmarks`` lives
+    at the repo root, not inside the ``repro`` package)."""
+    from benchmarks import run as brun
+    return brun
+
+
+def run_suite(key: str, quick: bool) -> dict:
+    """Execute one registered suite in-memory; never writes BENCH JSONs."""
+    from benchmarks.common import Report
+
+    brun = _suite_registry()
+    suite = brun.SUITES[key]
+    report = Report(quick=quick)
+    t0 = time.time()
+    ok, error = True, None
+    try:
+        mod = __import__(suite.module, fromlist=["run"])
+        brun._call_suite(mod, report, quick)
+    except Exception:
+        ok = False
+        error = traceback.format_exc(limit=20)
+        traceback.print_exc()
+    return {"rows": report.rows, "wall_s": time.time() - t0,
+            "ok": ok, "error": error}
+
+
+def check(only: list[str] | None = None, quick: bool = False,
+          band_scale: float = 1.0, results_dir: str = "results",
+          out: str | None = None, runner=run_suite) -> dict:
+    """Run the gate; returns the full report dict (``report["ok"]`` is the
+    pass/fail verdict, mirrored in the CLI exit code).
+
+    ``runner(key, quick) -> {"rows", "wall_s", "ok", "error"}`` is
+    injectable so tests can gate synthetic rows without timing anything.
+    """
+    from benchmarks.common import git_rev
+
+    brun = _suite_registry()
+    keys = list(only) if only else list(brun.SUITES)
+    unknown = [k for k in keys if k not in brun.SUITES]
+    if unknown:
+        raise SystemExit(
+            f"unknown suites {unknown}; known: {list(brun.SUITES)}")
+    store = load_reference_store(
+        results_dir, {k: brun.SUITES[k].references for k in keys})
+
+    suites_out, failed, total_regressions = {}, [], 0
+    for k in keys:
+        print(f"[perfgate] {k}: {brun.SUITES[k].description}", flush=True)
+        res = runner(k, quick)
+        block = diff_rows(
+            k, res["rows"], store.get(k, {}), band_scale=band_scale,
+            fresh_quick=quick,
+            quick_invariant=getattr(brun.SUITES[k], "quick_invariant",
+                                    False))
+        block.update(wall_s=round(res["wall_s"], 4), suite_ok=res["ok"],
+                     error=res["error"], n_rows=len(res["rows"]),
+                     n_refs=len(store.get(k, {})))
+        if not res["ok"]:
+            failed.append(k)
+        total_regressions += len(block["regressions"])
+        suites_out[k] = block
+        _print_suite(block)
+
+    report = {
+        "schema": 1,
+        "generated_by": "python -m repro.perfgate check",
+        "git_rev": git_rev(),
+        "quick": quick,
+        "band_scale": band_scale,
+        "suites": suites_out,
+        "failed_suites": failed,
+        "total_regressions": total_regressions,
+        "ok": not failed and total_regressions == 0,
+    }
+    out = out or os.path.join(results_dir, GATE_REPORT)
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"[perfgate] wrote {out}")
+    _print_verdict(report)
+    return report
+
+
+# ---------------------------------------------------------------- reporting
+
+def _print_suite(block: dict) -> None:
+    s = block["suite"]
+    print(f"[perfgate] {s}: {block['gated_ok']} gated ok, "
+          f"{len(block['regressions'])} regressed, "
+          f"{len(block['improvements'])} improved, "
+          f"{block['info']} info, "
+          f"{len(block['unreferenced'])} unreferenced, "
+          f"{len(block['stale_refs'])} stale refs", flush=True)
+    for r in block["regressions"]:
+        cell = r.get("cost_cell", {})
+        change = r.get("rel_change")
+        moved = (f"{change:+.0%}" if change is not None
+                 else f"{r['value']:.4g} > {r.get('allowed', 0):.4g}")
+        print(f"  REGRESSION {r['benchmark']}.{r['metric']}: "
+              f"{r['value']:.4g} vs ref {r['ref']:.4g} ({moved}, "
+              f"{r['direction']}, band {r['band']:.2f}"
+              f"×{r['band_scale']:g})\n"
+              f"    cost cell: {cell.get('cell', '?')} "
+              f"[{cell.get('bound', '?')}-bound]", flush=True)
+
+
+def _print_verdict(report: dict) -> None:
+    if report["ok"]:
+        print("[perfgate] PASS: no regressions past their bands")
+        return
+    n = report["total_regressions"]
+    print(f"[perfgate] FAIL: {n} regression(s)"
+          + (f", failed suites: {report['failed_suites']}"
+             if report["failed_suites"] else ""))

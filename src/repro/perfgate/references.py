@@ -1,0 +1,193 @@
+"""PerfGate reference store: committed BENCH_*.json baselines → references.
+
+Every benchmark suite leaves a ``results/BENCH_<suite>.json`` behind
+(``benchmarks/common.py::write_suite_json``): rows, wall time, the
+``git_rev`` it measured, and per-metric ``deltas`` against the run before
+it.  This module turns those files into *perf references* — ReFrame-style
+``(value, direction, tolerance band)`` records the gate can diff a fresh
+run against.
+
+Band semantics
+--------------
+Each reference carries a direction and a band:
+
+* ``lower``     — lower is better (seconds, latency, bytes).  Regression
+  when ``fresh > ref · (1 + band)``.
+* ``higher``    — higher is better (throughput, speedup, recall, skip
+  rate).  Regression when ``fresh < ref · (1 − band)``.
+* ``abs_upper`` — correctness counters and parity diffs (``failed``,
+  ``*_mismatches``, ``*_max_abs_diff``).  Regression when
+  ``fresh > max(ref · 2, abs_tol)``; never loosened by ``--band-scale``.
+* ``info``      — recorded, never gated (row counts, configuration
+  echoes, quantities with no monotone "better").
+
+Bands resolve in three layers: a suite's explicit :class:`RefSpec`
+declarations (``benchmarks/run.py``) win, then a metric-name classifier
+supplies defaults, and finally the observed run-to-run jitter recorded in
+the baseline's ``deltas`` block widens the band to
+``max(band, JITTER_MULT · |delta| / |prev|)`` — a metric that historically
+moved 30% between identical-code runs must not gate at 10%.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+import os
+
+# default relative bands per direction (CPU timing jitter is large; the
+# gate's --band-scale multiplies these further for cold CI machines)
+DEFAULT_REL_BAND = {"lower": 0.75, "higher": 0.40}
+# multiplier on the observed run-to-run jitter folded into the band
+JITTER_MULT = 3.0
+# a band can never grow past this (a 6x-jittery metric is effectively info)
+MAX_REL_BAND = 5.0
+# floor for abs_upper tolerances on float parity diffs (exact-zero refs)
+ABS_DIFF_FLOOR = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class RefSpec:
+    """One suite-declared reference policy.
+
+    ``pattern`` is an ``fnmatch`` glob over ``"<benchmark>.<metric>"``;
+    the first matching spec in a suite's declaration list wins over the
+    metric-name classifier defaults.
+    """
+
+    pattern: str
+    direction: str  # "lower" | "higher" | "abs_upper" | "info"
+    rel_band: float | None = None
+    abs_tol: float | None = None
+    note: str = ""
+
+    def __post_init__(self):
+        if self.direction not in ("lower", "higher", "abs_upper", "info"):
+            raise ValueError(f"unknown direction {self.direction!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfReference:
+    """One gated metric: baseline value + resolved band."""
+
+    suite: str
+    benchmark: str
+    metric: str
+    value: float
+    direction: str
+    rel_band: float
+    abs_tol: float
+    jitter: float       # observed |delta|/|prev| from the baseline run
+    quick: bool         # workload size the baseline was measured at
+    source: str         # "spec:<pattern>" or "default"
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.benchmark, self.metric)
+
+
+# ---------------------------------------------------------------- classifier
+
+_ABS_TOKENS = ("max_abs_diff", "max_rel_diff", "rel_diff", "_diff",
+               "failed", "mismatch", "false_positives")
+_HIGHER_TOKENS = ("per_s", "speedup", "recall", "skip_rate", "purity",
+                  "accuracy", "converged_frac", "reduction_pct")
+_INFO_TOKENS = ("checked", "graphs", "queries", "steps", "corpus",
+                "indexed", "candidates", "rounds", "rungs", "rung_",
+                "buckets", "batches", "bursts", "hits", "misses",
+                "updates", "recompute", "mean_", "_mean", "band_")
+
+
+def classify_metric(benchmark: str, metric: str) -> RefSpec:
+    """Default (direction, band) policy from the metric name alone."""
+    name = f"{benchmark}.{metric}".lower()
+    if any(t in name for t in _ABS_TOKENS):
+        return RefSpec("*", "abs_upper", abs_tol=ABS_DIFF_FLOOR,
+                       note="classifier: parity/correctness counter")
+    if any(t in name for t in _HIGHER_TOKENS):
+        return RefSpec("*", "higher", rel_band=DEFAULT_REL_BAND["higher"],
+                       note="classifier: throughput/quality metric")
+    if metric.endswith(("_s", "_ms")) or "latency" in name or "bytes" in name:
+        return RefSpec("*", "lower", rel_band=DEFAULT_REL_BAND["lower"],
+                       note="classifier: time/size metric")
+    if any(t in name for t in _INFO_TOKENS):
+        return RefSpec("*", "info", note="classifier: count/config echo")
+    return RefSpec("*", "info", note="classifier: unrecognized metric name")
+
+
+def resolve_spec(specs: tuple[RefSpec, ...], benchmark: str,
+                 metric: str) -> tuple[RefSpec, str]:
+    """First matching suite spec, else the classifier default."""
+    name = f"{benchmark}.{metric}"
+    for spec in specs:
+        if fnmatch.fnmatchcase(name, spec.pattern):
+            return spec, f"spec:{spec.pattern}"
+    return classify_metric(benchmark, metric), "default"
+
+
+# ---------------------------------------------------------------- the store
+
+def _baseline_jitter(payload: dict) -> dict[tuple[str, str], float]:
+    """Observed run-to-run relative movement per metric, from ``deltas``."""
+    out: dict[tuple[str, str], float] = {}
+    for d in payload.get("deltas", ()):
+        prev = d.get("prev")
+        if prev is None:
+            continue
+        denom = max(abs(float(prev)), 1e-12)
+        out[(d.get("benchmark"), d.get("metric"))] = (
+            abs(float(d.get("delta", 0.0))) / denom)
+    return out
+
+
+def load_suite_references(
+    suite: str,
+    path: str,
+    specs: tuple[RefSpec, ...] = (),
+) -> list[PerfReference]:
+    """Parse one committed ``BENCH_<suite>.json`` into references.
+
+    Missing or unparseable files yield an empty list (a suite without a
+    committed baseline has nothing to gate — the gate reports it as
+    unreferenced rather than failing).
+    """
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError):
+        return []
+    jitter = _baseline_jitter(payload)
+    quick = bool(payload.get("quick", False))
+    refs = []
+    for row in payload.get("rows", ()):
+        bench, metric = row.get("benchmark"), row.get("metric")
+        if bench is None or metric is None or row.get("value") is None:
+            continue
+        spec, source = resolve_spec(specs, bench, metric)
+        jit = jitter.get((bench, metric), 0.0)
+        band = spec.rel_band
+        if band is None:
+            band = DEFAULT_REL_BAND.get(spec.direction, 0.0)
+        band = min(max(band, JITTER_MULT * jit), MAX_REL_BAND)
+        refs.append(PerfReference(
+            suite=suite, benchmark=bench, metric=metric,
+            value=float(row["value"]), direction=spec.direction,
+            rel_band=band,
+            abs_tol=(spec.abs_tol if spec.abs_tol is not None
+                     else ABS_DIFF_FLOOR),
+            jitter=jit, quick=quick, source=source,
+        ))
+    return refs
+
+
+def load_reference_store(
+    results_dir: str,
+    suites: dict[str, tuple[RefSpec, ...]],
+) -> dict[str, dict[tuple[str, str], PerfReference]]:
+    """{suite: {(benchmark, metric): PerfReference}} for the given suites."""
+    store = {}
+    for suite, specs in suites.items():
+        path = os.path.join(results_dir, f"BENCH_{suite}.json")
+        refs = load_suite_references(suite, path, specs)
+        store[suite] = {r.key: r for r in refs}
+    return store

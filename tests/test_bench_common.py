@@ -1,0 +1,107 @@
+"""Unit tests for ``benchmarks/common.py::write_suite_json`` (ISSUE 6 sat b).
+
+The BENCH_*.json files are both the CI-asserted contract (the tier-1 job
+greps specific fields) and PerfGate's reference store — so the schema,
+the previous-run delta computation, and the ``git_rev`` dirty stamping
+get locked down here.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+
+import pytest
+
+from benchmarks.common import Report, git_rev, write_suite_json
+
+
+def _load(out_dir, suite):
+    with open(f"{out_dir}/BENCH_{suite}.json") as f:
+        return json.load(f)
+
+
+def test_first_write_schema(tmp_path):
+    rows = [("b1", "t_s", 1.25), ("b1", "failed", 0.0)]
+    path = write_suite_json(str(tmp_path), "x", "desc", rows,
+                            wall_s=3.14159, quick=True, ok=True)
+    payload = json.loads(open(path).read())
+    # the fields CI and the PerfGate reference store key off
+    assert payload["suite"] == "x"
+    assert payload["description"] == "desc"
+    assert payload["quick"] is True and payload["ok"] is True
+    assert payload["wall_s"] == pytest.approx(3.1416)
+    assert "git_rev" in payload  # may be None outside a checkout
+    assert payload["rows"] == [
+        {"benchmark": "b1", "metric": "t_s", "value": 1.25},
+        {"benchmark": "b1", "metric": "failed", "value": 0.0},
+    ]
+    assert set(payload["meta"]) >= {"jax", "backend", "python"}
+    # no previous run -> no previous/deltas blocks
+    assert "previous" not in payload and "deltas" not in payload
+
+
+def test_second_write_folds_previous_and_deltas(tmp_path):
+    out = str(tmp_path)
+    write_suite_json(out, "x", "d", [("b", "t_s", 2.0), ("b", "n", 5.0)],
+                     wall_s=1.0, quick=False, ok=True)
+    write_suite_json(out, "x", "d",
+                     [("b", "t_s", 3.0), ("b", "fresh_metric", 1.0)],
+                     wall_s=2.0, quick=True, ok=False)
+    payload = _load(out, "x")
+    assert payload["previous"] == {"git_rev": git_rev(), "quick": False,
+                                   "ok": True, "wall_s": 1.0}
+    # deltas only for metrics present in both runs
+    assert payload["deltas"] == [
+        {"benchmark": "b", "metric": "t_s", "value": 3.0, "prev": 2.0,
+         "delta": 1.0}]
+    assert payload["quick"] is True and payload["ok"] is False
+
+
+def test_corrupt_previous_file_tolerated(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    path.write_text("{definitely not json")
+    write_suite_json(str(tmp_path), "x", "d", [("b", "t_s", 1.0)],
+                     wall_s=0.1, quick=False)
+    payload = _load(str(tmp_path), "x")
+    assert payload["rows"] and "previous" not in payload
+
+
+def _git(cwd, *args):
+    subprocess.run(["git", "-c", "user.email=t@t", "-c", "user.name=t",
+                    *args], cwd=cwd, check=True, capture_output=True)
+
+
+def test_git_rev_dirty_stamping_excludes_results(tmp_path):
+    repo = tmp_path / "scratch"
+    repo.mkdir()
+    (repo / "code.py").write_text("x = 1\n")
+    (repo / "results").mkdir()
+    (repo / "results" / "BENCH_x.json").write_text("{}\n")
+    _git(repo, "init", "-q")
+    _git(repo, "add", "-A")
+    _git(repo, "commit", "-qm", "seed")
+
+    clean = git_rev(cwd=str(repo))
+    assert clean and "-dirty" not in clean
+
+    # a bench run rewriting results/ must NOT mark the code as dirty
+    (repo / "results" / "BENCH_x.json").write_text('{"rows": []}\n')
+    assert git_rev(cwd=str(repo)) == clean
+
+    # ... but touching actual code must
+    (repo / "code.py").write_text("x = 2\n")
+    assert git_rev(cwd=str(repo)) == f"{clean}-dirty"
+
+
+def test_git_rev_outside_checkout_is_none(tmp_path):
+    assert git_rev(cwd=str(tmp_path)) is None
+
+
+def test_report_rows_and_csv(capsys):
+    r = Report(quick=True)
+    r.add("b", "m", 1.5)
+    r.add("b", "n", 2)
+    assert r.rows == [("b", "m", 1.5), ("b", "n", 2.0)]
+    assert r.csv().splitlines() == ["benchmark,metric,value",
+                                    "b,m,1.5", "b,n,2"]
+    assert r.quick is True

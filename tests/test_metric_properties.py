@@ -1,0 +1,124 @@
+"""Property tests for the MetricEngine registry contracts (ISSUE 6 sat a).
+
+Hypothesis-driven metric-space properties over random Diagrams tensors —
+``compare(d, d) == 0``, symmetry, and exact-flagged backends agreeing with
+the host Hungarian oracle — plus plain contract tests that always run.
+Rides the conftest ``hypothesis_or_stub`` shim: without hypothesis the
+property tests skip cleanly and the plain tests still collect.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from tests.conftest import hypothesis_or_stub
+
+from repro.metrics import engine
+from repro.metrics.engine import (
+    METRIC_REGISTRY,
+    MetricBackend,
+    compare,
+    get_metric,
+    metric_params,
+    register_metric,
+)
+from repro.metrics.reference import wasserstein_exact
+from repro.metrics.testing import diagram_points, random_diagram
+
+given, settings, st = hypothesis_or_stub()
+
+CAP = 64.0
+# keep diagrams within every backend's default working width (n_points=16)
+# so "exact up to top-n_points compaction" means exact, full stop
+MAX_PTS = 8
+SLOTS = 12
+
+# slack per backend for the self-distance / symmetry properties: sw and
+# exact_w are deterministic reductions (f32 roundoff only); sinkhorn is
+# debiased (self-distance exactly 0 by construction) but symmetric only up
+# to its convergence tolerance; bottleneck bisection resolves ~1e-7·cap
+_SELF_ATOL = {"sw": 1e-4, "sinkhorn": 1e-3, "exact_w": 1e-4,
+              "bottleneck_approx": 1e-3}
+_SYM_ATOL = dict(_SELF_ATOL, sinkhorn=5e-3)
+
+
+def _diagram(seed: int, n=None):
+    return random_diagram(np.random.default_rng(seed), s=SLOTS, n=n)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_self_distance_is_zero(seed):
+    d = _diagram(seed)
+    for name in sorted(METRIC_REGISTRY):
+        v = float(compare(d, d, metric=name, cap=CAP))
+        assert abs(v) <= _SELF_ATOL.get(name, 1e-3), name
+
+
+@given(s1=st.integers(0, 2**31 - 1), s2=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_symmetry(s1, s2):
+    d1, d2 = _diagram(s1), _diagram(s2)
+    for name in sorted(METRIC_REGISTRY):
+        a = float(compare(d1, d2, metric=name, cap=CAP))
+        b = float(compare(d2, d1, metric=name, cap=CAP))
+        tol = _SYM_ATOL.get(name, 1e-3)
+        assert a == pytest.approx(b, abs=tol, rel=1e-3), name
+
+
+@given(s1=st.integers(0, 2**31 - 1), s2=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_exact_backends_match_host_oracle(s1, s2):
+    """Every ``exact=True`` backend must reproduce the Hungarian oracle
+    on diagrams small enough that its compaction is lossless."""
+    rng = np.random.default_rng(s1 ^ (s2 << 1))
+    d1 = _diagram(s1, n=int(rng.integers(0, MAX_PTS + 1)))
+    d2 = _diagram(s2, n=int(rng.integers(0, MAX_PTS + 1)))
+    p1, p2 = diagram_points(d1, cap=CAP), diagram_points(d2, cap=CAP)
+    want = wasserstein_exact(p1, p2, q=2.0, ground="l2")
+    for name, be in sorted(METRIC_REGISTRY.items()):
+        if not be.exact:
+            continue
+        got = float(compare(d1, d2, metric=name, cap=CAP, q=2.0))
+        assert got == pytest.approx(want, abs=1e-3, rel=1e-3), name
+
+
+# ------------------------------------------------------- plain contract tests
+
+def test_every_backend_declares_its_contract():
+    for name, be in METRIC_REGISTRY.items():
+        assert be.name == name
+        assert be.error_bound.strip(), name
+        assert be.cost_class.strip(), name
+        assert be.params, name
+        assert metric_params(name) == be.params
+
+
+def test_unknown_backend_and_param_rejected():
+    with pytest.raises(ValueError, match="unknown metric backend"):
+        get_metric("nope")
+    with pytest.raises(ValueError, match="does not accept"):
+        d = _diagram(0)
+        compare(d, d, metric="sw", definitely_not_a_param=3)
+
+
+def test_duplicate_registration_rejected():
+    be = METRIC_REGISTRY["sw"]
+    with pytest.raises(ValueError, match="already registered"):
+        register_metric(be)
+    # overwrite=True is the sanctioned escape hatch; restore the original
+    register_metric(dataclasses.replace(be, description="tmp"),
+                    overwrite=True)
+    register_metric(be, overwrite=True)
+    assert METRIC_REGISTRY["sw"] is be
+
+
+def test_defaults_validated_against_params():
+    bad = MetricBackend(
+        name="_tmp_bad", fn=engine.sliced_wasserstein, exact=False,
+        error_bound="x", cost_class="x", defaults={"no_such_param": 1})
+    with pytest.raises(ValueError, match="not accepted by backend"):
+        register_metric(bad)
+    assert "_tmp_bad" not in METRIC_REGISTRY

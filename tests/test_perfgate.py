@@ -1,0 +1,394 @@
+"""PerfGate unit + integration tests (ISSUE 6 tentpole).
+
+Covers the reference store (classifier defaults, suite RefSpec overrides,
+jitter band widening), the gate's row diffing (directions, quick-flag
+semantics, abs_upper never loosening), an end-to-end ``check`` with an
+injected regression (deterministic — synthetic rows through the
+injectable runner, no timing), cost-cell attribution, and the tile
+autotuner (fake-kernel argmin, TUNED_tiles.json round-trip, fallback on
+absent/foreign-device files).  A real timed sweep lives behind the
+``bench`` marker (perf-gate CI job).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+from repro.kernels import tuning
+from repro.perfgate import autotune, cost_cells, gate
+from repro.perfgate.references import (
+    DEFAULT_REL_BAND,
+    JITTER_MULT,
+    MAX_REL_BAND,
+    PerfReference,
+    RefSpec,
+    classify_metric,
+    load_suite_references,
+    resolve_spec,
+)
+
+
+def _ref(metric="t_s", value=1.0, direction="lower", band=0.5,
+         quick=False, **kw):
+    return PerfReference(
+        suite="s", benchmark="b", metric=metric, value=value,
+        direction=direction, rel_band=band, abs_tol=1e-6, jitter=0.0,
+        quick=quick, source="test", **kw)
+
+
+# ------------------------------------------------------------ reference store
+
+def test_classifier_directions():
+    assert classify_metric("kernel_x", "B32_N128_pallas_s").direction == "lower"
+    assert classify_metric("serve_n16", "latency_p99_ms").direction == "lower"
+    assert classify_metric("m", "dense_cost_bytes_per_pair").direction == "lower"
+    assert classify_metric("m", "B256_pairs_per_s").direction == "higher"
+    assert classify_metric("m", "persist_speedup").direction == "higher"
+    assert classify_metric("m", "recall_at_10").direction == "higher"
+    assert classify_metric("m", "v_reduction_pct").direction == "higher"
+    assert classify_metric("m", "G64_max_abs_diff").direction == "abs_upper"
+    assert classify_metric("m", "parity_mismatches").direction == "abs_upper"
+    assert classify_metric("m", "failed").direction == "abs_upper"
+    assert classify_metric("m", "plan_cache_hits").direction == "info"
+    assert classify_metric("m", "er_p0.12_mean_clustering").direction == "info"
+    # unrecognized names must never gate
+    assert classify_metric("m", "zorblax").direction == "info"
+
+
+def test_resolve_spec_first_match_wins():
+    specs = (RefSpec("b.skip*", "higher", rel_band=0.1),
+             RefSpec("b.*", "info"))
+    spec, src = resolve_spec(specs, "b", "skip_rate")
+    assert (spec.direction, spec.rel_band, src) == ("higher", 0.1,
+                                                    "spec:b.skip*")
+    spec, src = resolve_spec(specs, "b", "anything_else_s")
+    assert (spec.direction, src) == ("info", "spec:b.*")
+    spec, src = resolve_spec((), "b", "anything_else_s")
+    assert (spec.direction, src) == ("lower", "default")
+
+
+def test_refspec_rejects_unknown_direction():
+    with pytest.raises(ValueError, match="unknown direction"):
+        RefSpec("*", "sideways")
+
+
+def test_load_suite_references_jitter_widens_band(tmp_path):
+    path = tmp_path / "BENCH_x.json"
+    path.write_text(json.dumps({
+        "quick": True,
+        "rows": [
+            {"benchmark": "b", "metric": "steady_s", "value": 1.0},
+            {"benchmark": "b", "metric": "jittery_s", "value": 2.0},
+            {"benchmark": "b", "metric": "wild_s", "value": 3.0},
+        ],
+        "deltas": [
+            {"benchmark": "b", "metric": "steady_s", "value": 1.0,
+             "prev": 1.01, "delta": -0.01},
+            {"benchmark": "b", "metric": "jittery_s", "value": 2.0,
+             "prev": 4.0, "delta": -2.0},   # 50% run-to-run movement
+            {"benchmark": "b", "metric": "wild_s", "value": 3.0,
+             "prev": 0.3, "delta": 2.7},    # 900% movement -> capped
+        ],
+    }))
+    refs = {r.metric: r for r in load_suite_references("x", str(path))}
+    base = DEFAULT_REL_BAND["lower"]
+    assert refs["steady_s"].rel_band == pytest.approx(base)
+    assert refs["jittery_s"].rel_band == pytest.approx(
+        max(base, JITTER_MULT * 0.5))
+    assert refs["wild_s"].rel_band == MAX_REL_BAND
+    assert all(r.quick for r in refs.values())
+
+
+def test_load_suite_references_tolerates_missing_file(tmp_path):
+    assert load_suite_references("x", str(tmp_path / "nope.json")) == []
+    bad = tmp_path / "BENCH_bad.json"
+    bad.write_text("{not json")
+    assert load_suite_references("bad", str(bad)) == []
+
+
+# ------------------------------------------------------------------ row diffs
+
+def test_evaluate_lower_direction():
+    ref = _ref(value=1.0, band=0.5)
+    assert gate.evaluate_row(ref, 1.4)["status"] == "ok"
+    rec = gate.evaluate_row(ref, 1.6)
+    assert rec["status"] == "regression"
+    assert rec["rel_change"] == pytest.approx(0.6)
+    assert gate.evaluate_row(ref, 0.3)["status"] == "improvement"
+    # band_scale widens the band
+    assert gate.evaluate_row(ref, 1.6, band_scale=2.0)["status"] == "ok"
+
+
+def test_evaluate_higher_direction():
+    ref = _ref(metric="per_s", value=100.0, direction="higher", band=0.4)
+    assert gate.evaluate_row(ref, 61.0)["status"] == "ok"
+    assert gate.evaluate_row(ref, 59.0)["status"] == "regression"
+    assert gate.evaluate_row(ref, 150.0)["status"] == "improvement"
+    # a scaled "higher" band saturates at 0.95 — the allowed floor can
+    # shrink toward zero but never goes negative
+    rec = gate.evaluate_row(ref, 4.0, band_scale=10.0)
+    assert rec["status"] == "regression"
+    assert rec["allowed"] == pytest.approx(100.0 * 0.05)
+    assert gate.evaluate_row(ref, 6.0, band_scale=10.0)["status"] == "ok"
+
+
+def test_evaluate_abs_upper_never_loosens():
+    ref = _ref(metric="parity_mismatches", value=0.0, direction="abs_upper")
+    assert gate.evaluate_row(ref, 0.0)["status"] == "ok"
+    rec = gate.evaluate_row(ref, 3.0, band_scale=100.0)
+    assert rec["status"] == "regression"
+    # nonzero float baselines allow 2x drift, still band_scale-immune
+    ref2 = _ref(metric="max_abs_diff", value=1e-4, direction="abs_upper")
+    assert gate.evaluate_row(ref2, 1.9e-4)["status"] == "ok"
+    assert gate.evaluate_row(ref2, 3e-4, band_scale=100.0)[
+        "status"] == "regression"
+
+
+def test_quick_mismatch_demotes_to_info():
+    ref = _ref(value=1.0, band=0.5, quick=False)
+    rec = gate.evaluate_row(ref, 100.0, quick_mismatch=True)
+    assert rec["status"] == "info_quick_mismatch"
+    # ... but abs_upper correctness rows gate regardless of workload size
+    ref2 = _ref(metric="failed", value=0.0, direction="abs_upper")
+    assert gate.evaluate_row(ref2, 5.0, quick_mismatch=True)[
+        "status"] == "regression"
+
+
+def test_diff_rows_quick_invariant_gates_across_mismatch():
+    refs = {("b", "t_s"): _ref(value=1.0, band=0.5, quick=False)}
+    rows = [("b", "t_s", 5.0)]
+    block = gate.diff_rows("s", rows, refs, fresh_quick=True)
+    assert block["quick_mismatched"] == 1 and not block["regressions"]
+    block = gate.diff_rows("s", rows, refs, fresh_quick=True,
+                           quick_invariant=True)
+    assert [r["metric"] for r in block["regressions"]] == ["t_s"]
+    assert block["regressions"][0]["cost_cell"]["cell"]
+
+
+def test_diff_rows_unreferenced_and_stale():
+    refs = {("b", "gone_s"): _ref(metric="gone_s")}
+    block = gate.diff_rows("s", [("b", "new_s", 1.0)], refs)
+    assert block["unreferenced"] == ["b.new_s"]
+    assert block["stale_refs"] == ["b.gone_s"]
+
+
+# ----------------------------------------------------------------- cost cells
+
+def test_parse_shape_tokens():
+    assert cost_cells.parse_shape("B32_N128_pallas_s") == {"B": 32, "N": 128}
+    assert cost_cells.parse_shape("G128_D512_max_abs_diff") == {"G": 128,
+                                                                "D": 512}
+    assert cost_cells.parse_shape("latency_p50_ms") == {}
+
+
+def test_attribute_modeled_kernel():
+    cell = cost_cells.attribute("kernels", "kernel_pairwise_gram",
+                                "G128_D512_pallas_s")
+    assert cell["modeled"] and cell["bound"] in ("compute", "memory")
+    assert cell["flops"] == pytest.approx(3.0 * 128 * 128 * 512)
+    assert cell["shape"] == {"G": 128, "D": 512}
+
+
+def test_attribute_subsystem_fallback():
+    cell = cost_cells.attribute("metrics", "metrics_rerank", "recall_at_10")
+    assert not cell["modeled"] and "retrieval" in cell["cell"]
+    cell = cost_cells.attribute("serve", "serve_n16", "latency_p50_ms")
+    assert "TopoServe" in cell["cell"]
+    cell = cost_cells.attribute("z", "no_such_bench", "x")
+    assert cell["cell"] == "z/no_such_bench"
+
+
+# ----------------------------------------------------- end-to-end gate checks
+
+def test_check_clean_echo_passes(tmp_path):
+    """Echoing every reference value back verbatim must pass the gate."""
+    from benchmarks import run as brun
+
+    refs = load_suite_references(
+        "kernels", "results/BENCH_kernels.json",
+        brun.SUITES["kernels"].references)
+    assert refs, "committed kernels baseline must exist"
+
+    def echo_runner(key, quick):
+        return {"rows": [(r.benchmark, r.metric, r.value) for r in refs],
+                "wall_s": 0.0, "ok": True, "error": None}
+
+    out = str(tmp_path / "GATE_report.json")
+    report = gate.check(only=["kernels"], quick=False, out=out,
+                        runner=echo_runner)
+    assert report["ok"] and report["total_regressions"] == 0
+    on_disk = json.loads(open(out).read())
+    assert on_disk["schema"] == 1
+    assert on_disk["suites"]["kernels"]["gated_ok"] > 0
+    assert not on_disk["suites"]["kernels"]["stale_refs"]
+
+
+def test_check_injected_regression_fails_with_cost_cell(tmp_path):
+    """A 100x-detuned Gram timing must fail the gate and be attributed."""
+    from benchmarks import run as brun
+
+    refs = load_suite_references(
+        "kernels", "results/BENCH_kernels.json",
+        brun.SUITES["kernels"].references)
+
+    def detuned_runner(key, quick):
+        rows = []
+        for r in refs:
+            v = r.value
+            if (r.benchmark, r.metric) == ("kernel_pairwise_gram",
+                                           "G128_D512_pallas_s"):
+                v *= 100.0
+            rows.append((r.benchmark, r.metric, v))
+        return {"rows": rows, "wall_s": 0.0, "ok": True, "error": None}
+
+    out = str(tmp_path / "GATE_report.json")
+    report = gate.check(only=["kernels"], quick=False, out=out,
+                        runner=detuned_runner)
+    assert not report["ok"] and report["total_regressions"] == 1
+    reg = json.loads(open(out).read())[
+        "suites"]["kernels"]["regressions"][0]
+    assert reg["metric"] == "G128_D512_pallas_s"
+    assert reg["cost_cell"]["modeled"]
+    assert "pairwise_gram" in reg["cost_cell"]["cell"]
+
+
+def test_check_crashed_suite_fails(tmp_path):
+    def crash_runner(key, quick):
+        return {"rows": [], "wall_s": 0.0, "ok": False, "error": "boom"}
+
+    report = gate.check(only=["kernels"], quick=False,
+                        out=str(tmp_path / "g.json"), runner=crash_runner)
+    assert not report["ok"] and report["failed_suites"] == ["kernels"]
+
+
+def test_check_unknown_suite_rejected(tmp_path):
+    with pytest.raises(SystemExit, match="unknown suites"):
+        gate.check(only=["nope"], out=str(tmp_path / "g.json"))
+
+
+# ------------------------------------------------------------------ autotuner
+
+def _fake_tunable():
+    # deterministic "timing": config (tile_m=16, tile_n=256) is the argmin
+    def fake_time(workload, config, repeats):
+        return (abs(config["tile_m"] - 16) + abs(config["tile_n"] - 256)
+                + 1.0) * 1e-3
+
+    return autotune.KernelTunable(
+        name="pairwise_gram",
+        space={"tile_m": (8, 16, 32), "tile_n": (128, 256)},
+        make_workload=lambda quick: None,
+        time_config=fake_time,
+        workload_desc=lambda quick: "fake")
+
+
+def test_sweep_picks_argmin():
+    win = autotune.sweep(_fake_tunable(), quick=True, repeats=1)
+    assert win["tiles"] == {"tile_m": 16, "tile_n": 256}
+    assert win["candidates"] == 6
+    assert len(win["sweep"]) == 6
+    assert win["seconds"] == pytest.approx(1e-3)
+
+
+def test_register_tunable_rejects_undeclared_params():
+    with pytest.raises(ValueError, match="DEFAULT_TILES does not declare"):
+        autotune.register_tunable(autotune.KernelTunable(
+            name="pairwise_gram", space={"tile_q": (1, 2)},
+            make_workload=lambda q: None,
+            time_config=lambda w, c, r: 0.0,
+            workload_desc=lambda q: ""), overwrite=True)
+
+
+def test_tuned_tiles_round_trip(tmp_path, monkeypatch):
+    path = str(tmp_path / "TUNED_tiles.json")
+    monkeypatch.setitem(autotune.TUNABLES, "pairwise_gram",
+                        _fake_tunable())
+    report = autotune.tune(only=["pairwise_gram"], quick=True, repeats=1,
+                           path=path)
+    assert report["path"] == path
+    payload = json.loads(open(path).read())
+    assert payload["version"] == tuning.TILES_SCHEMA
+    assert payload["device"] == tuning.device_string()
+    assert payload["kernels"]["pairwise_gram"]["tiles"] == {
+        "tile_m": 16, "tile_n": 256}
+
+    # the ops layer resolves the pinned winner for this device ...
+    monkeypatch.setenv(tuning.TILES_ENV, path)
+    tuning.reload_tuned()
+    t = tuning.resolve_tiles("pairwise_gram")
+    assert (t["tile_m"], t["tile_n"]) == (16, 256)
+    assert t["tile_d"] == tuning.DEFAULT_TILES["pairwise_gram"]["tile_d"]
+    # ... explicit kwargs still win over pinned values
+    assert tuning.resolve_tiles("pairwise_gram", tile_m=8)["tile_m"] == 8
+    tuning.reload_tuned()
+
+
+def test_tuned_tiles_foreign_device_ignored(tmp_path, monkeypatch):
+    path = str(tmp_path / "TUNED_tiles.json")
+    with open(path, "w") as f:
+        json.dump({"version": tuning.TILES_SCHEMA,
+                   "device": "tpu:TPU v5e",
+                   "kernels": {"pairwise_gram":
+                               {"tiles": {"tile_m": 32}}}}, f)
+    monkeypatch.setenv(tuning.TILES_ENV, path)
+    tuning.reload_tuned()
+    assert tuning.tuned_tiles("pairwise_gram") == {}
+    assert (tuning.resolve_tiles("pairwise_gram")
+            == tuning.DEFAULT_TILES["pairwise_gram"])
+    tuning.reload_tuned()
+
+
+def test_tuned_tiles_absent_or_stale_schema(tmp_path, monkeypatch):
+    monkeypatch.setenv(tuning.TILES_ENV, str(tmp_path / "absent.json"))
+    tuning.reload_tuned()
+    assert tuning.tuned_tiles("pairwise_gram") == {}
+    stale = tmp_path / "stale.json"
+    stale.write_text(json.dumps({"version": 0,
+                                 "device": tuning.device_string(),
+                                 "kernels": {}}))
+    monkeypatch.setenv(tuning.TILES_ENV, str(stale))
+    tuning.reload_tuned()
+    assert tuning.load_tuned() is None
+    tuning.reload_tuned()
+
+
+def test_tuned_tiles_unknown_keys_dropped(tmp_path, monkeypatch):
+    path = str(tmp_path / "TUNED_tiles.json")
+    with open(path, "w") as f:
+        json.dump({"version": tuning.TILES_SCHEMA,
+                   "device": tuning.device_string(),
+                   "kernels": {"pairwise_gram":
+                               {"tiles": {"tile_m": 32,
+                                          "evil_kwarg": 7}}}}, f)
+    monkeypatch.setenv(tuning.TILES_ENV, path)
+    tuning.reload_tuned()
+    assert tuning.tuned_tiles("pairwise_gram") == {"tile_m": 32}
+    tuning.reload_tuned()
+
+
+def test_cli_check_exit_codes(tmp_path, monkeypatch):
+    from repro.perfgate import __main__ as cli
+
+    calls = {}
+
+    def fake_check(**kw):
+        calls.update(kw)
+        return {"ok": kw["only"] == ["good"]}
+
+    monkeypatch.setattr("repro.perfgate.gate.check", fake_check)
+    assert cli.main(["check", "--only", "good", "--quick"]) == 0
+    assert calls["quick"] is True
+    assert cli.main(["check", "--only", "bad"]) == 1
+
+
+@pytest.mark.bench
+def test_real_gram_sweep_times_all_candidates():
+    """Actually time the Pallas Gram kernel over its tile space (CI
+    perf-gate job; minutes on CPU interpret mode)."""
+    win = autotune.sweep(autotune.TUNABLES["pairwise_gram"], quick=True,
+                         repeats=1)
+    assert win["tiles"].keys() == {"tile_m", "tile_n", "tile_d"}
+    assert win["seconds"] > 0
+    assert win["candidates"] == 12

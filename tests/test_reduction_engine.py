@@ -197,6 +197,7 @@ def test_default_ladder_and_selection():
                        ne=np.array([10]), nt=np.array([0]))
 
 
+@pytest.mark.slow
 def test_two_phase_parity_methods_x_orientations():
     g = _batch(with_f=True)
     for method, dims in [("none", (0, 1)), ("prunit", (0, 1)),
