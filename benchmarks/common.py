@@ -78,6 +78,45 @@ def git_rev(cwd: str | None = None) -> str | None:
         return None
 
 
+def telemetry_snapshot() -> dict:
+    """Current TopoScope/plan-cache counter values a suite run will mutate.
+
+    Paired with :func:`telemetry_delta`: snapshot before a suite, diff
+    after, and the flat delta dict becomes the ``telemetry`` block of that
+    suite's ``BENCH_<suite>.json`` plus one ``telemetry.<metric>`` row per
+    counter — so PerfGate baselines capture call-count regressions (e.g. a
+    silently doubled Gram invocation) alongside the timings.
+    """
+    from repro import obs
+    from repro.core.api import plan_cache_info
+
+    kernels = obs.counter("kernels.calls").labeled("kernel")
+    metric_calls = obs.counter("metrics.calls").labeled("backend")
+    return {"plan_cache": plan_cache_info(),
+            "kernel_calls": kernels, "metric_calls": metric_calls}
+
+
+def telemetry_delta(before: dict) -> dict:
+    """Flat ``{metric: count}`` of registry movement since ``before``.
+
+    Kernel/metric counters only appear once non-zero (a suite that never
+    touches the auction kernel gets no ``kernel_calls_auction_lap`` row);
+    the plan-cache triple is always present.
+    """
+    after = telemetry_snapshot()
+    out = {}
+    for k in ("hits", "misses", "evictions"):
+        out[f"plan_cache_{k}"] = (after["plan_cache"][k]
+                                  - before["plan_cache"].get(k, 0))
+    for group, prefix in (("kernel_calls", "kernel_calls"),
+                          ("metric_calls", "metric_calls")):
+        for name, v in after[group].items():
+            d = v - before[group].get(name, 0.0)
+            if d:
+                out[f"{prefix}_{name}"] = int(d)
+    return out
+
+
 def _previous_run(path: str) -> dict | None:
     """Load the JSON a previous run left at ``path`` (None if absent/bad)."""
     try:
@@ -89,7 +128,8 @@ def _previous_run(path: str) -> dict | None:
 
 def write_suite_json(out_dir: str, suite: str, description: str,
                      rows: list[tuple[str, str, float]], wall_s: float,
-                     quick: bool, ok: bool = True) -> str:
+                     quick: bool, ok: bool = True,
+                     telemetry: dict | None = None) -> str:
     """Persist one suite's results as ``BENCH_<suite>.json``.
 
     The machine-readable companion of results/bench.csv: rows plus wall time
@@ -98,7 +138,9 @@ def write_suite_json(out_dir: str, suite: str, description: str,
     identity and per-metric deltas are folded into ``previous``/``deltas``
     before overwriting, so the perf trajectory is reconstructible from the
     repo alone (every committed JSON names the revision it measured and how
-    much each metric moved since the run before it).
+    much each metric moved since the run before it).  ``telemetry`` (the
+    :func:`telemetry_delta` of the run) is stored verbatim as a structured
+    block.
     """
     path = os.path.join(out_dir, f"BENCH_{suite}.json")
     prev = _previous_run(path)
@@ -118,6 +160,8 @@ def write_suite_json(out_dir: str, suite: str, description: str,
             "python": platform.python_version(),
         },
     }
+    if telemetry is not None:
+        payload["telemetry"] = telemetry
     if prev is not None:
         payload["previous"] = {
             "git_rev": prev.get("git_rev"),

@@ -27,7 +27,12 @@ import os
 import time
 import traceback
 
-from benchmarks.common import Report, write_suite_json
+from benchmarks.common import (
+    Report,
+    telemetry_delta,
+    telemetry_snapshot,
+    write_suite_json,
+)
 from repro.perfgate.references import RefSpec
 
 
@@ -149,6 +154,7 @@ def main() -> None:
         print(f"[bench] {k}: {suite.description}", flush=True)
         row_start = len(report.rows)
         t0 = time.time()
+        tele0 = telemetry_snapshot()
         ok = True
         try:
             mod = __import__(suite.module, fromlist=["run"])
@@ -158,9 +164,16 @@ def main() -> None:
             failures.append(k)
             ok = False
             traceback.print_exc()
+        # TopoScope telemetry block: registry movement attributable to this
+        # suite (plan-cache traffic, kernel/metric call counts) — stamped as
+        # rows too, so PerfGate baselines track call-count regressions
+        telemetry = telemetry_delta(tele0)
+        for metric, value in sorted(telemetry.items()):
+            report.add("telemetry", metric, value)
         write_suite_json(out_dir, k, suite.description,
                          report.rows[row_start:],
-                         wall_s=time.time() - t0, quick=args.quick, ok=ok)
+                         wall_s=time.time() - t0, quick=args.quick, ok=ok,
+                         telemetry=telemetry)
     os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         f.write(report.csv() + "\n")

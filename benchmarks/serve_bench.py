@@ -11,11 +11,13 @@ must be a pure scheduling layer, never a numerics layer).
 from __future__ import annotations
 
 import argparse
+import gc
 import time
 
 import numpy as np
 
 from benchmarks.common import Report
+from repro import obs
 from repro.core.api import plan_cache_info, topological_signature
 from repro.core.persistence_jax import diagrams_bitwise_equal
 from repro.serve import TopoServe, TopoServeConfig
@@ -67,11 +69,23 @@ def run(report: Report, quick: bool = False) -> None:
     batches_before = server.stats["batches"]
     cache_before = plan_cache_info()
 
-    t0 = time.perf_counter()
-    futs = [server.submit(edges=e, n_vertices=n) for (e, n) in queries]
-    server.drain()
-    results = [f.result() for f in futs]
-    wall = time.perf_counter() - t0
+    # Exclude the cyclic collector from the timed region (timeit-style):
+    # when full collections land is a function of process-wide allocation
+    # counts, so merely importing another package can shift multi-ms GC
+    # pauses into the submit loop and double the per-bucket p50s.  The
+    # bench measures the serving layer, not collector scheduling.
+    gc.collect()
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        t0 = time.perf_counter()
+        futs = [server.submit(edges=e, n_vertices=n) for (e, n) in queries]
+        server.drain()
+        results = [f.result() for f in futs]
+        wall = time.perf_counter() - t0
+    finally:
+        if gc_was_enabled:
+            gc.enable()
 
     report.add("serve", "graphs_per_s", len(futs) / wall)
     by_bucket: dict = {}
@@ -115,6 +129,15 @@ def run(report: Report, quick: bool = False) -> None:
             "topological_signature output")
     print(f"[serve_bench] parity OK: {len(results)} served diagrams "
           "bit-identical to direct computation")
+
+    # with REPRO_OBS=1 the timed drains above produced spans — export the
+    # Chrome trace + a Prometheus snapshot next to the bench JSONs so a CI
+    # smoke (or a human with Perfetto) can inspect the run
+    if obs.enabled():
+        trace_path = obs.export_chrome_trace("results/trace_serve_bench.json")
+        prom_path = obs.export_prometheus("results/metrics_serve_bench.prom")
+        print(f"[serve_bench] obs: wrote {trace_path} "
+              f"({len(obs.trace_events())} spans) and {prom_path}")
 
 
 def main() -> None:

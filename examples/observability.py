@@ -1,0 +1,93 @@
+"""TopoScope demo: tracing + metrics over the serving stack under load.
+
+Runs the two serving frontends with tracing enabled — a repack="on"
+TopoServe batch of synthetic ego-net queries, then a TopoStream session
+replayed through StreamServe — and shows the three TopoScope outputs:
+
+* ``results/trace_serve.json`` — Chrome-trace JSON of every span
+  (``serve.drain`` → ``serve.batch`` → ``plan.reduce/…/persist``),
+  loadable in Perfetto (https://ui.perfetto.dev);
+* ``results/metrics_serve.prom`` — Prometheus text snapshot of the
+  metrics registry (counters/gauges/histograms the ``stats`` surfaces
+  are views over);
+* the self-time report (``python -m repro.obs report``) with kernel
+  spans attributed to PerfGate's roofline cost cells.
+
+  PYTHONPATH=src python examples/observability.py
+"""
+import jax
+import networkx as nx
+import numpy as np
+
+from repro import obs
+from repro.core.delta import delta_step
+from repro.data.temporal import ego_decay_stream
+from repro.obs.report import format_report
+from repro.serve import StreamServe, TopoServe, TopoServeConfig
+from repro.stream import TopoStreamConfig
+
+TRACE_PATH = "results/trace_serve.json"
+PROM_PATH = "results/metrics_serve.prom"
+
+
+def ego_queries(n_queries: int, seed: int = 0):
+    """(edges, n_vertices) ego nets of a preferential-attachment host."""
+    host = nx.barabasi_albert_graph(300, 3, seed=seed)
+    rng = np.random.default_rng(seed)
+    for c in rng.integers(0, host.number_of_nodes(), size=n_queries):
+        ego = nx.ego_graph(host, int(c), radius=1)
+        nodes = sorted(ego.nodes())[:64]  # stay inside the bucket ladder
+        ego = host.subgraph(nodes)
+        idx = {u: i for i, u in enumerate(nodes)}
+        yield [(idx[u], idx[v]) for (u, v) in ego.edges()], len(nodes)
+
+
+def main():
+    # tracing is off by default; one call (or REPRO_OBS=1) turns it on.
+    # Metrics are always live — this only starts span recording.
+    obs.configure(enabled=True)
+
+    # ---- TopoServe: batched queries through the two-phase repack plan ---
+    server = TopoServe(TopoServeConfig(dim=1, method="prunit",
+                                       sublevel=False, repack="on"))
+    futs = [server.submit(edges=e, n_vertices=n)
+            for e, n in ego_queries(120, seed=7)]
+    server.drain()
+    for f in futs:
+        f.result()
+    print(f"TopoServe: {server.stats['served']} served in "
+          f"{server.stats['batches']} batches "
+          f"(repack rungs: {sorted(server.stats['repack_rungs'])})")
+
+    # ---- StreamServe: a dynamic-network session on top ------------------
+    key = jax.random.PRNGKey(42)
+    g0, deltas = ego_decay_stream(key, batch=8, n_pad=32, n_core=10,
+                                  n_double=6, n_pendant=6, steps=30,
+                                  toggles=1, p_core_edge=0.15)
+    streamer = StreamServe(TopoStreamConfig(dim=1, method="both",
+                                            edge_cap=192, tri_cap=512))
+    sid = streamer.create_session(g0)
+    sfuts = [streamer.submit(sid, delta_step(deltas, t)) for t in range(30)]
+    streamer.drain()
+    sfuts[-1].result()
+    print(f"StreamServe: {streamer.stats()}")
+
+    # ---- the three TopoScope outputs ------------------------------------
+    obs.export_chrome_trace(TRACE_PATH)
+    obs.export_prometheus(PROM_PATH)
+    events = obs.trace_events()
+    print(f"\nwrote {TRACE_PATH} ({len(events)} spans — load it in "
+          "https://ui.perfetto.dev)")
+    print(f"wrote {PROM_PATH} (Prometheus text exposition)\n")
+    # same table as: python -m repro.obs report results/trace_serve.json
+    print(format_report(events, top=12))
+
+    # spans also fed the obs.span_seconds histogram, so the trace and the
+    # metrics registry agree about where time went
+    series = obs.get_instrument("obs.span_seconds").snapshot_series()
+    print(f"\nobs.span_seconds: {len(series)} span-name series, "
+          f"{sum(s['count'] for s in series.values())} observations")
+
+
+if __name__ == "__main__":
+    main()

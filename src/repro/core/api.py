@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import OrderedDict
 from functools import partial
 from typing import Any, Callable, Optional
@@ -40,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.graph import GraphBatch
 from repro.core.persistence_jax import Diagrams, persistence_diagrams_batched
 from repro.core.reduction import (
@@ -138,7 +140,10 @@ class TopoPlan:
     def execute(self, g: GraphBatch) -> Diagrams:
         if self.key.repack == "on":
             return self.execute_info(g)[0]
-        return self.executor(g)
+        # dispatch is async: this span covers trace/dispatch, not device
+        # time — callers that block (serve) wrap the sync in serve.sync
+        with obs.span("plan.execute", graphs=g.batch, n=g.n):
+            return self.executor(g)
 
     def __call__(self, g: GraphBatch) -> Diagrams:
         return self.execute(g)
@@ -237,10 +242,13 @@ class TopoPlan:
         if self.key.repack != "on":
             return self.executor(g), None
         k = self.key
-        gc, counts = self.reduce_executor(g)
-        nv, ne, nt = (np.asarray(c) for c in counts)
-        ladder = self.ladder_for(g.n)
-        cls_idx = select_classes(ladder, nv, ne, nt)
+        with obs.span("plan.reduce", graphs=g.batch, n=g.n):
+            gc, counts = self.reduce_executor(g)
+        with obs.span("plan.measure"):  # the one phase-boundary host sync
+            nv, ne, nt = (np.asarray(c) for c in counts)
+        with obs.span("plan.repack"):
+            ladder = self.ladder_for(g.n)
+            cls_idx = select_classes(ladder, nv, ne, nt)
         s_full = diagram_size(g.n, k.dim, k.edge_cap, k.tri_cap, k.quad_cap)
         out = _invalid_diagrams(g.batch, s_full)
         for ci in sorted(set(cls_idx.tolist())):
@@ -248,14 +256,16 @@ class TopoPlan:
             idx = np.nonzero(cls_idx == ci)[0]
             n_g = len(idx)
             r = 1 << (n_g - 1).bit_length()  # pow2-padded group batch
-            idx_p = np.concatenate([idx, np.full(r - n_g, idx[0], idx.dtype)])
-            jidx = jnp.asarray(idx_p)
-            sub = slice_to(jax.tree.map(lambda x: x[jidx], gc), sc.n_pad)
-            d = self.persist_plan(sc).execute(sub)
-            d = _pad_diagram_rows(d, s_full)
-            jdst = jnp.asarray(idx)
-            out = jax.tree.map(
-                lambda o, n_: o.at[jdst].set(n_[:n_g]), out, d)
+            with obs.span("plan.persist", rung=f"n{sc.n_pad}", graphs=n_g):
+                idx_p = np.concatenate(
+                    [idx, np.full(r - n_g, idx[0], idx.dtype)])
+                jidx = jnp.asarray(idx_p)
+                sub = slice_to(jax.tree.map(lambda x: x[jidx], gc), sc.n_pad)
+                d = self.persist_plan(sc).execute(sub)
+                d = _pad_diagram_rows(d, s_full)
+                jdst = jnp.asarray(idx)
+                out = jax.tree.map(
+                    lambda o, n_: o.at[jdst].set(n_[:n_g]), out, d)
         report = RepackReport(ladder=ladder, class_index=cls_idx,
                               n_vertices=nv, n_edges=ne, n_triangles=nt)
         return out, report
@@ -348,6 +358,14 @@ _PLAN_CACHE_MAXSIZE = 64
 _PLAN_CACHE_LOCK = threading.Lock()
 _PLAN_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
 
+# TopoScope mirrors of the cache counters (always on; reset by
+# clear_plan_cache alongside _PLAN_CACHE_STATS so the two never drift)
+_OBS_PC_EVENTS = obs.counter(
+    "plancache.events", help="TopoPlan cache hits/misses/evictions")
+_OBS_PC_BUILD = obs.histogram(
+    "plancache.build_seconds", help="TopoPlan executor build time (host-side "
+    "trace/compile setup on a cache miss)")
+
 
 def make_topo_plan(
     dim: int = 1,
@@ -403,17 +421,23 @@ def make_topo_plan(
         if plan is not None:
             _PLAN_CACHE.move_to_end(key)
             _PLAN_CACHE_STATS["hits"] += 1
+            _OBS_PC_EVENTS.inc(event="hit")
             return plan
         _PLAN_CACHE_STATS["misses"] += 1
-        if repack == "on":
-            plan = TopoPlan(key=key,
-                            reduce_executor=_build_reduce_executor(key))
-        else:
-            plan = TopoPlan(key=key, executor=_build_executor(key))
+        _OBS_PC_EVENTS.inc(event="miss")
+        t0 = time.perf_counter()
+        with obs.span("plan.build", repack=repack):
+            if repack == "on":
+                plan = TopoPlan(key=key,
+                                reduce_executor=_build_reduce_executor(key))
+            else:
+                plan = TopoPlan(key=key, executor=_build_executor(key))
+        _OBS_PC_BUILD.observe(time.perf_counter() - t0)
         _PLAN_CACHE[key] = plan
         while len(_PLAN_CACHE) > _PLAN_CACHE_MAXSIZE:
             _PLAN_CACHE.popitem(last=False)
             _PLAN_CACHE_STATS["evictions"] += 1
+            _OBS_PC_EVENTS.inc(event="eviction")
     return plan
 
 
@@ -430,6 +454,8 @@ def clear_plan_cache() -> None:
         _PLAN_CACHE.clear()
         for k in _PLAN_CACHE_STATS:
             _PLAN_CACHE_STATS[k] = 0
+        _OBS_PC_EVENTS.clear()
+        _OBS_PC_BUILD.clear()
 
 
 def topological_signature(

@@ -15,6 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import tuning
 from repro.kernels.auction_lap import auction_lap_pallas
 from repro.kernels.common_neighbors import common_neighbors_pallas
@@ -35,25 +36,44 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# Per-kernel wrapper invocation counts (always on).  Under jit these
+# wrappers run at *trace* time, so for jitted call sites the counter
+# counts compilations, not executions; the eager call sites
+# (metrics/engine.py, TopoIndex) count 1:1.
+_KCALLS = obs.counter(
+    "kernels.calls",
+    help="Pallas kernel wrapper invocations (trace-time under jit)")
+
+
 def domination(adj: jax.Array, mask: jax.Array,
                tile: int | None = None) -> jax.Array:
     """(B, N, N) dom[u, v] = "v dominates u" (closed neighborhoods)."""
     t = tuning.resolve_tiles("domination", tile=tile)["tile"]
-    return domination_pallas(
-        adj, mask, tile_u=t, tile_v=t, tile_w=t, interpret=_interpret()
-    )
+    _KCALLS.inc(kernel="domination")
+    with obs.span("kernels.domination",
+                  shape=f"B{adj.shape[0]}_N{adj.shape[1]}"):
+        return domination_pallas(
+            adj, mask, tile_u=t, tile_v=t, tile_w=t, interpret=_interpret()
+        )
 
 
 def kcore_peel(adj: jax.Array, alive: jax.Array, k, tile: int = 128) -> jax.Array:
     """One k-core peel sweep over a (B, N, N) batch."""
-    return kcore_peel_pallas(
-        adj, alive, k, tile_u=tile, tile_w=tile, interpret=_interpret()
-    )
+    _KCALLS.inc(kernel="kcore_peel")
+    with obs.span("kernels.kcore_peel",
+                  shape=f"B{adj.shape[0]}_N{adj.shape[1]}"):
+        return kcore_peel_pallas(
+            adj, alive, k, tile_u=tile, tile_w=tile, interpret=_interpret()
+        )
 
 
 def common_neighbors(adj: jax.Array, tile: int = 128) -> jax.Array:
     """(B, N, N) i32 common-neighbor counts restricted to edges."""
-    return common_neighbors_pallas(adj, tile=tile, interpret=_interpret())
+    _KCALLS.inc(kernel="common_neighbors")
+    with obs.span("kernels.common_neighbors",
+                  shape=f"B{adj.shape[0]}_N{adj.shape[1]}"):
+        return common_neighbors_pallas(adj, tile=tile,
+                                       interpret=_interpret())
 
 
 def gf2_reduce(b: jax.Array, n_rows: int | None = None):
@@ -62,8 +82,10 @@ def gf2_reduce(b: jax.Array, n_rows: int | None = None):
     n_rows sizes the owner vector for rectangular per-dimension blocks
     (defaults to the square case).
     """
-    _, owner, positive = gf2_reduce_pallas(
-        b, interpret=_interpret(), n_rows=n_rows)
+    _KCALLS.inc(kernel="gf2_reduce")
+    with obs.span("kernels.gf2_reduce", shape=f"S{b.shape[0]}"):
+        _, owner, positive = gf2_reduce_pallas(
+            b, interpret=_interpret(), n_rows=n_rows)
     return owner, positive
 
 
@@ -78,9 +100,12 @@ def gf2_reduce_batch(b: jax.Array, n_rows: int | None = None,
     """
     mode = tuning.resolve_tiles("gf2_reduce",
                                 batch_mode=batch_mode)["batch_mode"]
+    _KCALLS.inc(kernel="gf2_reduce_batch")
     if mode == "grid":
-        _, owner, positive = gf2_reduce_batch_pallas(
-            b, interpret=_interpret(), n_rows=n_rows)
+        with obs.span("kernels.gf2_reduce_batch",
+                      shape=f"B{b.shape[0]}_S{b.shape[1]}"):
+            _, owner, positive = gf2_reduce_batch_pallas(
+                b, interpret=_interpret(), n_rows=n_rows)
         return owner, positive
     if mode != "vmap":
         raise ValueError(f"unknown gf2 batch_mode {mode!r}")
@@ -95,9 +120,12 @@ def pairwise_l1(x: jax.Array, y: jax.Array, tile_m: int | None = None,
     """(M, D) × (N, D) → (M, N) pairwise-L1 Gram over SW embeddings."""
     t = tuning.resolve_tiles("pairwise_gram", tile_m=tile_m, tile_n=tile_n,
                              tile_d=tile_d)
-    return pairwise_l1_pallas(
-        x, y, tile_m=t["tile_m"], tile_n=t["tile_n"], tile_d=t["tile_d"],
-        interpret=_interpret())
+    _KCALLS.inc(kernel="pairwise_l1")
+    with obs.span("kernels.pairwise_l1",
+                  shape=f"G{max(x.shape[0], y.shape[0])}_D{x.shape[1]}"):
+        return pairwise_l1_pallas(
+            x, y, tile_m=t["tile_m"], tile_n=t["tile_n"], tile_d=t["tile_d"],
+            interpret=_interpret())
 
 
 def auction_lap(cost: jax.Array, n_scales: int = 10,
@@ -110,8 +138,12 @@ def auction_lap(cost: jax.Array, n_scales: int = 10,
     ``tile_b`` pairs share one grid step (pinned winner by default).
     """
     tb = tuning.resolve_tiles("auction_lap", tile_b=tile_b)["tile_b"]
-    return auction_lap_pallas(cost, n_scales=n_scales, max_rounds=max_rounds,
-                              tile_b=tb, interpret=_interpret())
+    _KCALLS.inc(kernel="auction_lap")
+    with obs.span("kernels.auction_lap",
+                  shape=f"B{cost.shape[0]}_M{cost.shape[1]}"):
+        return auction_lap_pallas(cost, n_scales=n_scales,
+                                  max_rounds=max_rounds, tile_b=tb,
+                                  interpret=_interpret())
 
 
 def sinkhorn_lse(xp: jax.Array, yp: jax.Array, dual: jax.Array,
@@ -119,8 +151,11 @@ def sinkhorn_lse(xp: jax.Array, yp: jax.Array, dual: jax.Array,
                  tile: int | None = None) -> jax.Array:
     """Blocked online-LSE Sinkhorn half-update (cost built on the fly)."""
     t = tuning.resolve_tiles("sinkhorn_lse", tile=tile)["tile"]
-    return sinkhorn_lse_pallas(xp, yp, dual, logw, e_t, tile_m=t,
-                               tile_n=t, interpret=_interpret())
+    _KCALLS.inc(kernel="sinkhorn_lse")
+    with obs.span("kernels.sinkhorn_lse",
+                  shape=f"B{xp.shape[0]}_M{xp.shape[-1]}"):
+        return sinkhorn_lse_pallas(xp, yp, dual, logw, e_t, tile_m=t,
+                                   tile_n=t, interpret=_interpret())
 
 
 def sinkhorn_pair_sum(xp: jax.Array, yp: jax.Array, f: jax.Array,
@@ -129,9 +164,12 @@ def sinkhorn_pair_sum(xp: jax.Array, yp: jax.Array, f: jax.Array,
                       tile: int | None = None) -> jax.Array:
     """Blocked masked pair reduction: ⟨P, C⟩ (``"plan"``) or Σc (``"cost"``)."""
     t = tuning.resolve_tiles("sinkhorn_lse", tile=tile)["tile"]
-    return sinkhorn_pair_sum_pallas(xp, yp, f, g, log_a, log_b, e_t,
-                                    mode=mode, tile_m=t, tile_n=t,
-                                    interpret=_interpret())
+    _KCALLS.inc(kernel="sinkhorn_pair_sum")
+    with obs.span("kernels.sinkhorn_pair_sum",
+                  shape=f"B{xp.shape[0]}_M{xp.shape[-1]}"):
+        return sinkhorn_pair_sum_pallas(xp, yp, f, g, log_a, log_b, e_t,
+                                        mode=mode, tile_m=t, tile_n=t,
+                                        interpret=_interpret())
 
 
 def clustering_coefficients(adj: jax.Array, mask: jax.Array, tile: int = 128) -> jax.Array:

@@ -43,9 +43,16 @@ from typing import Any, Callable, Mapping
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.persistence_jax import Diagrams
 from repro.metrics import exact as _exact
 from repro.metrics.distances import sinkhorn_w2, sliced_wasserstein
+
+# entry="pairwise" calls fan out into per-block compare() calls, so
+# compare counts include pairwise-induced invocations; split by the
+# entry label to separate them
+_CALLS = obs.counter(
+    "metrics.calls", help="MetricEngine entry-point invocations per backend")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,7 +144,9 @@ def compare(d1: Diagrams, d2: Diagrams, metric: str = "sw", k: int = 1,
             f"accepted: {sorted(be.params)}")
     kwargs = dict(be.defaults)
     kwargs.update(params)
-    return be.fn(d1, d2, k=k, cap=cap, **kwargs)
+    _CALLS.inc(backend=metric, entry="compare")
+    with obs.span("metrics.compare", backend=metric):
+        return be.fn(d1, d2, k=k, cap=cap, **kwargs)
 
 
 def pairwise(d1: Diagrams, d2: Diagrams | None = None, metric: str = "sw",
@@ -156,6 +165,7 @@ def pairwise(d1: Diagrams, d2: Diagrams | None = None, metric: str = "sw",
     if d2 is None:
         d2 = d1
     n = d2.birth.shape[0]
+    _CALLS.inc(backend=metric, entry="pairwise")
 
     def tile_pair(da: Diagrams):
         q = da.birth.shape[0]
@@ -165,14 +175,16 @@ def pairwise(d1: Diagrams, d2: Diagrams | None = None, metric: str = "sw",
             lambda x: jnp.broadcast_to(x[None, :], (q, n) + x.shape[1:]), d2)
         return compare(left, right, metric=metric, k=k, cap=cap, **params)
 
-    if block_rows is None:
-        return tile_pair(d1)
-    q_total = d1.birth.shape[0]
-    blocks = []
-    for s in range(0, q_total, block_rows):
-        blocks.append(tile_pair(
-            jax.tree.map(lambda x: x[s:s + block_rows], d1)))
-    return jnp.concatenate(blocks, axis=0)
+    with obs.span("metrics.pairwise", backend=metric,
+                  shape=f"Q{d1.birth.shape[0]}_N{n}"):
+        if block_rows is None:
+            return tile_pair(d1)
+        q_total = d1.birth.shape[0]
+        blocks = []
+        for s in range(0, q_total, block_rows):
+            blocks.append(tile_pair(
+                jax.tree.map(lambda x: x[s:s + block_rows], d1)))
+        return jnp.concatenate(blocks, axis=0)
 
 
 # ---------------------------------------------------------------------------

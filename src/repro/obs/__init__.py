@@ -1,0 +1,96 @@
+"""TopoScope: unified tracing, metrics registry, and profiling hooks.
+
+Three layers (see ARCHITECTURE.md §TopoScope):
+
+- **Metrics registry** (:mod:`repro.obs.metrics`) — process-wide
+  thread-safe counters/gauges/histograms, always live; the serving
+  frontends' ``stats`` surfaces are views over it.
+- **Tracing** (:mod:`repro.obs.trace`) — nestable ``span()`` context
+  managers producing Perfetto-loadable Chrome-trace JSON; off by
+  default, enabled via ``REPRO_OBS=1`` or ``obs.configure(enabled=True)``.
+- **Export + report** (:mod:`repro.obs.export`,
+  :mod:`repro.obs.report`) — Prometheus text / JSON-lines snapshots and
+  the ``python -m repro.obs report`` self-time table with roofline
+  cost-cell attribution.
+
+Typical instrumentation site::
+
+    from repro import obs
+
+    _CALLS = obs.counter("kernels.calls")
+
+    def my_kernel(x):
+        _CALLS.inc(kernel="my_kernel")
+        with obs.span("kernels.my_kernel", shape=f"N{x.shape[0]}"):
+            return _impl(x)
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+from .metrics import (
+    Counter,
+    DEFAULT_RATIO_BUCKETS,
+    DEFAULT_TIME_BUCKETS,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    next_instance,
+)
+from .trace import (
+    Span,
+    clear_trace,
+    configure,
+    current_span,
+    dropped_events,
+    enabled,
+    export_chrome_trace,
+    span,
+    trace_events,
+)
+from .export import (
+    append_jsonl,
+    export_prometheus,
+    prometheus_text,
+    snapshot,
+)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "Span",
+    "DEFAULT_TIME_BUCKETS", "DEFAULT_RATIO_BUCKETS",
+    "default_registry", "next_instance",
+    "counter", "gauge", "histogram", "get_instrument",
+    "configure", "enabled", "span", "current_span",
+    "trace_events", "clear_trace", "dropped_events",
+    "export_chrome_trace", "export_prometheus", "prometheus_text",
+    "snapshot", "append_jsonl", "reset",
+]
+
+
+def counter(name: str, help: str = "") -> Counter:
+    """Get-or-create a counter in the default registry."""
+    return default_registry().counter(name, help)
+
+
+def gauge(name: str, help: str = "") -> Gauge:
+    return default_registry().gauge(name, help)
+
+
+def histogram(name: str, help: str = "",
+              buckets: Iterable[float] = DEFAULT_TIME_BUCKETS) -> Histogram:
+    return default_registry().histogram(name, help, buckets=buckets)
+
+
+def get_instrument(name: str):
+    return default_registry().get(name)
+
+
+def reset() -> None:
+    """Zero every metric series and drop buffered trace events.
+
+    Instruments stay registered, so module-level references held by the
+    instrumented subsystems keep recording.
+    """
+    default_registry().reset()
+    clear_trace()

@@ -1,0 +1,29 @@
+"""CLI: ``python -m repro.obs report <trace.json> [--top K]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .report import report
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="TopoScope trace tooling")
+    sub = p.add_subparsers(dest="cmd", required=True)
+    rp = sub.add_parser(
+        "report",
+        help="top-k self-time table with roofline cost cells")
+    rp.add_argument("trace", help="Chrome-trace JSON written by "
+                                  "repro.obs.export_chrome_trace")
+    rp.add_argument("--top", type=int, default=15,
+                    help="rows to print (default 15)")
+    args = p.parse_args(argv)
+    if args.cmd == "report":
+        print(report(args.trace, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

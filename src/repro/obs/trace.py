@@ -1,0 +1,233 @@
+"""TopoScope tracing: nestable spans -> Chrome-trace (Perfetto) JSON.
+
+Tracing is the *opt-in* half of TopoScope and is off by default: until
+``configure(enabled=True)`` is called (or the process starts with
+``REPRO_OBS=1``), ``span(...)`` returns a shared stateless no-op context
+manager — the disabled path is one module attribute read plus a call,
+bounded <1 µs/span by ``tests/test_obs.py`` so serving numbers are
+unaffected.
+
+When enabled, each span records a complete ("ph": "X") Chrome-trace
+event with microsecond timestamps relative to a process epoch, the
+owning thread id, its parent span name, and arbitrary attributes
+(``span("serve.batch", bucket="n32")`` or ``sp.set(graphs=7)`` from
+inside the block).  Nesting is tracked per thread via a thread-local
+span stack.  Every completed span also feeds the ``obs.span_seconds``
+duration histogram in the metrics registry, so traces and metrics never
+disagree about where time went.
+
+``span(..., jax_profiler=True)`` additionally brackets the block with
+``jax.profiler.start_trace/stop_trace`` for XLA-level deep dives; the
+profile lands under the configured ``jax_trace_dir``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Optional
+
+from .metrics import DEFAULT_TIME_BUCKETS, default_registry
+
+
+class _Config:
+    __slots__ = ("enabled", "capacity", "jax_trace_dir")
+
+    def __init__(self):
+        self.enabled = os.environ.get("REPRO_OBS", "").strip() not in (
+            "", "0", "false", "off")
+        self.capacity = 200_000
+        self.jax_trace_dir = os.environ.get(
+            "REPRO_OBS_JAX_DIR", "results/jax_trace")
+
+
+_CONFIG = _Config()
+
+# trace buffer: list of Chrome-trace event dicts + overflow accounting
+_EVENTS: list[dict] = []
+_EVENTS_LOCK = threading.Lock()
+_DROPPED = 0
+
+_TLS = threading.local()  # .stack: list of active Span objects
+_EPOCH = time.perf_counter()
+_PID = os.getpid()
+
+# spans auto-feed this histogram (one series per span name) when enabled
+_SPAN_SECONDS = default_registry().histogram(
+    "obs.span_seconds", help="TopoScope span durations by span name",
+    buckets=DEFAULT_TIME_BUCKETS)
+
+
+def configure(enabled: Optional[bool] = None,
+              capacity: Optional[int] = None,
+              jax_trace_dir: Optional[str] = None) -> None:
+    """Flip tracing on/off and tune the event buffer.
+
+    Metrics instruments are unaffected — they are always live.  Only
+    span recording (and the span->histogram feed) is gated.
+    """
+    if enabled is not None:
+        _CONFIG.enabled = bool(enabled)
+    if capacity is not None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        _CONFIG.capacity = int(capacity)
+    if jax_trace_dir is not None:
+        _CONFIG.jax_trace_dir = jax_trace_dir
+
+
+def enabled() -> bool:
+    return _CONFIG.enabled
+
+
+def _stack() -> list:
+    st = getattr(_TLS, "stack", None)
+    if st is None:
+        st = _TLS.stack = []
+    return st
+
+
+class _NoopSpan:
+    """Singleton returned by span() while tracing is disabled."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def set(self, **attrs):
+        return self
+
+
+_NOOP = _NoopSpan()
+
+
+class Span:
+    """Live span; created by :func:`span` only while tracing is enabled."""
+
+    __slots__ = ("name", "attrs", "parent", "_t0", "_jax", "_jax_active")
+
+    def __init__(self, name: str, attrs: dict, jax_profiler: bool):
+        self.name = name
+        self.attrs = attrs
+        self.parent: Optional[str] = None
+        self._t0 = 0.0
+        self._jax = jax_profiler
+        self._jax_active = False
+
+    def set(self, **attrs) -> "Span":
+        """Attach attributes from inside the block (end-of-span facts like
+        candidate counts)."""
+        self.attrs.update(attrs)
+        return self
+
+    def __enter__(self) -> "Span":
+        st = _stack()
+        if st:
+            self.parent = st[-1].name
+        st.append(self)
+        if self._jax:
+            try:
+                import jax
+                os.makedirs(_CONFIG.jax_trace_dir, exist_ok=True)
+                jax.profiler.start_trace(_CONFIG.jax_trace_dir)
+                self._jax_active = True
+            except Exception:
+                self._jax_active = False
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        t1 = time.perf_counter()
+        if self._jax_active:
+            try:
+                import jax
+                jax.profiler.stop_trace()
+            except Exception:
+                pass
+        st = _stack()
+        if st and st[-1] is self:
+            st.pop()
+        dur = t1 - self._t0
+        args: dict[str, Any] = {}
+        if self.parent is not None:
+            args["parent"] = self.parent
+        if exc_type is not None:
+            args["error"] = exc_type.__name__
+        for k, v in self.attrs.items():
+            args[k] = v if isinstance(v, (int, float, bool, str)) else str(v)
+        event = {
+            "name": self.name,
+            "cat": self.name.split(".", 1)[0],
+            "ph": "X",
+            "ts": (self._t0 - _EPOCH) * 1e6,
+            "dur": dur * 1e6,
+            "pid": _PID,
+            "tid": threading.get_ident() & 0x7FFFFFFF,
+            "args": args,
+        }
+        global _DROPPED
+        with _EVENTS_LOCK:
+            if len(_EVENTS) < _CONFIG.capacity:
+                _EVENTS.append(event)
+            else:
+                _DROPPED += 1
+        _SPAN_SECONDS.observe(dur, span=self.name)
+        return False
+
+
+def span(name: str, jax_profiler: bool = False, **attrs):
+    """Open a nestable trace span; usable as a context manager.
+
+    Disabled path returns a shared no-op (no allocation beyond the
+    kwargs dict at the call site).
+    """
+    if not _CONFIG.enabled:
+        return _NOOP
+    return Span(name, attrs, jax_profiler)
+
+
+def current_span() -> Optional[Span]:
+    """The innermost active span on this thread (None when outside any
+    span or tracing is disabled)."""
+    st = getattr(_TLS, "stack", None)
+    return st[-1] if st else None
+
+
+def trace_events() -> list[dict]:
+    """Copy of the buffered Chrome-trace events."""
+    with _EVENTS_LOCK:
+        return list(_EVENTS)
+
+
+def dropped_events() -> int:
+    with _EVENTS_LOCK:
+        return _DROPPED
+
+
+def clear_trace() -> None:
+    global _DROPPED
+    with _EVENTS_LOCK:
+        _EVENTS.clear()
+        _DROPPED = 0
+
+
+def export_chrome_trace(path: str) -> str:
+    """Write buffered spans as a Chrome-trace JSON object — loadable in
+    Perfetto (https://ui.perfetto.dev) or chrome://tracing."""
+    events = sorted(trace_events(), key=lambda e: (e["tid"], e["ts"]))
+    doc = {
+        "displayTimeUnit": "ms",
+        "otherData": {"producer": "repro.obs", "dropped": dropped_events()},
+        "traceEvents": events,
+    }
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(doc, fh)
+    return path

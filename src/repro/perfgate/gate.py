@@ -138,12 +138,13 @@ def _suite_registry():
 
 def run_suite(key: str, quick: bool) -> dict:
     """Execute one registered suite in-memory; never writes BENCH JSONs."""
-    from benchmarks.common import Report
+    from benchmarks.common import Report, telemetry_delta, telemetry_snapshot
 
     brun = _suite_registry()
     suite = brun.SUITES[key]
     report = Report(quick=quick)
     t0 = time.time()
+    tele0 = telemetry_snapshot()
     ok, error = True, None
     try:
         mod = __import__(suite.module, fromlist=["run"])
@@ -152,6 +153,11 @@ def run_suite(key: str, quick: bool) -> dict:
         ok = False
         error = traceback.format_exc(limit=20)
         traceback.print_exc()
+    # mirror benchmarks/run.py's telemetry rows: baselines carry
+    # "telemetry.*" rows, so a gate run must produce them too or every
+    # check would flag them as stale references
+    for metric, value in sorted(telemetry_delta(tele0).items()):
+        report.add("telemetry", metric, value)
     return {"rows": report.rows, "wall_s": time.time() - t0,
             "ok": ok, "error": error}
 

@@ -101,6 +101,13 @@ _INFO_TOKENS = ("checked", "graphs", "queries", "steps", "corpus",
 def classify_metric(benchmark: str, metric: str) -> RefSpec:
     """Default (direction, band) policy from the metric name alone."""
     name = f"{benchmark}.{metric}".lower()
+    if benchmark.startswith("telemetry"):
+        # TopoScope counter rows stamped by benchmarks/run.py: recorded in
+        # every baseline (a doubled Gram call count is visible in the diff)
+        # but never gated by default — suites gate specific counters by
+        # declaring an explicit RefSpec over "telemetry.<metric>"
+        return RefSpec("*", "info", note="classifier: TopoScope telemetry "
+                                         "counter")
     if any(t in name for t in _ABS_TOKENS):
         return RefSpec("*", "abs_upper", abs_tol=ABS_DIFF_FLOOR,
                        note="classifier: parity/correctness counter")

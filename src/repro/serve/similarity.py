@@ -48,12 +48,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.index.topo_index import TopoIndex, TopoIndexConfig
 from repro.metrics.engine import compare
 from repro.serve.futures import ServeFuture
 from repro.serve.topo_serve import TopoFuture, TopoServe, TopoServeConfig
 
 RERANKS = ("off", "exact_w")
+
+# TopoScope instruments (one series per server instance); ``stats`` is a
+# dict-shaped view over these.  stage1/stage2 wall-seconds are float
+# counters — same semantics as the pre-TopoScope accumulators.
+_C_EVENTS = obs.counter(
+    "similarity.events",
+    help="queries resolved / graphs indexed / add failures")
+_C_STAGE = obs.counter(
+    "similarity.stage_totals",
+    help="stage1 candidates fetched, stage2 exact pairs, per-stage seconds")
+_H_STAGE_S = obs.histogram(
+    "similarity.stage_seconds", help="per-drain stage wall time")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,9 +145,28 @@ class SimilarityServe:
         self._drain_lock = threading.Lock()
         self._pending_queries: list[tuple[TopoFuture, SimilarityFuture]] = []
         self._pending_adds: list[tuple[TopoFuture, Optional[str]]] = []
-        self.stats = {"queries": 0, "indexed": 0, "add_failures": 0,
-                      "stage1_candidates": 0, "stage2_pairs": 0,
-                      "stage1_s": 0.0, "stage2_s": 0.0}
+        self._obs_instance = obs.next_instance("sim")
+
+    @property
+    def stats(self) -> dict:
+        """Dict-shaped view over the TopoScope registry (backward compat
+        with the pre-TopoScope ad-hoc ``stats`` dict, same keys)."""
+        inst = self._obs_instance
+        return {
+            "queries": int(_C_EVENTS.value(instance=inst, event="query")),
+            "indexed": int(_C_EVENTS.value(instance=inst, event="indexed")),
+            "add_failures": int(_C_EVENTS.value(instance=inst,
+                                                event="add_failure")),
+            "stage1_candidates": int(_C_STAGE.value(instance=inst,
+                                                    what="candidates",
+                                                    stage="1")),
+            "stage2_pairs": int(_C_STAGE.value(instance=inst, what="pairs",
+                                               stage="2")),
+            "stage1_s": float(_C_STAGE.value(instance=inst, what="seconds",
+                                             stage="1")),
+            "stage2_s": float(_C_STAGE.value(instance=inst, what="seconds",
+                                             stage="2")),
+        }
 
     # ------------------------------------------------------------- ingest
 
@@ -190,7 +222,8 @@ class SimilarityServe:
                 try:
                     done_adds.append((f.result(timeout=0), gid))
                 except Exception:  # a failed PD batch must not wedge indexing
-                    self.stats["add_failures"] += 1
+                    _C_EVENTS.inc(instance=self._obs_instance,
+                                  event="add_failure")
             for idxs, batch in _stack_by_shape([r for (r, _) in done_adds]):
                 ids = [done_adds[i][1] for i in idxs]
                 try:
@@ -199,9 +232,11 @@ class SimilarityServe:
                         else [i if i is not None
                               else f"g{len(self.index) + j}"
                               for j, i in enumerate(ids)])
-                    self.stats["indexed"] += len(idxs)
+                    _C_EVENTS.inc(len(idxs), instance=self._obs_instance,
+                                  event="indexed")
                 except Exception:  # e.g. duplicate gid: drop group, continue
-                    self.stats["add_failures"] += len(idxs)
+                    _C_EVENTS.inc(len(idxs), instance=self._obs_instance,
+                                  event="add_failure")
 
             resolved = 0
             ready: list[tuple[object, SimilarityFuture]] = []
@@ -233,13 +268,26 @@ class SimilarityServe:
                     k_fetch = (k_max * self.overfetch
                                if self.rerank != "off" else k_max)
                     t0 = time.perf_counter()
-                    res = self.index.query(batch, k=k_fetch)
-                    self.stats["stage1_s"] += time.perf_counter() - t0
-                    self.stats["stage1_candidates"] += sum(
-                        len(row) for row in res.ids)
+                    with obs.span("similarity.stage1", frontend="similarity",
+                                  k=k_fetch) as sp1:
+                        res = self.index.query(batch, k=k_fetch)
+                        n_cand = sum(len(row) for row in res.ids)
+                        sp1.set(candidates=n_cand)
+                    dt1 = time.perf_counter() - t0
+                    inst = self._obs_instance
+                    _C_STAGE.inc(dt1, instance=inst, what="seconds",
+                                 stage="1")
+                    _C_STAGE.inc(n_cand, instance=inst, what="candidates",
+                                 stage="1")
+                    _H_STAGE_S.observe(dt1, instance=inst, stage="1")
                     ids, dists, backends = res.ids, res.distances, res.backends
                     if self.rerank == "exact_w":
-                        ids, dists, backends = self._rerank_exact(batch, res)
+                        with obs.span("similarity.stage2",
+                                      frontend="similarity") as sp2:
+                            ids, dists, backends = self._rerank_exact(
+                                batch, res)
+                            sp2.set(pairs=res.rows.shape[0]
+                                    * res.rows.shape[1])
                 except Exception as e:  # resolve, never wedge waiting clients
                     for sim in sims:
                         sim._fail(e)
@@ -253,7 +301,9 @@ class SimilarityServe:
                         backends=tuple(backends[j][:kk]),
                     ))
                     resolved += 1
-            self.stats["queries"] += resolved
+            if resolved:
+                _C_EVENTS.inc(resolved, instance=self._obs_instance,
+                              event="query")
             return resolved
 
     # ------------------------------------------------------------- rerank
@@ -291,8 +341,11 @@ class SimilarityServe:
                                metric="exact_w", k=cfg.k, cap=cfg.cap,
                                n_points=cfg.n_points))[:qc].reshape(q, c)
         order = np.argsort(d, axis=-1, kind="stable")
-        self.stats["stage2_pairs"] += qc
-        self.stats["stage2_s"] += time.perf_counter() - t0
+        dt2 = time.perf_counter() - t0
+        inst = self._obs_instance
+        _C_STAGE.inc(qc, instance=inst, what="pairs", stage="2")
+        _C_STAGE.inc(dt2, instance=inst, what="seconds", stage="2")
+        _H_STAGE_S.observe(dt2, instance=inst, stage="2")
         ids = [[res.ids[i][j] for j in order[i]] for i in range(q)]
         dists = np.take_along_axis(d, order, axis=-1).astype(np.float32)
         backends = [["exact_w"] * c for _ in range(q)]

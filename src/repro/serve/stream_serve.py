@@ -20,11 +20,28 @@ import threading
 from collections import deque
 from typing import Optional
 
+from repro import obs
 from repro.core.delta import DeltaBatch
 from repro.core.graph import GraphBatch
 from repro.core.persistence_jax import Diagrams
 from repro.serve.futures import ServeFuture
 from repro.stream.topo_stream import TopoStream, TopoStreamConfig
+
+# aggregate per-step outcome keys (the ``stats()`` surface)
+_AGG_KEYS = ("graph_updates", "hits", "coral_hits", "prunit_hits",
+             "recomputes", "anomalies")
+
+# TopoScope instruments, one series per server instance.  Aggregates are
+# incremented per applied step in ``_apply_items`` — i.e. UNDER the
+# session's apply lock — fixing the pre-TopoScope inconsistency where
+# ``stats()`` folded live session dicts and ``_closed_stats`` outside it
+# (a drain racing a close could double- or under-count a step).
+_C_STEPS = obs.counter(
+    "stream.steps", help="per-step verdict outcomes, aggregated per server")
+_C_OPENED = obs.counter("stream.sessions_opened")
+_C_CLOSED = obs.counter("stream.sessions_closed")
+_G_LIVE = obs.gauge("stream.sessions_live",
+                    help="currently registered sessions per server")
 
 
 class StreamFuture(ServeFuture):
@@ -81,21 +98,21 @@ class StreamServe:
         self._sessions: dict[str, _Session] = {}
         self._next_id = 0
         self._stopped = threading.Event()
-        self._closed_stats = {k: 0 for k in
-                              ("graph_updates", "hits", "coral_hits",
-                               "prunit_hits", "recomputes", "anomalies")}
-        self._n_closed = 0
+        self._obs_instance = obs.next_instance("stream")
 
     # ----------------------------------------------------------- sessions
 
     def create_session(self, g: GraphBatch,
                        config: TopoStreamConfig | None = None) -> str:
         """Register a GraphBatch; computes its initial diagrams eagerly."""
-        stream = TopoStream(g, config or self.config)
+        with obs.span("stream.init", frontend="stream"):
+            stream = TopoStream(g, config or self.config)
         with self._lock:
             sid = f"s{self._next_id}"
             self._next_id += 1
             self._sessions[sid] = _Session(sid, stream)
+        _C_OPENED.inc(instance=self._obs_instance)
+        _G_LIVE.inc(instance=self._obs_instance)
         return sid
 
     def close_session(self, sid: str) -> dict:
@@ -115,10 +132,11 @@ class StreamServe:
                 sess.queue.clear()
             for (_, fut) in pending:
                 fut._fail(RuntimeError(f"session {sid} closed before drain"))
-            with self._lock:
-                for k in self._closed_stats:
-                    self._closed_stats[k] += sess.stream.stats[k]
-                self._n_closed += 1
+            # aggregates need no folding: _apply_items already counted every
+            # applied step into the registry, and those counters outlive the
+            # session
+            _C_CLOSED.inc(instance=self._obs_instance)
+            _G_LIVE.dec(instance=self._obs_instance)
             return dict(sess.stream.stats)
 
     def diagrams(self, sid: str) -> Diagrams:
@@ -172,38 +190,48 @@ class StreamServe:
         its own future and every later future of the same session (their
         base state is gone), then the session queue is cleared.
         """
-        applied = 0
-        while True:
-            with self._lock:
-                # snapshot so one hot session cannot starve the others: each
-                # pass gives every queued session one turn
-                queued = [s for s in self._sessions.values() if s.queue]
-            if not queued:
-                return applied
-            for sess in queued:
-                # take the apply lock BEFORE popping: a concurrent drain of
-                # the same session blocks here, then pops strictly later
-                # items, so per-session FIFO order survives concurrent drains
-                with sess.apply_lock:
-                    with self._lock:
-                        items = list(sess.queue)
-                        sess.queue.clear()
-                    applied += self._apply_items(sess, items)
+        if not self.pending():
+            return 0  # keep idle poll loops out of the trace
+        with obs.span("stream.drain", frontend="stream") as sp:
+            applied = 0
+            while True:
+                with self._lock:
+                    # snapshot so one hot session cannot starve the others:
+                    # each pass gives every queued session one turn
+                    queued = [s for s in self._sessions.values() if s.queue]
+                if not queued:
+                    sp.set(applied=applied)
+                    return applied
+                for sess in queued:
+                    # take the apply lock BEFORE popping: a concurrent drain
+                    # of the same session blocks here, then pops strictly
+                    # later items, so per-session FIFO order survives
+                    # concurrent drains
+                    with sess.apply_lock:
+                        with self._lock:
+                            items = list(sess.queue)
+                            sess.queue.clear()
+                        applied += self._apply_items(sess, items)
 
     def _apply_items(self, sess: _Session, items: list) -> int:
         applied = 0
+        inst = self._obs_instance
         for i, (delta, fut) in enumerate(items):
             before = dict(sess.stream.stats)
             try:
-                d = sess.stream.apply(delta)
+                with obs.span("stream.step", session=sess.sid):
+                    d = sess.stream.apply(delta)
             except Exception as e:
                 for (_, later) in items[i:]:
                     later._fail(e)
                 break
             after = sess.stream.stats
-            info = {k: after[k] - before[k] for k in
-                    ("graph_updates", "hits", "coral_hits",
-                     "prunit_hits", "recomputes", "anomalies")}
+            info = {k: after[k] - before[k] for k in _AGG_KEYS}
+            # aggregate registry counters, incremented under the apply lock
+            # every caller of this method holds (see drain/close_session)
+            for k, v in info.items():
+                if v:
+                    _C_STEPS.inc(v, instance=inst, key=k)
             if sess.stream.config.drift_metric is not None:
                 info["drift"] = sess.stream.last_drift.copy()
                 info["anomaly"] = sess.stream.last_anomaly.copy()
@@ -233,15 +261,21 @@ class StreamServe:
 
     def stats(self) -> dict:
         """Aggregate hit/miss/recompute counters over all sessions (live and
-        closed) — the serving layer's cache-effectiveness surface."""
+        closed) — the serving layer's cache-effectiveness surface.
+
+        A dict-shaped view over the TopoScope registry: steps are counted
+        once, at apply time, under the session's apply lock, so this read
+        never races a drain or a close (pre-TopoScope it folded per-session
+        dicts outside that lock).  Steps applied directly on a session's
+        ``TopoStream`` object (bypassing ``submit``/``drain``) are that
+        session's business and are not aggregated here.
+        """
+        inst = self._obs_instance
         with self._lock:
-            sessions = list(self._sessions.values())
-            agg = dict(self._closed_stats)
-            n_closed = self._n_closed
-        for sess in sessions:
-            for k in agg:
-                agg[k] += sess.stream.stats[k]
-        agg["sessions"] = len(sessions)
-        agg["sessions_closed"] = n_closed
+            n_live = len(self._sessions)
+        agg = {k: int(_C_STEPS.value(instance=inst, key=k))
+               for k in _AGG_KEYS}
+        agg["sessions"] = n_live
+        agg["sessions_closed"] = int(_C_CLOSED.value(instance=inst))
         agg["skip_rate"] = agg["hits"] / max(agg["graph_updates"], 1)
         return agg

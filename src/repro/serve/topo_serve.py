@@ -24,17 +24,40 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from collections import deque
 from typing import Optional, Sequence
 
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.api import TopoPlan, make_topo_plan
 from repro.core.graph import GraphBatch, from_edge_lists
 from repro.core.persistence_jax import Diagrams
 from repro.core.repack import ShapeClass, default_ladder
 from repro.serve.futures import ServeFuture
+
+# TopoScope instruments (always on; one series per server instance via the
+# ``instance`` label, so tests and multi-server processes never mix stats).
+# ``TopoServe.stats`` is a dict-shaped view over these — the registry is
+# the single source of truth.
+_C_SUBMITTED = obs.counter("serve.submitted",
+                           help="requests accepted per bucket")
+_C_SERVED = obs.counter("serve.served", help="futures resolved per bucket")
+_C_FAILED = obs.counter("serve.failed", help="futures failed at drain")
+_C_BATCHES = obs.counter("serve.batches", help="executed batches per bucket")
+_C_PADDED = obs.counter("serve.padded_rows",
+                        help="empty pad rows executed (mesh divisibility)")
+_C_RUNGS = obs.counter(
+    "serve.repack_rungs",
+    help="repack='on' graphs per (input bucket, persist rung)")
+_H_QWAIT = obs.histogram(
+    "serve.queue_wait_seconds",
+    help="submit -> drain-pickup wait per request")
+_H_OCC = obs.histogram(
+    "serve.batch_occupancy", help="executed batch fill vs max_batch",
+    buckets=obs.DEFAULT_RATIO_BUCKETS)
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -209,14 +232,50 @@ class TopoServe:
         self._stopped = threading.Event()
         # (bucket, requests, futures) per executed batch when record_batches
         self.executed_batches: list[tuple] = []
-        self.stats = {
-            "submitted": 0, "served": 0, "failed": 0, "batches": 0,
-            "padded_rows": 0,
+        self._obs_instance = obs.next_instance("topo")
+        # bucket -> stable label ("n32"); n_pad collisions disambiguate by
+        # caps so per-bucket registry series stay distinct
+        self._bucket_label: dict[Bucket, str] = {}
+        for b in self._buckets:
+            lbl = f"n{b.n_pad}"
+            if lbl in self._bucket_label.values():
+                lbl = f"n{b.n_pad}e{b.edge_cap}"
+            if lbl in self._bucket_label.values():
+                lbl = f"n{b.n_pad}e{b.edge_cap}t{b.tri_cap}"
+            self._bucket_label[b] = lbl
+
+    @property
+    def stats(self) -> dict:
+        """Dict-shaped view over the TopoScope registry (backward compat:
+        the pre-TopoScope ad-hoc ``stats`` dict, same keys and key types).
+        Mutating the returned dict has no effect — counters live in
+        ``repro.obs``."""
+        inst = self._obs_instance
+        per_bucket = {}
+        for b in self._buckets:
+            lbl = self._bucket_label[b]
+            per_bucket[b] = {
+                "submitted": int(_C_SUBMITTED.value(instance=inst,
+                                                    bucket=lbl)),
+                "served": int(_C_SERVED.value(instance=inst, bucket=lbl)),
+                "batches": int(_C_BATCHES.value(instance=inst, bucket=lbl)),
+            }
+        rungs = {}
+        for key, v in _C_RUNGS.series().items():
+            d = dict(key)
+            if d.get("instance") != inst:
+                continue
+            rungs[(int(d["bucket"][1:]), int(d["rung"][1:]))] = int(v)
+        return {
+            "submitted": sum(pb["submitted"] for pb in per_bucket.values()),
+            "served": sum(pb["served"] for pb in per_bucket.values()),
+            "failed": int(_C_FAILED.value(instance=inst)),
+            "batches": sum(pb["batches"] for pb in per_bucket.values()),
+            "padded_rows": int(_C_PADDED.value(instance=inst)),
             # repack="on": {(bucket n_pad, persist rung n_pad): graphs} —
             # rungs keyed by >1 bucket are shared compiled persist plans
-            "repack_rungs": {},
-            "per_bucket": {b: {"submitted": 0, "served": 0, "batches": 0}
-                           for b in self._buckets},
+            "repack_rungs": rungs,
+            "per_bucket": per_bucket,
         }
 
     # ------------------------------------------------------------- routing
@@ -282,8 +341,8 @@ class TopoServe:
         fut = TopoFuture(bucket)
         with self._lock:
             self._queues[bucket].append((req, fut))
-            self.stats["submitted"] += 1
-            self.stats["per_bucket"][bucket]["submitted"] += 1
+        _C_SUBMITTED.inc(instance=self._obs_instance,
+                         bucket=self._bucket_label[bucket])
         return fut
 
     def pending(self) -> int:
@@ -301,62 +360,75 @@ class TopoServe:
         that divides the mesh.  Buckets are swept round-robin — one chunk per
         bucket per sweep — so sustained traffic into one bucket cannot starve
         requests queued in the others."""
-        served = 0
-        while True:
-            progressed = False
-            for b in self._buckets:
-                with self._lock:
-                    q = self._queues[b]
-                    items = [q.popleft()
-                             for _ in range(min(len(q),
-                                                self.config.max_batch))]
-                if items:
-                    served += self._execute(b, items)
-                    progressed = True
-            if not progressed:
-                return served
+        if not self.pending():
+            return 0  # keep idle poll loops out of the trace
+        with obs.span("serve.drain", frontend="topo") as sp:
+            served = 0
+            while True:
+                progressed = False
+                for b in self._buckets:
+                    with self._lock:
+                        q = self._queues[b]
+                        items = [q.popleft()
+                                 for _ in range(min(len(q),
+                                                    self.config.max_batch))]
+                    if items:
+                        served += self._execute(b, items)
+                        progressed = True
+                if not progressed:
+                    sp.set(served=served)
+                    return served
 
     def _execute(self, bucket: Bucket, items: list) -> int:
+        inst = self._obs_instance
+        lbl = self._bucket_label[bucket]
         reqs = tuple(r for (r, _) in items)
         futs = [f for (_, f) in items]
+        now = time.perf_counter()
+        for f in futs:
+            _H_QWAIT.observe(now - f.submitted_at, instance=inst)
+        _H_OCC.observe(len(items) / self.config.max_batch,
+                       instance=inst, bucket=lbl)
         repack_info = None
-        try:
-            g = pack_requests(reqs, bucket)
-            n_pad_rows = (-len(reqs)) % self._pad_batch_to
-            if n_pad_rows:
-                g = _pad_batch(g, n_pad_rows)
-            plan = self.plan_for(bucket)
-            if self.config.repack == "on":
-                # two-phase drain: reduce → measure → repack → persist; the
-                # report carries each request's persist-rung assignment
-                d, repack_info = plan.execute_info(g)
-            else:
-                d = plan.execute(g)
-            jax.block_until_ready(d.birth)
-        except Exception as e:  # resolve, don't wedge waiting clients
-            for f in futs:
-                f._fail(e)
-            with self._lock:
-                self.stats["failed"] += len(futs)
-            return 0
-        if self.config.record_batches:
-            self.executed_batches.append((bucket, reqs, tuple(futs)))
-        for i, f in enumerate(futs):
-            if repack_info is not None:
-                f.repack_class = repack_info.shape_class(i)
-            f._resolve(jax.tree.map(lambda x: x[i], d))
-        with self._lock:
-            self.stats["served"] += len(futs)
-            self.stats["batches"] += 1
-            self.stats["padded_rows"] += n_pad_rows
-            if repack_info is not None:
-                rr = self.stats["repack_rungs"]
-                for i in range(len(futs)):
-                    k = (bucket.n_pad, repack_info.shape_class(i).n_pad)
-                    rr[k] = rr.get(k, 0) + 1
-            pb = self.stats["per_bucket"][bucket]
-            pb["served"] += len(futs)
-            pb["batches"] += 1
+        with obs.span("serve.batch", frontend="topo", bucket=lbl,
+                      graphs=len(items)):
+            try:
+                with obs.span("serve.gather", bucket=lbl):
+                    g = pack_requests(reqs, bucket)
+                    n_pad_rows = (-len(reqs)) % self._pad_batch_to
+                    if n_pad_rows:
+                        g = _pad_batch(g, n_pad_rows)
+                plan = self.plan_for(bucket)
+                if self.config.repack == "on":
+                    # two-phase drain: reduce → measure → repack → persist;
+                    # the report carries each request's persist-rung
+                    # assignment (plan.* spans nest here)
+                    d, repack_info = plan.execute_info(g)
+                else:
+                    d = plan.execute(g)
+                with obs.span("serve.sync"):
+                    jax.block_until_ready(d.birth)
+            except Exception as e:  # resolve, don't wedge waiting clients
+                for f in futs:
+                    f._fail(e)
+                _C_FAILED.inc(len(futs), instance=inst)
+                return 0
+            if self.config.record_batches:
+                self.executed_batches.append((bucket, reqs, tuple(futs)))
+            with obs.span("serve.resolve"):
+                for i, f in enumerate(futs):
+                    if repack_info is not None:
+                        f.repack_class = repack_info.shape_class(i)
+                    f._resolve(jax.tree.map(lambda x: x[i], d))
+        _C_SERVED.inc(len(futs), instance=inst, bucket=lbl)
+        _C_BATCHES.inc(instance=inst, bucket=lbl)
+        if n_pad_rows:
+            _C_PADDED.inc(n_pad_rows, instance=inst)
+        if repack_info is not None:
+            for i in range(len(futs)):
+                _C_RUNGS.inc(
+                    instance=inst, bucket=f"n{bucket.n_pad}",
+                    rung=f"n{repack_info.shape_class(i).n_pad}")
         return len(futs)
 
     # ------------------------------------------------------------- loops

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.api import REDUCTIONS, TopoPlan, make_topo_plan
 from repro.core.delta import DeltaBatch, apply_delta
 from repro.core.filtration import complex_caps_ok
@@ -53,6 +54,14 @@ from repro.stream.calibration import DriftCalibrator, parse_drift_threshold
 
 # reductions exact in every homology dimension (no coral core restriction)
 _ALL_DIM_METHODS = ("prunit", "none")
+
+# process-wide TopoScope instruments (per-session breakdown stays in the
+# session's own ``stats`` dict; these aggregate across every session)
+_OBS_VERDICTS = obs.counter(
+    "stream.verdicts", help="invalidation verdicts per (graph, step) touch")
+_OBS_DRIFT = obs.histogram(
+    "stream.drift_score", help="drift distances of recomputed graphs",
+    buckets=(0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0, 100.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -371,17 +380,18 @@ class TopoStream:
         simplex caps (``check_caps=False`` disables the guard).
         """
         c = self.config
-        g_new = apply_delta(self._g, delta)
-        verdict = invalidation_verdict(
-            self._g, g_new, self._core, self._elig,
-            dim=c.dim, sublevel=c.sublevel, use_coral=self._use_coral,
-            check_caps=c.check_caps, edge_cap=c.edge_cap, tri_cap=c.tri_cap,
-            quad_cap=c.quad_cap)
+        with obs.span("stream.verdict", graphs=self._g.batch):
+            g_new = apply_delta(self._g, delta)
+            verdict = invalidation_verdict(
+                self._g, g_new, self._core, self._elig,
+                dim=c.dim, sublevel=c.sublevel, use_coral=self._use_coral,
+                check_caps=c.check_caps, edge_cap=c.edge_cap,
+                tri_cap=c.tri_cap, quad_cap=c.quad_cap)
 
-        touched = np.asarray(verdict.touched)
-        coral = np.asarray(verdict.coral_hit)
-        prunit = np.asarray(verdict.prunit_hit)
-        needs = np.asarray(verdict.recompute)
+            touched = np.asarray(verdict.touched)
+            coral = np.asarray(verdict.coral_hit)
+            prunit = np.asarray(verdict.prunit_hit)
+            needs = np.asarray(verdict.recompute)
         if c.check_caps and not np.asarray(verdict.caps_ok).all():
             bad = np.nonzero(~np.asarray(verdict.caps_ok))[0].tolist()
             raise ValueError(
@@ -393,11 +403,15 @@ class TopoStream:
         if needs.any():
             idx = np.nonzero(needs)[0]
             old = self._diagrams
-            self._diagrams = self._recompute(g_new, idx)
+            with obs.span("stream.recompute", misses=len(idx)):
+                self._diagrams = self._recompute(g_new, idx)
             self.stats["recomputes"] += int(needs.sum())
             self._all_dims_exact[idx] = c.method in _ALL_DIM_METHODS
             if c.drift_metric is not None:
-                drift[idx] = self._drift_scores(old, self._diagrams, idx)
+                with obs.span("stream.drift", backend=c.drift_metric):
+                    drift[idx] = self._drift_scores(old, self._diagrams, idx)
+                for s in drift[idx]:
+                    _OBS_DRIFT.observe(float(s), backend=c.drift_metric)
 
         if c.drift_metric is not None:
             self.last_drift = drift
@@ -417,6 +431,11 @@ class TopoStream:
         self.stats["hits"] += int((touched & ~needs).sum())
         self.stats["coral_hits"] += int(coral.sum())
         self.stats["prunit_hits"] += int((prunit & ~coral).sum())
+        for verdict_name, n in (("coral_hit", int(coral.sum())),
+                                ("prunit_hit", int((prunit & ~coral).sum())),
+                                ("recompute", int(needs.sum()))):
+            if n:
+                _OBS_VERDICTS.inc(n, verdict=verdict_name)
 
         self._g = g_new
         self._core = verdict.core_mask
