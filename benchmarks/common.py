@@ -93,7 +93,8 @@ def telemetry_snapshot() -> dict:
     kernels = obs.counter("kernels.calls").labeled("kernel")
     metric_calls = obs.counter("metrics.calls").labeled("backend")
     return {"plan_cache": plan_cache_info(),
-            "kernel_calls": kernels, "metric_calls": metric_calls}
+            "kernel_calls": kernels, "metric_calls": metric_calls,
+            "slo_breaches": obs.counter("slo.breaches_total").total()}
 
 
 def telemetry_delta(before: dict) -> dict:
@@ -101,7 +102,10 @@ def telemetry_delta(before: dict) -> dict:
 
     Kernel/metric counters only appear once non-zero (a suite that never
     touches the auction kernel gets no ``kernel_calls_auction_lap`` row);
-    the plan-cache triple is always present.
+    the plan-cache triple is always present.  ``slo_breaches_total`` is
+    ALSO always present — even as 0 — so every committed baseline carries
+    a reference row for it and PerfGate (which gates it ``abs_upper``)
+    fails any gate run during which an SLO fired.
     """
     after = telemetry_snapshot()
     out = {}
@@ -114,6 +118,8 @@ def telemetry_delta(before: dict) -> dict:
             d = v - before[group].get(name, 0.0)
             if d:
                 out[f"{prefix}_{name}"] = int(d)
+    out["slo_breaches_total"] = int(after["slo_breaches"]
+                                    - before.get("slo_breaches", 0))
     return out
 
 

@@ -1,0 +1,141 @@
+"""TopoWatch end-to-end smoke: live endpoints + a forced SLO breach.
+
+The CI ``obs-watch`` step.  Exercises the whole active-observability
+chain against a real TopoServe drain loop:
+
+1. start a TopoServe ``serve_forever`` thread + the HTTP exporter;
+2. assert ``/readyz`` flips to ready (plan-cache warmed), ``/healthz``
+   reports a fresh heartbeat, ``/metrics`` is parseable Prometheus text,
+   and ``/slo`` serves the installed engine's verdicts;
+3. detune the drain (deterministic stall past a tightened p99 ceiling)
+   so the latency SLO *must* trip: assert the breach is visible at
+   ``/slo``, counted in ``slo.breaches_total``, and that the breach hook
+   auto-dumped the flight ring to ``results/obs/FLIGHT_<rev>.json``;
+4. load the dump back and sanity-check its schema.
+
+Exit code 0 only if every step held.
+
+  PYTHONPATH=src python -m benchmarks.obs_watch_smoke
+"""
+from __future__ import annotations
+
+import json
+import sys
+import threading
+import time
+import urllib.request
+
+from repro import obs
+from repro.obs import flight, slo
+from repro.serve import TopoServe, TopoServeConfig
+
+
+def _get(url: str, expect: int = 200):
+    try:
+        with urllib.request.urlopen(url, timeout=10) as resp:
+            return resp.status, resp.read()
+    except urllib.error.HTTPError as e:
+        body = e.read()
+        if e.code != expect:
+            raise
+        return e.code, body
+
+
+def _get_json(url: str, expect: int = 200) -> dict:
+    code, body = _get(url, expect)
+    assert code == expect, f"{url}: {code} != {expect}"
+    return json.loads(body)
+
+
+def main() -> int:
+    cfg = TopoServeConfig(dim=1, method="prunit", sublevel=False,
+                          max_batch=16, pad_batch_to=16)
+    server = TopoServe(cfg)
+    # tight ceiling + fast burn windows so the detuned drain trips within
+    # a couple of seconds of traffic
+    engine = slo.SLOEngine(slo.default_serve_slos(
+        latency_p99_s=0.05, latency_p50_s=0.05,
+        rules=(slo.BurnRule(long_s=2.0, short_s=0.5, factor=1.0),)))
+    slo.install(engine)
+    srv = obs.start_http_server(port=0)
+    loop = threading.Thread(target=server.serve_forever,
+                            name="smoke-drain", daemon=True)
+    loop.start()
+
+    try:
+        # ---- 1. readiness: serve_forever warmed the plans
+        deadline = time.time() + 60
+        ready = None
+        while time.time() < deadline:
+            try:
+                ready = _get_json(srv.url + "/readyz")
+                break
+            except Exception:
+                time.sleep(0.2)
+        assert ready and ready["status"] == "ready", ready
+        print(f"[obs_watch_smoke] ready: {ready['ready']}")
+
+        # ---- 2. liveness + scrape surface
+        health = _get_json(srv.url + "/healthz")
+        assert health["status"] == "ok", health
+        code, prom = _get(srv.url + "/metrics")
+        prom = prom.decode()
+        assert "# TYPE serve_heartbeat_ts gauge" in prom, prom[:400]
+        assert "serve_ready" in prom
+        for line in prom.splitlines():  # parseable: every sample is "name v"
+            if line and not line.startswith("#"):
+                name_part, _, value_part = line.rpartition(" ")
+                assert name_part, line
+                float(value_part)
+        doc = _get_json(srv.url + "/slo")
+        assert len(doc["status"]) >= 10, doc
+        print(f"[obs_watch_smoke] /healthz ok, /metrics "
+              f"{len(prom.splitlines())} lines, "
+              f"/slo {len(doc['status'])} objectives")
+
+        # ---- 3. detuned drain: stall every drain past the p99 ceiling
+        inner = server.drain
+
+        def slow_drain():
+            time.sleep(0.2)
+            return inner()
+
+        server.drain = slow_drain
+        t_end = time.time() + 20
+        breached: list[str] = []
+        while time.time() < t_end and not breached:
+            futs = [server.submit(edges=[(0, 1), (1, 2)], n_vertices=3)
+                    for _ in range(8)]
+            for f in futs:
+                f.result(timeout=30)
+            doc = _get_json(srv.url + "/slo")
+            breached = [k for k, v in doc["status"].items()
+                        if v["status"] == "breach"]
+            time.sleep(0.3)
+        assert breached, "detuned drain never tripped an SLO within 20s"
+        assert sum(doc["breaches"].values()) >= 1, doc["breaches"]
+        print(f"[obs_watch_smoke] SLO breach observed: {breached}")
+
+        # ---- 4. the breach auto-dumped the flight ring
+        dump_path = flight.last_dump_path()
+        assert dump_path, "breach left no flight dump"
+        with open(dump_path) as fh:
+            dump = json.load(fh)
+        assert dump["schema"] == 1 and dump["events"], dump_path
+        assert dump["reason"].startswith("slo_breach"), dump["reason"]
+        assert dump["slo"]["breaches_total"] >= 1
+        fl = _get_json(srv.url + "/debug/flight")
+        assert fl["last_dump"] == dump_path
+        print(f"[obs_watch_smoke] flight dump OK: {dump_path} "
+              f"({len(dump['events'])} events)")
+        print("[obs_watch_smoke] PASS")
+        return 0
+    finally:
+        server.stop()
+        loop.join(timeout=10)
+        srv.stop()
+        slo.install(None)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,10 +4,10 @@ Runs the two serving frontends with tracing enabled — a repack="on"
 TopoServe batch of synthetic ego-net queries, then a TopoStream session
 replayed through StreamServe — and shows the three TopoScope outputs:
 
-* ``results/trace_serve.json`` — Chrome-trace JSON of every span
+* ``results/obs/trace_serve.json`` — Chrome-trace JSON of every span
   (``serve.drain`` → ``serve.batch`` → ``plan.reduce/…/persist``),
   loadable in Perfetto (https://ui.perfetto.dev);
-* ``results/metrics_serve.prom`` — Prometheus text snapshot of the
+* ``results/obs/metrics_serve.prom`` — Prometheus text snapshot of the
   metrics registry (counters/gauges/histograms the ``stats`` surfaces
   are views over);
 * the self-time report (``python -m repro.obs report``) with kernel
@@ -26,8 +26,8 @@ from repro.obs.report import format_report
 from repro.serve import StreamServe, TopoServe, TopoServeConfig
 from repro.stream import TopoStreamConfig
 
-TRACE_PATH = "results/trace_serve.json"
-PROM_PATH = "results/metrics_serve.prom"
+TRACE_PATH = "results/obs/trace_serve.json"
+PROM_PATH = "results/obs/metrics_serve.prom"
 
 
 def ego_queries(n_queries: int, seed: int = 0):
@@ -79,7 +79,7 @@ def main():
     print(f"\nwrote {TRACE_PATH} ({len(events)} spans — load it in "
           "https://ui.perfetto.dev)")
     print(f"wrote {PROM_PATH} (Prometheus text exposition)\n")
-    # same table as: python -m repro.obs report results/trace_serve.json
+    # same table as: python -m repro.obs report results/obs/trace_serve.json
     print(format_report(events, top=12))
 
     # spans also fed the obs.span_seconds histogram, so the trace and the

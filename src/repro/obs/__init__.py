@@ -1,6 +1,6 @@
-"""TopoScope: unified tracing, metrics registry, and profiling hooks.
+"""TopoScope + TopoWatch: tracing, metrics, SLOs, and serving health.
 
-Three layers (see ARCHITECTURE.md §TopoScope):
+Passive layers (TopoScope, see ARCHITECTURE.md §TopoScope):
 
 - **Metrics registry** (:mod:`repro.obs.metrics`) — process-wide
   thread-safe counters/gauges/histograms, always live; the serving
@@ -12,6 +12,22 @@ Three layers (see ARCHITECTURE.md §TopoScope):
   :mod:`repro.obs.report`) — Prometheus text / JSON-lines snapshots and
   the ``python -m repro.obs report`` self-time table with roofline
   cost-cell attribution.
+
+Active layers (TopoWatch, see ARCHITECTURE.md §TopoWatch):
+
+- **Request context** (:mod:`repro.obs.context`) — contextvars-scoped
+  request ids + absolute deadlines, minted by every ``submit()``,
+  propagated into spans and futures; drains sweep expired requests with
+  :class:`DeadlineExceeded` and skip cancelled ones.
+- **SLO engine** (:mod:`repro.obs.slo`) — declarative latency/error/
+  skip-rate/recall objectives evaluated by multi-window burn-rate rules
+  over registry snapshots; ``python -m repro.obs watch`` / ``slo check``.
+- **Scrape endpoints** (:mod:`repro.obs.http`) — dependency-free
+  ``/metrics``, ``/healthz``, ``/readyz``, ``/varz``, ``/slo``,
+  ``/debug/flight`` HTTP server.
+- **Flight recorder** (:mod:`repro.obs.flight`) — always-on bounded
+  ring of recent events, auto-dumped to ``results/obs/FLIGHT_<rev>.json``
+  on SLO breach / deadline expiry / drain exception.
 
 Typical instrumentation site::
 
@@ -35,8 +51,17 @@ from .metrics import (
     Gauge,
     Histogram,
     MetricsRegistry,
+    bucket_count_over,
+    bucket_quantile,
     default_registry,
     next_instance,
+)
+from .context import (
+    DeadlineExceeded,
+    RequestContext,
+    current_request_id,
+    new_request_id,
+    request_context,
 )
 from .trace import (
     Span,
@@ -55,16 +80,31 @@ from .export import (
     prometheus_text,
     snapshot,
 )
+from .http import ObsHTTPServer, start_http_server
+from .slo import (
+    BurnRule,
+    SLOEngine,
+    SLOSpec,
+    default_serve_slos,
+    slo_status,
+)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "Span",
     "DEFAULT_TIME_BUCKETS", "DEFAULT_RATIO_BUCKETS",
+    "bucket_quantile", "bucket_count_over",
     "default_registry", "next_instance",
     "counter", "gauge", "histogram", "get_instrument",
     "configure", "enabled", "span", "current_span",
     "trace_events", "clear_trace", "dropped_events",
     "export_chrome_trace", "export_prometheus", "prometheus_text",
     "snapshot", "append_jsonl", "reset",
+    # TopoWatch
+    "DeadlineExceeded", "RequestContext", "request_context",
+    "new_request_id", "current_request_id",
+    "BurnRule", "SLOEngine", "SLOSpec", "default_serve_slos",
+    "slo_status",
+    "ObsHTTPServer", "start_http_server",
 ]
 
 
@@ -87,10 +127,14 @@ def get_instrument(name: str):
 
 
 def reset() -> None:
-    """Zero every metric series and drop buffered trace events.
+    """Zero every metric series, drop buffered trace events, and clear
+    the flight-recorder ring.
 
     Instruments stay registered, so module-level references held by the
     instrumented subsystems keep recording.
     """
+    from . import flight as _flight
+
     default_registry().reset()
     clear_trace()
+    _flight.clear()

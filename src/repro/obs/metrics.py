@@ -133,6 +133,63 @@ class _HistState:
         self.count = 0
 
 
+def bucket_quantile(bounds: tuple[float, ...],
+                    counts: Iterable[int], q: float) -> float:
+    """Quantile estimate from fixed-bucket counts via linear interpolation.
+
+    ``counts`` has one entry per bound plus the trailing ``+Inf`` overflow
+    bucket.  Observations are assumed uniformly distributed inside each
+    bucket (the Prometheus ``histogram_quantile`` model); the first
+    bucket's lower edge is 0 (or ``bounds[0]`` if that is negative), and a
+    quantile landing in the overflow bucket is clamped to the largest
+    finite bound — the histogram carries no information beyond it.
+    Returns NaN when the histogram is empty.
+    """
+    counts = list(counts)
+    if len(counts) != len(bounds) + 1:
+        raise ValueError(
+            f"need {len(bounds) + 1} counts (incl. overflow), "
+            f"got {len(counts)}")
+    total = sum(counts)
+    if total <= 0:
+        return float("nan")
+    q = min(max(float(q), 0.0), 1.0)
+    rank = q * total
+    acc = 0.0
+    lo = min(0.0, bounds[0])
+    for b, c in zip(bounds, counts):
+        if c and acc + c >= rank:
+            return lo + (rank - acc) / c * (b - lo)
+        acc += c
+        lo = b
+    return bounds[-1]
+
+
+def bucket_count_over(bounds: tuple[float, ...],
+                      counts: Iterable[int], threshold: float) -> float:
+    """Estimated number of observations strictly above ``threshold``.
+
+    Buckets entirely above the threshold count whole; the bucket
+    containing it contributes its linearly interpolated fraction.  This
+    is the SLO engine's "bad event" estimator for latency ceilings; the
+    threshold should lie within the bucket range — overflow observations
+    are not attributed to a threshold beyond the largest finite bound.
+    """
+    counts = list(counts)
+    if len(counts) != len(bounds) + 1:
+        raise ValueError(
+            f"need {len(bounds) + 1} counts (incl. overflow), "
+            f"got {len(counts)}")
+    i = bisect.bisect_left(bounds, threshold)
+    over = float(sum(counts[i + 1:]))
+    if i < len(bounds):
+        lo = bounds[i - 1] if i > 0 else min(0.0, bounds[0])
+        width = bounds[i] - lo
+        if width > 0:
+            over += counts[i] * max(0.0, (bounds[i] - threshold) / width)
+    return over
+
+
 class Histogram(_Instrument):
     """Fixed-bucket histogram (Prometheus ``le`` semantics: a value lands
     in the first bucket whose upper bound is >= it; larger values land in
@@ -162,6 +219,43 @@ class Histogram(_Instrument):
             st.counts[idx] += 1
             st.sum += value
             st.count += 1
+
+    def quantile(self, q: float, **labels) -> float:
+        """Interpolated quantile over every series whose labels are a
+        superset of ``labels`` (all series when none given) — see
+        :func:`bucket_quantile`.  NaN when nothing matched/observed."""
+        want = set(_label_key(labels))
+        merged = [0] * (len(self.buckets) + 1)
+        for key, st in self.series().items():
+            if want <= set(key):
+                for i, c in enumerate(st.counts):
+                    merged[i] += c
+        return bucket_quantile(self.buckets, merged, q)
+
+    def count_over(self, threshold: float, **labels) -> float:
+        """Estimated observations above ``threshold`` across matching
+        series — see :func:`bucket_count_over`."""
+        want = set(_label_key(labels))
+        merged = [0] * (len(self.buckets) + 1)
+        for key, st in self.series().items():
+            if want <= set(key):
+                for i, c in enumerate(st.counts):
+                    merged[i] += c
+        return bucket_count_over(self.buckets, merged, threshold)
+
+    def merged_counts(self, **labels) -> tuple[list[int], float]:
+        """(per-bucket counts incl. overflow, total sum) aggregated over
+        series whose labels are a superset of ``labels`` — the raw state
+        the SLO engine snapshots for windowed quantiles."""
+        want = set(_label_key(labels))
+        merged = [0] * (len(self.buckets) + 1)
+        total_sum = 0.0
+        for key, st in self.series().items():
+            if want <= set(key):
+                for i, c in enumerate(st.counts):
+                    merged[i] += c
+                total_sum += st.sum
+        return merged, total_sum
 
     def snapshot_series(self) -> dict[LabelKey, dict]:
         """{label_key: {"count", "sum", "buckets": [(le, cumulative), ...]}}

@@ -28,6 +28,8 @@ import threading
 import time
 from typing import Any, Optional
 
+from . import flight as _flight
+from .context import current as _current_context
 from .metrics import DEFAULT_TIME_BUCKETS, default_registry
 
 
@@ -177,6 +179,12 @@ class Span:
             else:
                 _DROPPED += 1
         _SPAN_SECONDS.observe(dur, span=self.name)
+        # completed spans also feed the always-on flight recorder ring
+        # (the recorder additionally gets explicit drain-level records,
+        # so it stays useful with tracing off)
+        _flight.record("span", self.name, dur_ms=round(dur * 1e3, 3),
+                       **({"error": exc_type.__name__}
+                          if exc_type is not None else {}))
         return False
 
 
@@ -188,6 +196,11 @@ def span(name: str, jax_profiler: bool = False, **attrs):
     """
     if not _CONFIG.enabled:
         return _NOOP
+    ctx = _current_context()
+    if ctx is not None and "rid" not in attrs:
+        # request-context propagation: every span opened under a
+        # request_context() carries the request id
+        attrs["rid"] = ctx.request_id
     return Span(name, attrs, jax_profiler)
 
 

@@ -200,6 +200,11 @@ def check(only: list[str] | None = None, quick: bool = False,
         suites_out[k] = block
         _print_suite(block)
 
+    # TopoWatch SLO verdicts at gate time: which objectives were installed,
+    # their current status, and the cumulative breach counter (whose
+    # per-run delta is ALSO gated abs_upper via telemetry.slo_breaches_total)
+    from repro.obs.slo import verdict_block
+
     report = {
         "schema": 1,
         "generated_by": "python -m repro.perfgate check",
@@ -209,6 +214,7 @@ def check(only: list[str] | None = None, quick: bool = False,
         "suites": suites_out,
         "failed_suites": failed,
         "total_regressions": total_regressions,
+        "slo": verdict_block(),
         "ok": not failed and total_regressions == 0,
     }
     out = out or os.path.join(results_dir, GATE_REPORT)

@@ -101,6 +101,13 @@ _INFO_TOKENS = ("checked", "graphs", "queries", "steps", "corpus",
 def classify_metric(benchmark: str, metric: str) -> RefSpec:
     """Default (direction, band) policy from the metric name alone."""
     name = f"{benchmark}.{metric}".lower()
+    if benchmark.startswith("telemetry") and "slo_breach" in name:
+        # SLO breach transitions counted during the gate run (obs/slo.py):
+        # a correctness-grade signal, not a telemetry echo — any breach
+        # over a zero baseline fails the gate, and like the other
+        # abs_upper counters it is never loosened by --band-scale
+        return RefSpec("*", "abs_upper", abs_tol=ABS_DIFF_FLOOR,
+                       note="classifier: SLO breach counter")
     if benchmark.startswith("telemetry"):
         # TopoScope counter rows stamped by benchmarks/run.py: recorded in
         # every baseline (a doubled Gram call count is visible in the diff)

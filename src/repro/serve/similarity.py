@@ -49,6 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.obs import flight as _flight
+from repro.obs.context import DeadlineExceeded, resolve_submit
 from repro.index.topo_index import TopoIndex, TopoIndexConfig
 from repro.metrics.engine import compare
 from repro.serve.futures import ServeFuture
@@ -68,6 +70,15 @@ _C_STAGE = obs.counter(
 _H_STAGE_S = obs.histogram(
     "similarity.stage_seconds", help="per-drain stage wall time")
 
+# TopoWatch request-outcome instruments shared with the other frontends
+# (bucket="query"), plus the liveness/readiness gauges for /healthz//readyz.
+_C_DEADLINE = obs.counter("serve.deadline_exceeded")
+_C_CANCELLED = obs.counter("serve.cancelled")
+_H_LATENCY = obs.histogram("serve.request_latency_seconds")
+_G_HEARTBEAT = obs.gauge("serve.heartbeat_ts")
+_G_READY = obs.gauge("serve.ready")
+_BUCKET = "query"
+
 
 @dataclasses.dataclass(frozen=True)
 class SimilarityResult:
@@ -83,13 +94,27 @@ class SimilarityResult:
 
 
 class SimilarityFuture(ServeFuture):
-    """Handle for one similarity query; resolves to a SimilarityResult."""
+    """Handle for one similarity query; resolves to a SimilarityResult.
 
-    __slots__ = ("k",)
+    ``cancel()`` also cancels the inner PD future, so a cancelled query
+    skips BOTH phases: the bucketed diagram batch slot and the
+    retrieve/re-rank work.
+    """
 
-    def __init__(self, k: int):
-        super().__init__()
+    __slots__ = ("k", "inner")
+
+    def __init__(self, k: int, request_id: Optional[str] = None,
+                 deadline: Optional[float] = None,
+                 inner: Optional[TopoFuture] = None):
+        super().__init__(request_id=request_id, deadline=deadline)
         self.k = k
+        self.inner = inner
+
+    def cancel(self) -> bool:
+        won = super().cancel()
+        if won and self.inner is not None:
+            self.inner.cancel()
+        return won
 
 
 def _stack_by_shape(rows):
@@ -145,6 +170,7 @@ class SimilarityServe:
         self._drain_lock = threading.Lock()
         self._pending_queries: list[tuple[TopoFuture, SimilarityFuture]] = []
         self._pending_adds: list[tuple[TopoFuture, Optional[str]]] = []
+        self._stopped = threading.Event()
         self._obs_instance = obs.next_instance("sim")
 
     @property
@@ -166,6 +192,8 @@ class SimilarityServe:
                                              stage="1")),
             "stage2_s": float(_C_STAGE.value(instance=inst, what="seconds",
                                              stage="2")),
+            "cancelled": int(_C_CANCELLED.total(instance=inst)),
+            "deadline_exceeded": int(_C_DEADLINE.total(instance=inst)),
         }
 
     # ------------------------------------------------------------- ingest
@@ -180,10 +208,24 @@ class SimilarityServe:
 
     def submit(self, edges: Sequence[tuple[int, int]], n_vertices: int,
                f: Sequence[float] | None = None,
-               k: int | None = None) -> SimilarityFuture:
-        """Enqueue one similarity query; resolved by a later ``drain()``."""
-        fut = self.server.submit(edges=edges, n_vertices=n_vertices, f=f)
-        sim = SimilarityFuture(k=int(k) if k is not None else self.default_k)
+               k: int | None = None, *,
+               request_id: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> SimilarityFuture:
+        """Enqueue one similarity query; resolved by a later ``drain()``.
+
+        The request id and deadline are minted once here and shared with
+        the inner PD future, so an expired query is swept out of the
+        bucketed batch by TopoServe's drain (counted there, per bucket)
+        and the similarity layer just propagates the ``DeadlineExceeded``.
+        """
+        rid, deadline = resolve_submit(request_id, deadline_s)
+        rem = (None if deadline is None
+               else deadline - time.monotonic())
+        fut = self.server.submit(edges=edges, n_vertices=n_vertices, f=f,
+                                 request_id=rid, deadline_s=rem)
+        sim = SimilarityFuture(
+            k=int(k) if k is not None else self.default_k,
+            request_id=rid, deadline=deadline, inner=fut)
         with self._lock:
             self._pending_queries.append((fut, sim))
         return sim
@@ -241,7 +283,27 @@ class SimilarityServe:
             resolved = 0
             ready: list[tuple[object, SimilarityFuture]] = []
             later_queries = []
+            now = time.monotonic()
             for (f, sim) in queries:
+                if sim.cancelled():
+                    # inner future already cancelled too (linked cancel);
+                    # skip the retrieve/re-rank work entirely
+                    _C_CANCELLED.inc(instance=self._obs_instance,
+                                     bucket=_BUCKET)
+                    _flight.record("serve", "cancelled_skip",
+                                   frontend="similarity",
+                                   rid=sim.request_id or "")
+                    continue
+                if sim.expired(now) and not f.done():
+                    # inner sweep has not seen it yet (e.g. manual drain
+                    # raced); fail here rather than hold the query over
+                    if sim._fail(DeadlineExceeded(
+                            f"similarity query {sim.request_id or '?'} "
+                            "expired before drain pickup")):
+                        _C_DEADLINE.inc(instance=self._obs_instance,
+                                        bucket=_BUCKET)
+                        _flight.auto_dump("deadline_exceeded")
+                    continue
                 if not f.done():
                     later_queries.append((f, sim))
                     continue
@@ -294,17 +356,57 @@ class SimilarityServe:
                     continue
                 for j, (i, sim) in enumerate(zip(idxs, sims)):
                     kk = min(sim.k, len(ids[j]))
-                    sim._resolve(SimilarityResult(
+                    if sim._resolve(SimilarityResult(
                         ids=tuple(ids[j][:kk]),
                         distances=tuple(float(x) for x in dists[j][:kk]),
                         diagrams=ready[i][0],
                         backends=tuple(backends[j][:kk]),
-                    ))
-                    resolved += 1
+                    )):
+                        _H_LATENCY.observe(sim.latency_s(),
+                                           instance=self._obs_instance,
+                                           bucket=_BUCKET)
+                        resolved += 1
             if resolved:
                 _C_EVENTS.inc(resolved, instance=self._obs_instance,
                               event="query")
             return resolved
+
+    # ------------------------------------------------------------- loops
+
+    def serve_forever(self, poll_s: float = 1e-3) -> None:
+        """Blocking drain loop (run on a dedicated thread); stop() exits.
+
+        Warms the inner TopoServe's bucket plans before raising
+        ``serve.ready{frontend=similarity}``, and stamps
+        ``serve.heartbeat_ts`` each iteration — same liveness/readiness
+        contract as the other frontends (obs/http.py).
+        """
+        inst = self._obs_instance
+        _flight.record("serve", "loop_start", frontend="similarity",
+                       instance=inst)
+        self.server.warmup()
+        _G_HEARTBEAT.set(time.time(), frontend="similarity", instance=inst)
+        _G_READY.set(1, frontend="similarity", instance=inst)
+        try:
+            while not self._stopped.is_set():
+                _G_HEARTBEAT.set(time.time(), frontend="similarity",
+                                 instance=inst)
+                try:
+                    n = self.drain()
+                except BaseException as e:
+                    _flight.record("serve", "drain_exception",
+                                   frontend="similarity", error=repr(e))
+                    _flight.auto_dump("drain_exception")
+                    raise
+                if n == 0 and not self.pending():
+                    self._stopped.wait(poll_s)
+        finally:
+            _G_READY.set(0, frontend="similarity", instance=inst)
+            _flight.record("serve", "loop_stop", frontend="similarity",
+                           instance=inst)
+
+    def stop(self) -> None:
+        self._stopped.set()
 
     # ------------------------------------------------------------- rerank
 

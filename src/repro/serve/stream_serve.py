@@ -17,10 +17,13 @@ hit split, recomputes and skip rate, per session and aggregated.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from typing import Optional
 
 from repro import obs
+from repro.obs import flight as _flight
+from repro.obs.context import DeadlineExceeded, resolve_submit
 from repro.core.delta import DeltaBatch
 from repro.core.graph import GraphBatch
 from repro.core.persistence_jax import Diagrams
@@ -43,6 +46,19 @@ _C_CLOSED = obs.counter("stream.sessions_closed")
 _G_LIVE = obs.gauge("stream.sessions_live",
                     help="currently registered sessions per server")
 
+# TopoWatch request-outcome instruments are SHARED with TopoServe (same
+# registry names, bucket="session"), so the serve-wide SLO ratios in
+# obs/slo.py — deadline misses / submissions, failures / submissions —
+# see every frontend's traffic with one selector.
+_C_SUBMITTED = obs.counter("serve.submitted")
+_C_FAILED = obs.counter("serve.failed")
+_C_DEADLINE = obs.counter("serve.deadline_exceeded")
+_C_CANCELLED = obs.counter("serve.cancelled")
+_H_LATENCY = obs.histogram("serve.request_latency_seconds")
+_G_HEARTBEAT = obs.gauge("serve.heartbeat_ts")
+_G_READY = obs.gauge("serve.ready")
+_BUCKET = "session"  # stream steps have no padding bucket
+
 
 class StreamFuture(ServeFuture):
     """Handle for one submitted update step; resolved by a later drain.
@@ -58,14 +74,15 @@ class StreamFuture(ServeFuture):
 
     __slots__ = ("info", "session_id")
 
-    def __init__(self, session_id: str):
-        super().__init__()
+    def __init__(self, session_id: str, request_id: Optional[str] = None,
+                 deadline: Optional[float] = None):
+        super().__init__(request_id=request_id, deadline=deadline)
         self.info: Optional[dict] = None
         self.session_id = session_id
 
-    def _resolve(self, value: Diagrams, info: dict) -> None:  # type: ignore[override]
+    def _resolve(self, value: Diagrams, info: dict) -> bool:  # type: ignore[override]
         self.info = info
-        super()._resolve(value)
+        return super()._resolve(value)
 
 
 class _Session:
@@ -155,8 +172,17 @@ class StreamServe:
 
     # ------------------------------------------------------------- ingest
 
-    def submit(self, sid: str, delta: DeltaBatch) -> StreamFuture:
-        """Enqueue one update step for a session (FIFO per session)."""
+    def submit(self, sid: str, delta: DeltaBatch, *,
+               request_id: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> StreamFuture:
+        """Enqueue one update step for a session (FIFO per session).
+
+        Request id and optional deadline follow the TopoServe contract
+        (explicit args > ambient ``obs.request_context()`` > fresh mint);
+        expired steps are failed with ``DeadlineExceeded`` by the drain
+        sweep, cancelled ones are skipped — a skipped step is NOT applied,
+        so later steps of the session still see the pre-step state.
+        """
         sess = self._session(sid)
         if delta.edge_u.ndim != 2:
             raise ValueError(
@@ -166,7 +192,8 @@ class StreamServe:
             raise ValueError(
                 f"delta batch {delta.batch} != session batch "
                 f"{sess.stream.graph.batch}")
-        fut = StreamFuture(sid)
+        rid, deadline = resolve_submit(request_id, deadline_s)
+        fut = StreamFuture(sid, request_id=rid, deadline=deadline)
         with self._lock:
             # re-check under the lock: a concurrent close_session may have
             # popped the session after _session() returned it — appending to
@@ -175,6 +202,7 @@ class StreamServe:
             if self._sessions.get(sid) is not sess:
                 raise KeyError(f"session {sid!r} closed")
             sess.queue.append((delta, fut))
+        _C_SUBMITTED.inc(instance=self._obs_instance, bucket=_BUCKET)
         return fut
 
     def pending(self) -> int:
@@ -217,13 +245,34 @@ class StreamServe:
         applied = 0
         inst = self._obs_instance
         for i, (delta, fut) in enumerate(items):
+            # TopoWatch sweep: a cancelled/expired step is NOT applied, so
+            # the stream state stays exactly as if it was never submitted
+            if fut.cancelled():
+                _C_CANCELLED.inc(instance=inst, bucket=_BUCKET)
+                _flight.record("serve", "cancelled_skip", frontend="stream",
+                               session=sess.sid, rid=fut.request_id or "")
+                continue
+            if fut.expired():
+                if fut._fail(DeadlineExceeded(
+                        f"stream step {fut.request_id or '?'} expired "
+                        f"before drain pickup (session {sess.sid})")):
+                    _C_DEADLINE.inc(instance=inst, bucket=_BUCKET)
+                    _flight.record("serve", "deadline_exceeded",
+                                   frontend="stream", session=sess.sid,
+                                   rid=fut.request_id or "")
+                    _flight.auto_dump("deadline_exceeded")
+                continue
             before = dict(sess.stream.stats)
             try:
                 with obs.span("stream.step", session=sess.sid):
                     d = sess.stream.apply(delta)
             except Exception as e:
-                for (_, later) in items[i:]:
-                    later._fail(e)
+                n_failed = sum(1 for (_, later) in items[i:]
+                               if later._fail(e))
+                if n_failed:
+                    _C_FAILED.inc(n_failed, instance=inst)
+                _flight.record("serve", "step_failed", frontend="stream",
+                               session=sess.sid, error=repr(e))
                 break
             after = sess.stream.stats
             info = {k: after[k] - before[k] for k in _AGG_KEYS}
@@ -235,17 +284,44 @@ class StreamServe:
             if sess.stream.config.drift_metric is not None:
                 info["drift"] = sess.stream.last_drift.copy()
                 info["anomaly"] = sess.stream.last_anomaly.copy()
-            fut._resolve(d, info)
+            if fut._resolve(d, info):
+                _H_LATENCY.observe(fut.latency_s(),
+                                   instance=inst, bucket=_BUCKET)
             applied += 1
         return applied
 
     # --------------------------------------------------------------- loops
 
     def serve_forever(self, poll_s: float = 1e-3) -> None:
-        """Blocking drain loop (run on a dedicated thread); stop() exits."""
-        while not self._stopped.is_set():
-            if self.drain() == 0:
-                self._stopped.wait(poll_s)
+        """Blocking drain loop (run on a dedicated thread); stop() exits.
+
+        Stamps ``serve.heartbeat_ts{frontend=stream}`` each iteration and
+        holds ``serve.ready`` high while running (no plan warmup needed:
+        sessions compile eagerly at ``create_session``), so ``/healthz`` /
+        ``/readyz`` cover this frontend too.
+        """
+        inst = self._obs_instance
+        _flight.record("serve", "loop_start", frontend="stream",
+                       instance=inst)
+        _G_HEARTBEAT.set(time.time(), frontend="stream", instance=inst)
+        _G_READY.set(1, frontend="stream", instance=inst)
+        try:
+            while not self._stopped.is_set():
+                _G_HEARTBEAT.set(time.time(), frontend="stream",
+                                 instance=inst)
+                try:
+                    n = self.drain()
+                except BaseException as e:
+                    _flight.record("serve", "drain_exception",
+                                   frontend="stream", error=repr(e))
+                    _flight.auto_dump("drain_exception")
+                    raise
+                if n == 0:
+                    self._stopped.wait(poll_s)
+        finally:
+            _G_READY.set(0, frontend="stream", instance=inst)
+            _flight.record("serve", "loop_stop", frontend="stream",
+                           instance=inst)
 
     def stop(self) -> None:
         self._stopped.set()

@@ -32,6 +32,8 @@ import jax
 import numpy as np
 
 from repro import obs
+from repro.obs import flight as _flight
+from repro.obs.context import DeadlineExceeded, resolve_submit
 from repro.core.api import TopoPlan, make_topo_plan
 from repro.core.graph import GraphBatch, from_edge_lists
 from repro.core.persistence_jax import Diagrams
@@ -58,6 +60,23 @@ _H_QWAIT = obs.histogram(
 _H_OCC = obs.histogram(
     "serve.batch_occupancy", help="executed batch fill vs max_batch",
     buckets=obs.DEFAULT_RATIO_BUCKETS)
+
+# TopoWatch instruments: request outcomes + loop liveness.  The latency
+# histogram feeds the per-bucket p50/p99 SLOs (obs/slo.py); the heartbeat
+# and ready gauges back /healthz and /readyz (obs/http.py).
+_H_LATENCY = obs.histogram(
+    "serve.request_latency_seconds",
+    help="submit -> resolve wall time per bucket")
+_C_DEADLINE = obs.counter(
+    "serve.deadline_exceeded",
+    help="requests failed by the drain deadline sweep, per bucket")
+_C_CANCELLED = obs.counter(
+    "serve.cancelled", help="cancelled requests skipped at drain")
+_G_HEARTBEAT = obs.gauge(
+    "serve.heartbeat_ts",
+    help="wall-clock timestamp of the drain loop's last iteration")
+_G_READY = obs.gauge(
+    "serve.ready", help="1 once serve_forever warmed the bucket plans")
 
 
 @dataclasses.dataclass(frozen=True, order=True)
@@ -123,16 +142,18 @@ class TopoFuture(ServeFuture):
     """Handle for one submitted graph; resolved by a later ``drain()``.
 
     ``result()`` returns the per-graph Diagrams slice (leaves shaped (S,),
-    no batch axis).  Thread-safe plumbing lives in ``ServeFuture``.  With
-    ``repack="on"``, ``repack_class`` carries the persist
-    :class:`ShapeClass` this request was re-bucketed into (set at drain,
-    before the future resolves).
+    no batch axis).  Thread-safe plumbing — including ``cancel()`` and the
+    request id / deadline carried from ``submit()`` — lives in
+    ``ServeFuture``.  With ``repack="on"``, ``repack_class`` carries the
+    persist :class:`ShapeClass` this request was re-bucketed into (set at
+    drain, before the future resolves).
     """
 
     __slots__ = ("bucket", "repack_class")
 
-    def __init__(self, bucket: Bucket):
-        super().__init__()
+    def __init__(self, bucket: Bucket, request_id: Optional[str] = None,
+                 deadline: Optional[float] = None):
+        super().__init__(request_id=request_id, deadline=deadline)
         self.bucket = bucket
         self.repack_class: ShapeClass | None = None
 
@@ -270,6 +291,9 @@ class TopoServe:
             "submitted": sum(pb["submitted"] for pb in per_bucket.values()),
             "served": sum(pb["served"] for pb in per_bucket.values()),
             "failed": int(_C_FAILED.value(instance=inst)),
+            # per-bucket series summed over this instance
+            "deadline_exceeded": int(_C_DEADLINE.total(instance=inst)),
+            "cancelled": int(_C_CANCELLED.total(instance=inst)),
             "batches": sum(pb["batches"] for pb in per_bucket.values()),
             "padded_rows": int(_C_PADDED.value(instance=inst)),
             # repack="on": {(bucket n_pad, persist rung n_pad): graphs} —
@@ -314,11 +338,21 @@ class TopoServe:
     # ------------------------------------------------------------- ingest
 
     def submit(self, edges: Sequence[tuple[int, int]], n_vertices: int,
-               f: Sequence[float] | None = None) -> TopoFuture:
+               f: Sequence[float] | None = None, *,
+               request_id: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> TopoFuture:
         """Enqueue one graph; returns a future resolved by a later drain.
 
         Malformed requests are rejected HERE (ValueError) so they can never
         poison a batch and fail co-batched clients' futures at drain time.
+
+        Every request gets an id (explicit ``request_id``, the ambient
+        ``obs.request_context()`` id, or a fresh mint) and an optional
+        deadline: ``deadline_s`` is relative seconds-from-now, clamped to
+        any ambient context deadline.  Expired requests are failed with
+        :class:`~repro.obs.DeadlineExceeded` by the drain sweep instead of
+        executing late for nobody; cancelled futures are skipped the same
+        way.
         """
         req = TopoRequest(
             edges=tuple((int(u), int(v)) for (u, v) in edges),
@@ -338,7 +372,8 @@ class TopoServe:
         edge_set = {(min(u, v), max(u, v)) for (u, v) in req.edges if u != v}
         bucket = self.bucket_for(req.n_vertices, len(edge_set),
                                  _count_triangles(edge_set, req.n_vertices))
-        fut = TopoFuture(bucket)
+        rid, deadline = resolve_submit(request_id, deadline_s)
+        fut = TopoFuture(bucket, request_id=rid, deadline=deadline)
         with self._lock:
             self._queues[bucket].append((req, fut))
         _C_SUBMITTED.inc(instance=self._obs_instance,
@@ -359,7 +394,12 @@ class TopoServe:
         to a multiple of ``pad_batch_to`` so sharded plans always see a batch
         that divides the mesh.  Buckets are swept round-robin — one chunk per
         bucket per sweep — so sustained traffic into one bucket cannot starve
-        requests queued in the others."""
+        requests queued in the others.
+
+        Before each chunk executes, the TopoWatch sweep drops cancelled
+        futures and fails expired ones with ``DeadlineExceeded`` — both
+        counted per bucket — so the batch only carries requests somebody is
+        still waiting for."""
         if not self.pending():
             return 0  # keep idle poll loops out of the trace
         with obs.span("serve.drain", frontend="topo") as sp:
@@ -373,11 +413,40 @@ class TopoServe:
                                  for _ in range(min(len(q),
                                                     self.config.max_batch))]
                     if items:
-                        served += self._execute(b, items)
                         progressed = True
+                        items = self._sweep(b, items)
+                    if items:
+                        served += self._execute(b, items)
                 if not progressed:
                     sp.set(served=served)
                     return served
+
+    def _sweep(self, bucket: Bucket, items: list) -> list:
+        """Drop cancelled requests and fail expired ones (deadline sweep)."""
+        inst = self._obs_instance
+        lbl = self._bucket_label[bucket]
+        now = time.monotonic()
+        live = []
+        for (req, fut) in items:
+            if fut.cancelled():
+                _C_CANCELLED.inc(instance=inst, bucket=lbl)
+                _flight.record("serve", "cancelled_skip", frontend="topo",
+                               bucket=lbl, rid=fut.request_id or "")
+                continue
+            if fut.expired(now):
+                if fut._fail(DeadlineExceeded(
+                        f"request {fut.request_id or '?'} expired "
+                        f"{now - fut.deadline:.3f}s before drain pickup "
+                        f"(bucket {lbl})")):
+                    _C_DEADLINE.inc(instance=inst, bucket=lbl)
+                    _flight.record("serve", "deadline_exceeded",
+                                   frontend="topo", bucket=lbl,
+                                   rid=fut.request_id or "",
+                                   late_s=round(now - fut.deadline, 4))
+                    _flight.auto_dump("deadline_exceeded")
+                continue
+            live.append((req, fut))
+        return live
 
     def _execute(self, bucket: Bucket, items: list) -> int:
         inst = self._obs_instance
@@ -409,9 +478,11 @@ class TopoServe:
                 with obs.span("serve.sync"):
                     jax.block_until_ready(d.birth)
             except Exception as e:  # resolve, don't wedge waiting clients
-                for f in futs:
-                    f._fail(e)
-                _C_FAILED.inc(len(futs), instance=inst)
+                n_failed = sum(1 for f in futs if f._fail(e))
+                if n_failed:
+                    _C_FAILED.inc(n_failed, instance=inst)
+                _flight.record("serve", "batch_failed", frontend="topo",
+                               bucket=lbl, graphs=len(futs), error=repr(e))
                 return 0
             if self.config.record_batches:
                 self.executed_batches.append((bucket, reqs, tuple(futs)))
@@ -419,9 +490,13 @@ class TopoServe:
                 for i, f in enumerate(futs):
                     if repack_info is not None:
                         f.repack_class = repack_info.shape_class(i)
-                    f._resolve(jax.tree.map(lambda x: x[i], d))
+                    if f._resolve(jax.tree.map(lambda x: x[i], d)):
+                        _H_LATENCY.observe(f.latency_s(),
+                                           instance=inst, bucket=lbl)
         _C_SERVED.inc(len(futs), instance=inst, bucket=lbl)
         _C_BATCHES.inc(instance=inst, bucket=lbl)
+        _flight.record("serve", "batch", frontend="topo", bucket=lbl,
+                       graphs=len(futs))
         if n_pad_rows:
             _C_PADDED.inc(n_pad_rows, instance=inst)
         if repack_info is not None:
@@ -433,11 +508,59 @@ class TopoServe:
 
     # ------------------------------------------------------------- loops
 
+    def warmup(self) -> None:
+        """Build every bucket's plan through the process-wide plan cache.
+
+        Called by ``serve_forever`` before raising ``serve.ready`` so
+        ``/readyz`` flipping to 200 means plan construction cost is paid —
+        the first live request will not eat it.
+        """
+        for b in self._buckets:
+            self.plan_for(b)
+
+    def _loop_enter(self) -> None:
+        inst = self._obs_instance
+        _flight.record("serve", "loop_start", frontend="topo", instance=inst)
+        self.warmup()
+        _G_HEARTBEAT.set(time.time(), frontend="topo", instance=inst)
+        _G_READY.set(1, frontend="topo", instance=inst)
+
+    def _loop_exit(self) -> None:
+        inst = self._obs_instance
+        _G_READY.set(0, frontend="topo", instance=inst)
+        _flight.record("serve", "loop_stop", frontend="topo", instance=inst)
+
+    def _drain_guarded(self) -> int:
+        """One loop iteration: heartbeat + drain; flight-dump on escape.
+
+        ``drain`` fails co-batched futures on per-batch errors, so anything
+        escaping here is a scheduler bug — dump the flight ring before the
+        loop dies so the wreckage is on disk even with tracing off.
+        """
+        _G_HEARTBEAT.set(time.time(), frontend="topo",
+                         instance=self._obs_instance)
+        try:
+            return self.drain()
+        except BaseException as e:
+            _flight.record("serve", "drain_exception", frontend="topo",
+                           error=repr(e))
+            _flight.auto_dump("drain_exception")
+            raise
+
     def serve_forever(self, poll_s: float = 1e-3) -> None:
-        """Blocking drain loop (run on a dedicated thread); stop() exits it."""
-        while not self._stopped.is_set():
-            if self.drain() == 0:
-                self._stopped.wait(poll_s)
+        """Blocking drain loop (run on a dedicated thread); stop() exits it.
+
+        Warms the bucket plans then raises ``serve.ready`` (readiness) and
+        stamps ``serve.heartbeat_ts`` every iteration (liveness) — the
+        gauges behind ``/readyz`` and ``/healthz``.
+        """
+        self._loop_enter()
+        try:
+            while not self._stopped.is_set():
+                if self._drain_guarded() == 0:
+                    self._stopped.wait(poll_s)
+        finally:
+            self._loop_exit()
 
     async def serve_forever_async(self, poll_s: float = 1e-3) -> None:
         """Same loop for an asyncio host.  Each drain (jit dispatch +
@@ -446,9 +569,13 @@ class TopoServe:
         interleaving on the event loop."""
         import asyncio
 
-        while not self._stopped.is_set():
-            if await asyncio.to_thread(self.drain) == 0:
-                await asyncio.sleep(poll_s)
+        await asyncio.to_thread(self._loop_enter)
+        try:
+            while not self._stopped.is_set():
+                if await asyncio.to_thread(self._drain_guarded) == 0:
+                    await asyncio.sleep(poll_s)
+        finally:
+            self._loop_exit()
 
     def stop(self) -> None:
         self._stopped.set()

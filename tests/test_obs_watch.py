@@ -1,0 +1,536 @@
+"""TopoWatch: request context, deadlines, cancellation, SLO engine,
+flight recorder, and the HTTP exporter under concurrent scrapes."""
+import json
+import math
+import threading
+import time
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs import flight, slo
+from repro.obs.context import (
+    DeadlineExceeded,
+    current,
+    current_request_id,
+    new_request_id,
+    request_context,
+    resolve_submit,
+)
+from repro.obs.http import loop_health, readiness, start_http_server
+from repro.obs.metrics import (
+    Histogram,
+    MetricsRegistry,
+    bucket_count_over,
+    bucket_quantile,
+)
+from repro.serve import TopoServe, TopoServeConfig
+from repro.serve.futures import FutureCancelled, ServeFuture
+
+CFG = TopoServeConfig(dim=1, method="prunit", sublevel=False,
+                      max_batch=8, pad_batch_to=8)
+
+
+def _get(url: str, timeout: float = 10.0):
+    try:
+        with urllib.request.urlopen(url, timeout=timeout) as resp:
+            return resp.status, resp.read()
+    except urllib.error.HTTPError as e:
+        return e.code, e.read()
+
+
+# ------------------------------------------------------ histogram quantiles
+
+def test_bucket_quantile_uniform_exact():
+    # 100 observations spread uniformly over (0, 4] in 4 unit buckets:
+    # interpolation recovers the exact uniform quantiles
+    bounds = (1.0, 2.0, 3.0, 4.0)
+    counts = [25, 25, 25, 25, 0]
+    assert bucket_quantile(bounds, counts, 0.5) == pytest.approx(2.0)
+    assert bucket_quantile(bounds, counts, 0.25) == pytest.approx(1.0)
+    assert bucket_quantile(bounds, counts, 0.875) == pytest.approx(3.5)
+
+
+def test_bucket_quantile_empty_and_overflow():
+    bounds = (1.0, 2.0)
+    assert math.isnan(bucket_quantile(bounds, [0, 0, 0], 0.5))
+    # everything in +Inf overflow -> clamped to the largest finite bound
+    assert bucket_quantile(bounds, [0, 0, 10], 0.99) == pytest.approx(2.0)
+
+
+def test_bucket_count_over_interpolates():
+    bounds = (1.0, 2.0, 3.0)
+    counts = [10, 10, 10, 0]
+    # threshold mid-bucket: half of the containing bucket + all above
+    assert bucket_count_over(bounds, counts, 1.5) == pytest.approx(15.0)
+    assert bucket_count_over(bounds, counts, 3.0) == pytest.approx(0.0)
+
+
+def test_histogram_quantile_matches_numpy():
+    # uniform samples + uniform-in-bucket interpolation: the estimate must
+    # track np.quantile to within one bucket width
+    rng = np.random.default_rng(7)
+    samples = rng.uniform(0.0, 1.0, size=5000)
+    edges = tuple(np.linspace(0.02, 1.0, 50))  # width 0.02
+    reg = MetricsRegistry()
+    h = reg.histogram("t.lat", buckets=edges)
+    for s in samples:
+        h.observe(float(s))
+    for q in (0.1, 0.5, 0.9, 0.99):
+        est = h.quantile(q)
+        ref = float(np.quantile(samples, q))
+        assert abs(est - ref) < 0.02, (q, est, ref)
+    # monotone in q
+    qs = [h.quantile(q) for q in (0.1, 0.5, 0.9, 0.99)]
+    assert qs == sorted(qs)
+
+
+def test_histogram_quantile_label_superset():
+    reg = MetricsRegistry()
+    h = reg.histogram("t.lat2", buckets=(1.0, 2.0, 4.0))
+    for _ in range(10):
+        h.observe(0.5, bucket="a")
+    for _ in range(10):
+        h.observe(3.0, bucket="b")
+    assert h.quantile(0.5, bucket="a") <= 1.0
+    assert h.quantile(0.5, bucket="b") > 2.0
+    # no labels -> merged over both series
+    assert 1.0 <= h.quantile(0.5) <= 4.0
+    assert math.isnan(h.quantile(0.5, bucket="zzz"))
+
+
+# --------------------------------------------------------- request context
+
+def test_request_context_ambient_and_nesting():
+    assert current() is None
+    with request_context(deadline_s=10.0) as outer:
+        assert current_request_id() == outer.request_id
+        assert outer.deadline is not None
+        # inner without deadline inherits the outer budget
+        with request_context() as inner:
+            assert inner.request_id != outer.request_id
+            assert inner.deadline == outer.deadline
+        # explicit inner deadline is clamped to the outer one
+        with request_context(deadline_s=10_000.0) as inner2:
+            assert inner2.deadline == outer.deadline
+        with request_context(deadline_s=0.001) as inner3:
+            assert inner3.deadline < outer.deadline
+        assert current() is outer
+    assert current() is None
+
+
+def test_resolve_submit_precedence():
+    # explicit args win
+    rid, dl = resolve_submit("my-rid", None)
+    assert rid == "my-rid" and dl is None
+    # ambient context supplies both
+    with request_context(request_id="ctx-rid", deadline_s=5.0) as ctx:
+        rid, dl = resolve_submit(None, None)
+        assert rid == "ctx-rid" and dl == ctx.deadline
+        # explicit relative deadline still clamped to the ambient one
+        rid, dl = resolve_submit(None, 10_000.0)
+        assert dl == ctx.deadline
+    # no context: fresh mint, no deadline
+    rid, dl = resolve_submit(None, None)
+    assert rid and dl is None
+    assert new_request_id() != new_request_id()
+
+
+def test_request_context_thread_isolation():
+    seen = {}
+
+    def worker():
+        seen["rid"] = current_request_id()
+
+    with request_context(request_id="outer-only"):
+        t = threading.Thread(target=worker)
+        t.start()
+        t.join()
+    # a fresh thread never inherits the submitter's context
+    assert seen["rid"] is None
+
+
+# ------------------------------------------------- future state transitions
+
+def test_future_cancel_wins_race():
+    f = ServeFuture(request_id="r-x")
+    assert f.cancel() is True
+    assert f.cancelled() and f.done()
+    assert f._resolve("late") is False      # drain racing the cancel loses
+    assert f._fail(RuntimeError("x")) is False
+    assert f.cancel() is False              # second cancel is a no-op
+    with pytest.raises(FutureCancelled):
+        f.result(timeout=1)
+
+
+def test_future_resolve_blocks_cancel():
+    f = ServeFuture()
+    assert f._resolve(42) is True
+    assert f.cancel() is False
+    assert not f.cancelled()
+    assert f.result(timeout=1) == 42
+
+
+def test_future_expired():
+    now = time.monotonic()
+    assert not ServeFuture(deadline=None).expired()
+    assert ServeFuture(deadline=now - 1).expired()
+    assert not ServeFuture(deadline=now + 60).expired()
+    assert ServeFuture(deadline=now + 60).expired(now=now + 61)
+
+
+# --------------------------------------- cancel-leak regression (satellite)
+
+def test_cancelled_request_never_executes():
+    """The queued-forever leak: a caller abandons a request (cancel after a
+    result timeout) — the drain must skip it, not burn a kernel slot."""
+    server = TopoServe(TopoServeConfig(dim=1, method="prunit",
+                                       sublevel=False, max_batch=8,
+                                       pad_batch_to=8, record_batches=True))
+    cancelled_before = server.stats["cancelled"]
+    fut = server.submit(edges=[(0, 1), (1, 2)], n_vertices=3)
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)            # no drain loop running
+    assert fut.cancel()
+    with pytest.raises(FutureCancelled):
+        fut.result(timeout=1)
+    n_batches = server.stats["batches"]
+    server.drain()
+    # the drain swept the cancelled request without executing anything
+    assert server.stats["batches"] == n_batches
+    assert server.executed_batches == []
+    assert server.pending() == 0
+    assert server.stats["cancelled"] == cancelled_before + 1
+
+
+def test_cancel_mixed_with_live_requests():
+    server = TopoServe(CFG)
+    live = [server.submit(edges=[(0, 1), (1, 2)], n_vertices=3)
+            for _ in range(3)]
+    dead = server.submit(edges=[(0, 1), (1, 2)], n_vertices=3)
+    dead.cancel()
+    server.drain()
+    for f in live:
+        assert f.result(timeout=30) is not None
+    with pytest.raises(FutureCancelled):
+        dead.result(timeout=1)
+
+
+# ------------------------------------------------------------ deadline sweep
+
+def test_deadline_sweep_fails_expired_requests(tmp_path):
+    flight.configure(dump_dir=str(tmp_path))
+    try:
+        server = TopoServe(CFG)
+        missed_before = server.stats["deadline_exceeded"]
+        expired = server.submit(edges=[(0, 1), (1, 2)], n_vertices=3,
+                                deadline_s=0.0)
+        ok = server.submit(edges=[(0, 1), (1, 2)], n_vertices=3,
+                           deadline_s=60.0)
+        time.sleep(0.01)
+        server.drain()
+        with pytest.raises(DeadlineExceeded):
+            expired.result(timeout=1)
+        assert ok.result(timeout=30) is not None
+        assert server.stats["deadline_exceeded"] == missed_before + 1
+        # per-bucket attribution on the shared serve counter
+        by_bucket = obs.counter("serve.deadline_exceeded").labeled("bucket")
+        assert sum(by_bucket.values()) >= 1
+    finally:
+        flight.configure(dump_dir="results/obs")
+
+
+def test_submit_stamps_ambient_request_id():
+    server = TopoServe(CFG)
+    with request_context(request_id="req-77"):
+        fut = server.submit(edges=[(0, 1)], n_vertices=2)
+    assert fut.request_id == "req-77"
+    explicit = server.submit(edges=[(0, 1)], n_vertices=2,
+                             request_id="req-88", deadline_s=60.0)
+    assert explicit.request_id == "req-88"
+    assert explicit.deadline is not None
+    server.drain()
+    assert fut.result(timeout=30) is not None
+
+
+# ------------------------------------------------- SLO engine (synthetic t)
+
+def _err_spec(rules):
+    return slo.SLOSpec(name="t-err", kind="error_rate",
+                       bad="t.bad", total="t.total",
+                       budget=0.01, rules=rules)
+
+
+def test_slo_engine_breach_and_recovery_synthetic_clock():
+    reg = MetricsRegistry()
+    bad, total = reg.counter("t.bad"), reg.counter("t.total")
+    breaches = []
+    engine = slo.SLOEngine(
+        [_err_spec((slo.BurnRule(long_s=10.0, short_s=5.0, factor=1.0),))],
+        registry=reg, on_breach=lambda name, v: breaches.append(name))
+    breach_counter = obs.counter("slo.breaches_total")
+    n0 = breach_counter.total(slo="t-err")
+
+    # no traffic yet -> no_data, nothing fires
+    st = engine.tick(now=0.0)
+    assert st["t-err"]["status"] == "no_data"
+
+    # 50% bad over a 1% budget -> burn 50x on both windows -> breach
+    total.inc(100)
+    bad.inc(50)
+    st = engine.tick(now=1.0)
+    assert st["t-err"]["status"] == "breach"
+    assert breaches == ["t-err"]
+    assert breach_counter.total(slo="t-err") == n0 + 1
+
+    # still breaching: the counter counts TRANSITIONS, not ticks
+    st = engine.tick(now=2.0)
+    assert st["t-err"]["status"] == "breach"
+    assert breach_counter.total(slo="t-err") == n0 + 1
+    assert breaches == ["t-err"]
+
+    # clean traffic + windows past the bad burst -> recovery
+    total.inc(1000)
+    st = engine.tick(now=20.0)
+    assert st["t-err"]["status"] == "ok"
+    assert breach_counter.total(slo="t-err") == n0 + 1
+    assert engine.breached() == []
+
+    # a second distinct breach increments again
+    bad.inc(600)
+    total.inc(600)
+    st = engine.tick(now=21.0)
+    assert st["t-err"]["status"] == "breach"
+    assert breach_counter.total(slo="t-err") == n0 + 2
+
+
+def test_slo_multi_window_short_blip_does_not_fire():
+    # a burst confined to the long window with a clean short window must
+    # NOT fire (the short window proves the problem is still happening)
+    reg = MetricsRegistry()
+    bad, total = reg.counter("t.bad"), reg.counter("t.total")
+    engine = slo.SLOEngine(
+        [_err_spec((slo.BurnRule(long_s=100.0, short_s=5.0, factor=1.0),))],
+        registry=reg, on_breach=lambda name, v: None)
+    engine.tick(now=0.0)
+    bad.inc(50)
+    total.inc(100)
+    engine.tick(now=1.0)                    # burst lands here (breach)
+    total.inc(10_000)                       # then a long clean stretch
+    engine.tick(now=90.0)
+    total.inc(500)                          # clean traffic in short window
+    st = engine.tick(now=96.0)              # short window: clean only
+    v = st["t-err"]
+    assert v["status"] == "ok", v
+    r = v["rules"][0]
+    assert r["burn_long"] is not None and r["burn_long"] > 0
+    assert r["burn_short"] == pytest.approx(0.0)
+
+
+def test_slo_latency_spec_observed_quantile():
+    reg = MetricsRegistry()
+    h = reg.histogram("t.lat3", buckets=(0.01, 0.1, 1.0))
+    spec = slo.SLOSpec(name="t-lat", kind="latency", histogram="t.lat3",
+                       quantile=0.5, ceiling_s=0.1, budget=0.5,
+                       rules=(slo.BurnRule(10.0, 5.0, 1.0),))
+    engine = slo.SLOEngine([spec], registry=reg,
+                           on_breach=lambda name, v: None)
+    engine.tick(now=0.0)
+    for _ in range(100):
+        h.observe(0.5)                      # all observations over ceiling
+    st = engine.tick(now=1.0)
+    v = st["t-lat"]
+    assert v["status"] == "breach"
+    assert v["observed_q_s"] > 0.1
+    assert v["ceiling_s"] == 0.1
+
+
+def test_slo_spec_validation():
+    with pytest.raises(ValueError):
+        slo.SLOSpec(name="x", kind="nope")
+    with pytest.raises(ValueError):
+        slo.SLOSpec(name="x", kind="latency")  # no histogram/ceiling
+    with pytest.raises(ValueError):
+        slo.BurnRule(long_s=1.0, short_s=5.0)  # long < short
+    with pytest.raises(ValueError):
+        slo.SLOEngine([_err_spec(slo.DEFAULT_RULES),
+                       _err_spec(slo.DEFAULT_RULES)])  # duplicate names
+
+
+def test_default_serve_slos_shape():
+    specs = slo.default_serve_slos()
+    names = [s.name for s in specs]
+    assert len(names) == len(set(names))
+    assert len(specs) == 2 * 4 + 4  # p50+p99 per bucket + 4 global
+    assert "serve-deadline-miss" in names
+    assert "stream-skip-rate" in names
+
+
+def test_install_uninstall_roundtrip():
+    reg = MetricsRegistry()
+    engine = slo.SLOEngine([_err_spec(slo.DEFAULT_RULES)], registry=reg,
+                           on_breach=lambda name, v: None)
+    prev = slo.install(engine)
+    try:
+        assert slo.installed() is engine
+        assert "t-err" in slo.slo_status(tick=True)
+    finally:
+        assert slo.install(prev) is engine
+    if prev is None:
+        assert slo.slo_status() == {}
+
+
+# ------------------------------------------------------------ flight recorder
+
+def test_flight_ring_bounded_and_ordered():
+    flight.configure(capacity=8)
+    try:
+        def worker():
+            for i in range(30):
+                flight.record("test", f"ev-{i}", i=i)
+
+        t = threading.Thread(target=worker, name="flight-capacity-probe")
+        t.start()
+        t.join()
+        mine = [e for e in flight.events()
+                if e["thread"] == "flight-capacity-probe"]
+        assert len(mine) == 8               # bounded by the configured cap
+        assert [e["name"] for e in mine] == [f"ev-{i}" for i in
+                                             range(22, 30)]  # newest kept
+        seqs = [e["seq"] for e in flight.events()]
+        assert seqs == sorted(seqs)         # global total order
+    finally:
+        flight.configure(capacity=512)
+
+
+def test_flight_dump_roundtrip(tmp_path):
+    flight.record("test", "dump-probe", answer=42)
+    path = flight.dump("unit-test", path=str(tmp_path / "FLIGHT_t.json"))
+    assert flight.last_dump_path() == path
+    with open(path) as fh:
+        doc = json.load(fh)
+    assert doc["schema"] == 1
+    assert doc["reason"] == "unit-test"
+    assert any(e["name"] == "dump-probe" and e["attrs"]["answer"] == 42
+               for e in doc["events"])
+    assert "metrics" in doc and "slo" in doc
+
+
+def test_flight_auto_dump_rate_limited(tmp_path):
+    flight.clear()
+    flight.configure(dump_dir=str(tmp_path), min_dump_interval_s=3600.0)
+    try:
+        flight.record("test", "incident")
+        p1 = flight.auto_dump("first")
+        assert p1 is not None
+        assert flight.auto_dump("second") is None  # within the interval
+        assert flight.last_dump_path() == p1
+    finally:
+        flight.configure(dump_dir="results/obs", min_dump_interval_s=30.0)
+        flight.clear()
+
+
+# ------------------------------------------------------------- HTTP exporter
+
+def test_loop_health_and_readiness_logic():
+    reg = MetricsRegistry()
+    assert loop_health(reg)["status"] == "no_loops"
+    assert readiness(reg)["status"] == "not_ready"
+    hb = reg.gauge("serve.heartbeat_ts")
+    hb.set(time.time(), frontend="topo", instance="t-0")
+    h = loop_health(reg, max_age_s=5.0)
+    assert h["status"] == "ok" and "topo/t-0" in h["loops"]
+    hb.set(time.time() - 100, frontend="topo", instance="t-0")
+    h = loop_health(reg, max_age_s=5.0)
+    assert h["status"] == "stale" and h["stale"] == ["topo/t-0"]
+    rdy = reg.gauge("serve.ready")
+    rdy.set(1, frontend="topo", instance="t-0")
+    assert readiness(reg)["status"] == "ready"
+    rdy.set(0, frontend="topo", instance="t-0")
+    assert readiness(reg)["status"] == "not_ready"
+
+
+def test_http_endpoints_fresh_registry():
+    reg = MetricsRegistry()
+    reg.counter("unit.c").inc(3, kind="x")
+    hb = reg.gauge("serve.heartbeat_ts")
+    srv = start_http_server(port=0, registry=reg, health_max_age_s=1.0)
+    try:
+        code, body = _get(srv.url + "/metrics")
+        assert code == 200
+        assert "# TYPE unit_c_total counter" in body.decode()
+        code, _ = _get(srv.url + "/readyz")
+        assert code == 503                  # nothing warmed on this registry
+        code, body = _get(srv.url + "/healthz")
+        assert code == 200                  # no loops -> alive
+        assert json.loads(body)["status"] == "no_loops"
+        hb.set(time.time() - 100, frontend="topo", instance="t-0")
+        code, body = _get(srv.url + "/healthz")
+        assert code == 503
+        assert json.loads(body)["status"] == "stale"
+        code, body = _get(srv.url + "/varz")
+        assert code == 200
+        assert "unit.c" in json.loads(body)["metrics"]
+        code, body = _get(srv.url + "/slo")
+        assert code == 200 and "status" in json.loads(body)
+        code, body = _get(srv.url + "/nope")
+        assert code == 404
+        code, body = _get(srv.url + "/")
+        assert "/metrics" in json.loads(body)["endpoints"]
+    finally:
+        srv.stop()
+
+
+def _assert_prom_parseable(text: str) -> int:
+    n = 0
+    for line in text.splitlines():
+        if not line or line.startswith("#"):
+            continue
+        name_part, _, value_part = line.rpartition(" ")
+        assert name_part, line
+        float(value_part)                   # must parse as a sample value
+        n += 1
+    return n
+
+
+def test_metrics_scrape_concurrent_with_drains():
+    """8 scrapers hammering /metrics while drains mutate the registry:
+    every response must be complete, parseable Prometheus text."""
+    server = TopoServe(CFG)
+    srv = start_http_server(port=0)
+    stop = threading.Event()
+    errors: list[BaseException] = []
+    n_scrapes = [0] * 8
+
+    def scraper(i: int):
+        while not stop.is_set():
+            try:
+                code, body = _get(srv.url + "/metrics", timeout=10)
+                assert code == 200
+                assert _assert_prom_parseable(body.decode()) > 0
+                n_scrapes[i] += 1
+            except BaseException as e:  # noqa: BLE001 - collected for report
+                errors.append(e)
+                return
+
+    threads = [threading.Thread(target=scraper, args=(i,), daemon=True)
+               for i in range(8)]
+    try:
+        for t in threads:
+            t.start()
+        for _ in range(4):                  # drains mutate counters mid-scrape
+            futs = [server.submit(edges=[(0, 1), (1, 2), (2, 0)],
+                                  n_vertices=3) for _ in range(6)]
+            server.drain()
+            for f in futs:
+                f.result(timeout=60)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=10)
+        srv.stop()
+    assert not errors, errors[0]
+    assert all(n > 0 for n in n_scrapes), n_scrapes
