@@ -35,6 +35,7 @@ def run(report: Report) -> None:
                         ((64, 256), (128, 512)))
 
     bench_auction_lap(report)
+    bench_auction_collapsed(report)
     bench_sinkhorn_lse(report)
 
 
@@ -52,6 +53,43 @@ def bench_auction_lap(report: Report) -> None:
         report.add("kernel_auction_lap", f"B{b}_M{m}_converged_frac",
                    float(jnp.mean(conv)))
         report.add("kernel_auction_lap", f"B{b}_M{m}_ref_max_abs_diff", diff)
+
+
+def bench_auction_collapsed(report: Report) -> None:
+    """Collapsed forward/reverse auction kernel vs its jnp oracle.
+
+    Random reduced-cost problems (cbar = pp − diag1 − diag2 over partially
+    masked slots) — the K×K formulation the exact_w backend solves with
+    ``collapse="on"``.  Kernel-vs-ref parity is semantic (same solver);
+    optimality vs Hungarian is asserted in metrics_bench / tests.
+    """
+    kg = jax.random.PRNGKey(11)
+    for (b, k) in ((64, 16), (256, 16)):
+        ks = jax.random.split(kg, 5)
+        kg = ks[0]
+        pp = jax.random.uniform(ks[1], (b, k, k), jnp.float32, 0.0, 4.0)
+        d1 = jax.random.uniform(ks[2], (b, k), jnp.float32, 0.0, 2.0)
+        d2 = jax.random.uniform(ks[3], (b, k), jnp.float32, 0.0, 2.0)
+        nreal = jax.random.randint(ks[4], (b, 2), k // 2, k + 1)
+        idx = jnp.arange(k)
+        keep1 = idx[None, :] < nreal[:, :1]
+        keep2 = idx[None, :] < nreal[:, 1:]
+        valid = keep1[:, :, None] & keep2[:, None, :]
+        cbar = jnp.where(valid, pp - d1[:, :, None] - d2[:, None, :], 0.0)
+        (_, tot, conv, rounds, _), t = timed(
+            ops.auction_lap_collapsed, cbar, keep1, keep2, repeats=1)
+        _, tot_ref, _, _, _ = jax.vmap(ref.auction_lap_collapsed_ref)(
+            cbar, keep1, keep2)
+        diff = float(jnp.max(jnp.abs(tot - tot_ref)))
+        report.add("kernel_auction_collapsed", f"B{b}_K{k}_pallas_s", t)
+        report.add("kernel_auction_collapsed", f"B{b}_K{k}_solves_per_s",
+                   b / max(t, 1e-9))
+        report.add("kernel_auction_collapsed", f"B{b}_K{k}_converged_frac",
+                   float(jnp.mean(conv)))
+        report.add("kernel_auction_collapsed", f"B{b}_K{k}_rounds_mean",
+                   float(jnp.mean(rounds)))
+        report.add("kernel_auction_collapsed",
+                   f"B{b}_K{k}_ref_max_abs_diff", diff)
 
 
 def bench_sinkhorn_lse(report: Report) -> None:

@@ -10,9 +10,15 @@ Seven panels (docs/ARCHITECTURE.md §MetricEngine):
   against the host references (SW within rtol 1e-5 of ``sw_dense``;
   Sinkhorn within 5% of exact W2) — failures are counted and raised;
 * **auction parity** — the exact-Wasserstein acceptance sweep: the batched
-  auction-LAP ``exact_w`` backend vs the Hungarian/scipy oracle within
-  atol 1e-5 on randomized masked pairs (0 mismatches required), plus the
-  bisection ``bottleneck_approx`` vs ``bottleneck_exact``;
+  auction-LAP ``exact_w`` backend (collapsed forward/reverse formulation)
+  vs the Hungarian/scipy oracle within atol 1e-5 on randomized masked
+  pairs (0 mismatches required), the collapsed-vs-expanded rounds
+  reduction (≥ 5× asserted), plus the bisection ``bottleneck_approx`` vs
+  ``bottleneck_exact``;
+* **stage1 exact** — ``stage1_backend="exact_w"`` serving: exhaustive
+  exact stage-1 (recall 1.0 by construction, asserted against an
+  independent ``pairwise`` ground truth) with price-cache warm starts
+  across drains, vs the LSH+Gram+re-rank funnel on the same corpus;
 * **blocked Sinkhorn** — ``impl="blocked"`` vs ``impl="dense"`` agreement
   at tile-fitting sizes (f32-roundoff consistency), and the memory-ceiling
   demo: blocked runs full-tensor clouds whose dense cost matrices dwarf
@@ -141,8 +147,13 @@ def _bench_auction_parity(report: Report, quick: bool) -> tuple[int, int]:
     """exact_w (auction-LAP) vs the Hungarian oracle; returns (checked, failed).
 
     The acceptance sweep for the exact backend: randomized masked diagram
-    pairs, atol 1e-5 on W2, 0 mismatches required.  The bisection
-    bottleneck backend rides along against ``bottleneck_exact``.
+    pairs, atol 1e-5 on W2, 0 mismatches required — run on the collapsed
+    forward/reverse formulation (the production default).  The legacy
+    expanded formulation solves the same pairs as the rounds denominator:
+    the collapse speedup (``rounds_reduction``) must be ≥ 5× and the two
+    formulations must agree.  The bisection bottleneck backend (also on
+    collapsed 0/1 feasibility solves) rides along against
+    ``bottleneck_exact``.
     """
     n_pairs = 60 if quick else 200
     rng = np.random.default_rng(35)
@@ -152,9 +163,14 @@ def _bench_auction_parity(report: Report, quick: bool) -> tuple[int, int]:
     d1 = jax.tree.map(lambda *xs: jnp.stack(xs), *[a for a, _ in pairs])
     d2 = jax.tree.map(lambda *xs: jnp.stack(xs), *[b for _, b in pairs])
     (w, conv, rounds), t_w = timed(
-        lambda a, b: exact_w_info(a, b, k=1, q=2.0, n_points=16), d1, d2,
-        repeats=1)
+        lambda a, b: exact_w_info(a, b, k=1, q=2.0, n_points=16,
+                                  collapse="on"), d1, d2, repeats=1)
     w, conv, rounds = np.asarray(w), np.asarray(conv), np.asarray(rounds)
+    w_off, conv_off, rounds_off = exact_w_info(d1, d2, k=1, q=2.0,
+                                               n_points=16, collapse="off")
+    w_off = np.asarray(w_off)
+    rounds_off = np.asarray(rounds_off)
+    formulation_diff = float(np.max(np.abs(w - w_off)))
     bn = np.asarray(bottleneck_approx(d1, d2, k=1, n_points=16))
 
     checked = failed = bn_failed = 0
@@ -172,8 +188,25 @@ def _bench_auction_parity(report: Report, quick: bool) -> tuple[int, int]:
     report.add("metrics_auction_parity", "bottleneck_failed", bn_failed)
     report.add("metrics_auction_parity", "converged_frac", conv.mean())
     report.add("metrics_auction_parity", "rounds_mean", rounds.mean())
+    report.add("metrics_auction_parity", "rounds_mean_expanded",
+               rounds_off.mean())
+    reduction = float(rounds_off.mean() / max(rounds.mean(), 1e-9))
+    report.add("metrics_auction_parity", "rounds_reduction", reduction)
+    report.add("metrics_auction_parity", "collapse_vs_expanded_max_diff",
+               formulation_diff)
     report.add("metrics_auction_parity", f"B{n_pairs}_pairs_per_s",
                n_pairs / max(t_w, 1e-9))
+    if not (np.asarray(conv_off).all() and conv.all()):
+        raise AssertionError("auction parity sweep did not converge "
+                             "(collapsed and expanded must both certify)")
+    if formulation_diff > 1e-4:
+        raise AssertionError(
+            f"collapsed and expanded exact_w disagree by {formulation_diff}")
+    if reduction < 5.0:
+        raise AssertionError(
+            f"collapsed auction rounds reduction {reduction:.2f}x < 5x "
+            f"(collapsed {rounds.mean():.1f} vs expanded "
+            f"{rounds_off.mean():.1f} mean rounds)")
     return checked, failed + bn_failed
 
 
@@ -287,6 +320,84 @@ def _bench_rerank_recall(report: Report, quick: bool) -> float:
     return recall
 
 
+def _bench_stage1_exact(report: Report, quick: bool) -> None:
+    """``stage1_backend="exact_w"`` vs LSH+Gram+re-rank on one corpus.
+
+    The exact stage-1 scores every query against every stored cloud
+    (recall 1.0 by construction — the panel asserts its top-k distances
+    match an independently computed exhaustive ``pairwise`` ground truth),
+    then repeats the batch to measure the price-cache warm-start effect
+    (hit rate + rounds drop across drains).  The two-stage LSH funnel runs
+    the same queries for the cost/recall comparison.
+    """
+    corpus_n = 256 if quick else 1024
+    q_n = 8 if quick else 16
+    k = 10
+    rng = np.random.default_rng(39)
+    seeds = seed_diagram_arrays(rng, n_seeds=32, s=16)
+    corpus = noisy_copies(seeds, rng, corpus_n, 0.02, 0.4)
+    queries = noisy_copies(seeds, rng, q_n, 0.01, 0.02)
+
+    cfg = TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8)
+    index = TopoIndex(cfg)
+    index.add(corpus)
+    srv = SimilarityServe(index=index, stage1_backend="exact_w")
+
+    t0 = time.perf_counter()
+    ids1, dists1, backends1 = srv._stage1_exact(queries, k)
+    t_cold = time.perf_counter() - t0
+    assert all(b == "exact_w" for row in backends1 for b in row)
+    rounds_cold = srv.stats["auction_rounds"]
+
+    t0 = time.perf_counter()
+    ids_w, dists_w, _ = srv._stage1_exact(queries, k)
+    t_warm = time.perf_counter() - t0
+    st = srv.stats
+    rounds_warm = st["auction_rounds"] - rounds_cold
+    hit_rate = st["warm_start_hits"] / max(
+        st["warm_start_hits"] + st["warm_start_misses"], 1)
+
+    # recall 1.0 by construction: the exhaustive pairwise ground truth must
+    # produce the same top-k distances (ids may permute under exact ties)
+    gt = np.asarray(pairwise(queries, index.clouds(np.arange(len(index))),
+                             metric="exact_w", k=cfg.k, cap=cfg.cap,
+                             n_points=cfg.n_points, block_rows=2048))
+    gt_topk = np.sort(gt, axis=-1)[:, :k]
+    dist_err = float(np.max(np.abs(np.asarray(dists1) - gt_topk)))
+    if dist_err > 1e-5:
+        raise AssertionError(
+            f"stage1 exact_w top-{k} distances diverge from the "
+            f"exhaustive ground truth by {dist_err}")
+    if ids_w != ids1:
+        raise AssertionError(
+            "warm-started stage1 exact_w returned different neighbors")
+
+    # the two-stage funnel on the same corpus/queries, for comparison
+    cfg2 = TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8,
+                           coarse="lsh", lsh_bits=128, lsh_overfetch=8)
+    index2 = TopoIndex(cfg2)
+    index2.add(corpus)
+    srv2 = SimilarityServe(index=index2, rerank="exact_w", overfetch=4)
+    t0 = time.perf_counter()
+    res = index2.query(queries, k=k * srv2.overfetch)
+    ids2, _, _ = srv2._rerank_exact(queries, res)
+    t_two_stage = time.perf_counter() - t0
+    hits = sum(len(set(ids1[i][:k]) & set(ids2[i][:k])) for i in range(q_n))
+    lsh_recall = hits / (k * q_n)
+
+    report.add("metrics_stage1_exact", "corpus", corpus_n)
+    report.add("metrics_stage1_exact", "queries", q_n)
+    report.add("metrics_stage1_exact", "pairs", q_n * corpus_n)
+    report.add("metrics_stage1_exact", "cold_s", t_cold)
+    report.add("metrics_stage1_exact", "warm_s", t_warm)
+    report.add("metrics_stage1_exact", "rounds_cold", rounds_cold)
+    report.add("metrics_stage1_exact", "rounds_warm", rounds_warm)
+    report.add("metrics_stage1_exact", "warm_hit_rate", hit_rate)
+    report.add("metrics_stage1_exact", "gt_max_abs_diff", dist_err)
+    report.add("metrics_stage1_exact", "two_stage_s", t_two_stage)
+    report.add("metrics_stage1_exact", "lsh_recall_vs_exact", lsh_recall)
+
+
 def _bench_two_stage_serve(report: Report, quick: bool) -> None:
     """Per-stage stats through the real SimilarityServe two-phase drain."""
     from benchmarks.fig2_clustering import FAMILIES
@@ -373,6 +484,7 @@ def run(report: Report, quick: bool = False) -> None:
     a_checked, a_failed = _bench_auction_parity(report, quick)
     _bench_blocked_sinkhorn(report, quick)   # asserts internally
     recall = _bench_rerank_recall(report, quick)
+    _bench_stage1_exact(report, quick)       # asserts internally
     _bench_two_stage_serve(report, quick)    # asserts internally
     bursts, hits, false_pos = _bench_drift(report, quick)
     if failed:

@@ -104,6 +104,16 @@ SUITES = {
         references=(
             RefSpec("*.recall_at_10", "higher", rel_band=0.03,
                     note="two-stage retrieval quality (CI asserts >= 0.95)"),
+            RefSpec("*.rounds_mean", "lower", rel_band=0.30,
+                    note="collapsed auction bidding rounds per pair — the "
+                         "perf_opt target; 'rounds' is an info token so "
+                         "this gate must be explicit"),
+            RefSpec("*.rounds_reduction", "higher", rel_band=0.30,
+                    note="expanded/collapsed rounds ratio (>= 5x asserted "
+                         "in-bench)"),
+            RefSpec("*.warm_hit_rate", "higher", rel_band=0.10,
+                    note="price-cache warm-start hit rate on repeated "
+                         "stage1 exact drains"),
             RefSpec("*_bytes*", "lower", rel_band=0.0,
                     note="analytic working-set sizes; any growth is an "
                          "algorithmic change, not jitter"),

@@ -208,6 +208,16 @@ class TopoIndex:
         bits = (centered @ self._projection()) > 0
         return np.packbits(bits, axis=-1)
 
+    def query_codes(self, d: Diagrams) -> np.ndarray:
+        """(B, lsh_bits/8) packed LSH bucket codes of a query batch.
+
+        Pure in ``(config, d)`` and computed regardless of the ``coarse``
+        setting — the serve-level auction price cache keys warm-start
+        vectors by these codes even when the coarse Hamming stage is off
+        (``repro.metrics.price_cache``).
+        """
+        return self._lsh_codes(np.asarray(self.embed(d)))
+
     # -------------------------------------------------------- add / query
 
     def add(self, d: Diagrams, ids: Optional[Sequence[str]] = None) -> list[str]:

@@ -32,6 +32,32 @@ deterministic index-order completion of any still-free rows guarantee the
 kernel always returns a perfect matching; ``converged`` reports whether
 the reported matching came from one of the two finest ε rungs (the tight
 suboptimality guarantee).
+
+Collapsed (reservoir-free) formulation
+--------------------------------------
+The diagram matrices this kernel exists for are *degenerate*: half the
+rows/columns are identical diagonal reservoirs, and the M-way ties make
+the reservoir block fight over equal-cost slots for hundreds of rounds.
+``auction_solve_collapsed`` solves the same optimum on the K×K *reduced*
+costs ``cbar[i, j] = cost(i→j) − cost(i→Δ) − cost(Δ→j)`` plus ONE
+pseudo-object ``OUT`` (price fixed at 0, unlimited capacity — the whole
+reservoir block collapsed into a single multi-unit slot, the
+transportation-auction variant), so no reservoir tie ever reaches the
+bidding loop.  Because the collapsed problem is *asymmetric* (persons may
+stay OUT, objects may stay unmatched), the per-scale loop is a **combined
+forward/reverse auction**: forward rounds have free persons bid (OUT is
+always a zero-value fallback), reverse rounds have unmatched objects with
+stale positive prices bid for persons through the profit vector ``pi`` —
+the classic repair for prices stranded above the λ = 0 floor by scale
+resets or warm starts, without which ε-scaling loses its optimality
+guarantee on asymmetric problems.  Warm starts enter as ``price0``
+(max-normalized units, what the solver also returns): any nonnegative
+price vector is safe — the reverse phase re-grounds stale prices — which
+is what makes the serve-level LSH-bucket price cache sound.  A warm lane
+(any nonzero ``price0``) additionally skips the annealing ladder and runs
+straight at the finest ε — coarse scales would only inflate the
+already-equilibrated prices and then pay reverse rounds undoing it —
+which is where the measured warm-repeat round reduction comes from.
 """
 from __future__ import annotations
 
@@ -46,6 +72,11 @@ from jax.experimental.pallas import tpu as pltpu
 DEFAULT_EPS0 = 0.25
 DEFAULT_EPS_FACTOR = 5.0
 DEFAULT_N_SCALES = 10
+DEFAULT_REV_EVERY = 8
+
+# collapsed-assignment code for "person matched to the collapsed diagonal
+# reservoir" (the OUT pseudo-object); -1 keeps meaning "free"
+OUT = -2
 
 
 def default_max_rounds(m: int) -> int:
@@ -174,6 +205,264 @@ def auction_solve(cost, eps0: float = DEFAULT_EPS0,
     return assign, total, converged, rounds
 
 
+# --------------------------------------------------------------------------
+# collapsed (reservoir-free) forward/reverse auction
+# --------------------------------------------------------------------------
+
+def collapsed_bid_round(a, price, pi, p2o, o2p, eps):
+    """One synchronous *forward* round of the collapsed auction.
+
+    ``a``: (K, K) benefit = −reduced-cost, ``-inf`` at invalid pairs;
+    ``price``: (K,) real-object prices; ``pi``: (K,) person profits;
+    ``p2o`` ∈ {OUT, −1=free, j}; ``o2p`` ∈ {−1=unowned, i}.  Every free
+    person's option set is its real objects *plus* OUT (value 0, price
+    pinned at 0, unlimited capacity): persons whose best real value is
+    ≤ 0 take OUT immediately — the collapsed reservoir absorbs any number
+    of takers in one round, which is exactly the tie blowup the expanded
+    matrix pays ~M rounds for — and the rest bid best-over-second-best + ε
+    with OUT folded into the second-best.
+    """
+    k = a.shape[-1]
+    idx = jnp.arange(k)
+    free = p2o == -1
+    v = a - price[None, :]
+    j_star = jnp.argmax(v, axis=-1)
+    v1 = jnp.max(v, axis=-1)
+    v2 = jnp.max(jnp.where(idx[None, :] == j_star[:, None], -jnp.inf, v),
+                 axis=-1)
+    v2o = jnp.maximum(v2, 0.0)         # second-best option including OUT
+    take_out = free & (v1 <= 0.0)      # OUT is (weakly) the best option
+    bid_ok = free & (v1 > 0.0)
+    aj = jnp.take_along_axis(a, j_star[:, None], axis=-1)[:, 0]
+    bid = aj - v2o + eps
+    bids = jnp.where(bid_ok[:, None] & (j_star[:, None] == idx[None, :]),
+                     bid[:, None], -jnp.inf)          # (person, object)
+    best = jnp.max(bids, axis=0)
+    winner = jnp.argmax(bids, axis=0)
+    has = best > -jnp.inf
+    price = jnp.where(has, best, price)
+    lost = jnp.any(has[None, :] & (o2p[None, :] == idx[:, None]), axis=-1)
+    p2o = jnp.where(lost, -1, p2o)
+    o2p = jnp.where(has, winner, o2p)
+    won = jnp.max(jnp.where(has[None, :] & (winner[None, :] == idx[:, None]),
+                            idx[None, :], -1), axis=-1)
+    p2o = jnp.where(won >= 0, won, p2o)
+    # winners' profits: value of the second-best option they forwent, −ε —
+    # the ε-CS-consistent dual update the reverse rounds price against
+    pi = jnp.where(won >= 0, v2o - eps, pi)
+    pi = jnp.where(take_out, 0.0, pi)
+    p2o = jnp.where(take_out, OUT, p2o)
+    return price, pi, p2o, o2p
+
+
+def collapsed_reverse_round(a, price, pi, p2o, o2p, keep2, eps):
+    """One synchronous *reverse* round: stale unmatched objects bid.
+
+    Bidders are real objects that are unowned yet priced above the λ = 0
+    floor (stranded there by a scale-boundary reset or a warm-start price
+    vector).  Each computes its best person through the profit vector
+    (``β1 = max_i a[i,j] − pi[i]``): below ``λ + ε`` it *drops out*
+    (price := 0, the state the termination test accepts); otherwise it
+    undercuts to ``max(λ, β2 − ε)`` and offers that person a raised
+    profit.  A person receiving several offers accepts the best one
+    (Jacobi conflict resolution — losers keep their old price and retry),
+    and the accepted person's previous object is released with its price
+    intact, to be repaired by a later reverse round.
+    """
+    k = a.shape[-1]
+    idx = jnp.arange(k)
+    bidder = keep2 & (o2p < 0) & (price > 0.0)
+    w = a - pi[:, None]                # (person, object)
+    i_star = jnp.argmax(w, axis=0)
+    b1 = jnp.max(w, axis=0)
+    b2 = jnp.max(jnp.where(idx[:, None] == i_star[None, :], -jnp.inf, w),
+                 axis=0)
+    drop = bidder & (b1 < eps)
+    active = bidder & (b1 >= eps)
+    p_new = jnp.maximum(0.0, b2 - eps)
+    offer = jnp.take_along_axis(a, i_star[None, :], axis=0)[0, :] - p_new
+    offers = jnp.where(active[None, :] & (i_star[None, :] == idx[:, None]),
+                       offer[None, :], -jnp.inf)      # (person, object)
+    best_off = jnp.max(offers, axis=1)
+    j_win = jnp.argmax(offers, axis=1)
+    got = best_off > -jnp.inf
+    # accepted persons release their old object (an owned object is never
+    # a bidder, so freed/taken are disjoint and update order is immaterial)
+    freed = jnp.any(got[:, None] & (p2o[:, None] == idx[None, :]), axis=0)
+    won_obj = got[:, None] & (j_win[:, None] == idx[None, :])
+    taken = jnp.any(won_obj, axis=0)
+    new_owner = jnp.max(jnp.where(won_obj, idx[:, None], -1), axis=0)
+    o2p = jnp.where(freed, -1, o2p)
+    o2p = jnp.where(taken, new_owner, o2p)
+    price = jnp.where(taken, p_new, jnp.where(drop, 0.0, price))
+    p2o = jnp.where(got, j_win, p2o)
+    pi = jnp.where(got, best_off, pi)
+    return price, pi, p2o, o2p
+
+
+def auction_solve_collapsed(cbar, keep1, keep2, price0=None,
+                            eps0: float = DEFAULT_EPS0,
+                            eps_factor: float = DEFAULT_EPS_FACTOR,
+                            n_scales: int = DEFAULT_N_SCALES,
+                            max_rounds: int | None = None,
+                            rev_every: int = DEFAULT_REV_EVERY):
+    """ε-scaled combined forward/reverse auction on one collapsed problem.
+
+    ``cbar`` is the (K, K) *reduced* cost (matching pair (i, j) instead of
+    sending both to the diagonal), ``keep1``/``keep2`` the valid-slot
+    masks, ``price0`` an optional warm-start price vector in the solver's
+    max-normalized units (any nonnegative vector is safe, and a nonzero
+    one skips the ε ladder — see the module docstring).  Returns
+    ``(p2o, total, converged, rounds, price)``:
+    ``p2o[i]`` ∈ {OUT, −1, j} with ``total = Σ cbar[i, p2o[i]]`` over the
+    matched pairs (add the caller's diagonal base cost to recover the
+    expanded-matrix optimum), ``converged`` as in :func:`auction_solve`
+    (one of the two finest ε rungs fully terminated: no free person, no
+    unmatched object priced above 0), ``price`` the final normalized
+    prices (feed them back as ``price0`` to warm-start a near-duplicate
+    pair).  ``rev_every`` > 0 additionally forces a reverse round every
+    that many rounds even while free persons remain (the fwd/rev phase
+    ratio the autotuner sweeps); reverse rounds always run once forward
+    bidding has no free persons left.
+    """
+    k = cbar.shape[-1]
+    if max_rounds is None:
+        max_rounds = default_max_rounds(k)
+    rev_every = int(rev_every)
+    cbar = cbar.astype(jnp.float32)
+    valid = keep1[:, None] & keep2[None, :]
+    c_scale = jnp.maximum(
+        jnp.max(jnp.where(valid, jnp.abs(cbar), 0.0)), 1e-30)
+    a = jnp.where(valid, -(cbar / c_scale), -jnp.inf)
+    idx = jnp.arange(k)
+    eps_ladder = eps0 * eps_factor ** -jnp.arange(n_scales, dtype=jnp.float32)
+    if price0 is None:
+        price = jnp.zeros((k,), jnp.float32)
+    else:
+        price = jnp.where(keep2, jnp.maximum(price0.astype(jnp.float32), 0.0),
+                          0.0)
+    # warm start (any nonzero price) skips the annealing ladder: coarse
+    # scales would inflate the already-equilibrated prices and then pay
+    # reverse rounds to re-ground them, so a warm lane runs every scan
+    # iteration at the finest ε instead (auction from arbitrary nonneg
+    # prices + empty assignment preserves ε-CS, so the ε_final optimality
+    # certificate is unchanged; the ladder is purely a cold-start speedup)
+    warm = jnp.any(price > 0.0)
+    eps_ladder = jnp.where(warm, eps_ladder[-1], eps_ladder)
+    # initial profits must over-claim nothing: best attainable value now
+    pi = jnp.maximum(jnp.max(a - price[None, :], axis=-1), 0.0)
+    # invalid persons sit at OUT for good (cbar row is -inf, never bid)
+    p2o = jnp.where(keep1, -1, OUT).astype(jnp.int32)
+    o2p = jnp.full((k,), -1, jnp.int32)
+
+    def run_scale(carry, eps):
+        price, pi, p2o, o2p, rounds = carry
+        # ε-CS partial reset: persons keep their slot (real object or OUT)
+        # only while it is still within eps of their best option at the
+        # new, finer scale; freed persons re-bid, and the objects they
+        # abandon keep their stale prices for the reverse rounds to repair
+        v = a - price[None, :]
+        best = jnp.maximum(jnp.max(v, axis=-1), 0.0)
+        mine = jnp.where(
+            p2o >= 0,
+            jnp.take_along_axis(v, jnp.clip(p2o, 0)[:, None], axis=-1)[:, 0],
+            0.0)                                     # OUT is worth exactly 0
+        keep = (p2o != -1) & (mine >= best - eps)
+        keep = keep | ~keep1
+        p2o = jnp.where(keep, p2o, -1)
+        o2p = jnp.max(jnp.where((p2o[:, None] == idx[None, :]),
+                                idx[:, None], -1), axis=0)
+
+        def cond(s):
+            price, pi, p2o, o2p, prev, it, stalled = s
+            free_any = jnp.any(p2o == -1)
+            stale_any = jnp.any(keep2 & (o2p < 0) & (price > 0.0))
+            return (free_any | stale_any) & (it < max_rounds) & ~stalled
+
+        def body(s):
+            price, pi, p2o, o2p, prev, it, _ = s
+            free_any = jnp.any(p2o == -1)
+            stale_any = jnp.any(keep2 & (o2p < 0) & (price > 0.0))
+            if rev_every > 0:
+                periodic = (it % rev_every) == (rev_every - 1)
+            else:
+                periodic = jnp.bool_(False)
+            do_rev = stale_any & (~free_any | periodic)
+            price2, pi2, p2o2, o2p2 = lax.cond(
+                do_rev,
+                lambda args: collapsed_reverse_round(*args[:-1], keep2,
+                                                     args[-1]),
+                lambda args: collapsed_bid_round(*args),
+                (a, price, pi, p2o, o2p, eps))
+            # two livelock exits, both leaving the last converged scale's
+            # assignment to stand: an unchanged state means the ≥ε
+            # increments fell below f32 resolution, and a state equal to
+            # the one *two* rounds back means a forced fwd/rev interleave
+            # (rev_every) is ping-ponging a contested object ±ε per phase
+            # — neither can ever make further progress
+            p_price, p_pi, p_p2o = prev
+            same1 = (jnp.all(price2 == price) & jnp.all(pi2 == pi)
+                     & jnp.all(p2o2 == p2o))
+            same2 = (jnp.all(price2 == p_price) & jnp.all(pi2 == p_pi)
+                     & jnp.all(p2o2 == p_p2o))
+            return (price2, pi2, p2o2, o2p2, (price, pi, p2o), it + 1,
+                    same1 | same2)
+
+        prev0 = (jnp.full_like(price, -1.0), jnp.full_like(pi, -1.0),
+                 jnp.full_like(p2o, -3))
+        price, pi, p2o, o2p, _, it, _ = lax.while_loop(
+            cond, body,
+            (price, pi, p2o, o2p, prev0, jnp.int32(0), jnp.bool_(False)))
+        conv = (~jnp.any(p2o == -1)
+                & ~jnp.any(keep2 & (o2p < 0) & (price > 0.0)))
+        return (price, pi, p2o, o2p, rounds + it), (p2o, conv)
+
+    (price, _, _, _, rounds), (p2o_s, conv_s) = lax.scan(
+        run_scale, (price, pi, p2o, o2p, jnp.int32(0)), eps_ladder)
+    any_conv = jnp.any(conv_s)
+    converged = jnp.any(conv_s[-2:])
+    last = n_scales - 1 - jnp.argmax(conv_s[::-1])
+    p2o = jnp.where(any_conv, jnp.take(p2o_s, last, axis=0), p2o_s[-1])
+    # a still-free person (nothing converged) is reported at OUT: the
+    # matching stays feasible — every person holds at most one distinct
+    # object throughout — just not certified optimal (converged=False)
+    matched = p2o >= 0
+    total = jnp.sum(jnp.where(
+        matched,
+        jnp.take_along_axis(cbar, jnp.clip(p2o, 0)[:, None], axis=-1)[:, 0],
+        0.0))
+    return p2o.astype(jnp.int32), total, converged, rounds, price
+
+
+def expand_collapsed_assignment(p2o, keep1, keep2):
+    """(K,) collapsed assignment → (2K,) expanded-matrix row assignment.
+
+    Rows 0..K−1 are the real D1 slots, rows K..2K−1 the reservoirs (the
+    ``metrics/exact.py::augmented_cost`` convention).  A person at OUT (or
+    free, or invalid) pairs with its own reservoir column K+i; a real
+    column nobody owns pairs with its own reservoir row K+j; leftover
+    reservoir rows/columns pair off in index order (all zero-cost).  The
+    result evaluates the *expanded* cost matrix to exactly
+    ``base + Σ cbar[i, p2o[i]]`` — the bit-for-bit equivalence the
+    degenerate-input tests assert.
+    """
+    k = p2o.shape[-1]
+    idx = jnp.arange(k)
+    matched = p2o >= 0
+    top = jnp.where(matched, p2o, k + idx)
+    owned = jnp.any(matched[:, None] & (p2o[:, None] == idx[None, :]), axis=0)
+    # reservoir row K+j takes column j when unowned; owned columns leave
+    # their reservoir rows to pair with the reservoir columns K+i of
+    # matched persons (rank pairing, #owned == #matched)
+    rank_r = jnp.cumsum(owned) - 1
+    rank_c = jnp.cumsum(matched) - 1
+    pair = (owned[:, None] & matched[None, :]
+            & (rank_r[:, None] == rank_c[None, :]))
+    fill = jnp.max(jnp.where(pair, k + idx[None, :], -1), axis=-1)
+    bottom = jnp.where(owned, fill, idx)
+    return jnp.concatenate([top, bottom]).astype(jnp.int32)
+
+
 def _kernel(cost_ref, assign_ref, total_ref, conv_ref, rounds_ref, *,
             eps0, eps_factor, n_scales, max_rounds):
     assign, total, converged, rounds = jax.vmap(functools.partial(
@@ -237,3 +526,82 @@ def auction_lap_pallas(cost: jax.Array, eps0: float = DEFAULT_EPS0,
         name="auction_lap",
     )(costp)
     return assign[:b], total[:b, 0], conv[:b, 0], rounds[:b, 0]
+
+
+def _collapsed_kernel(cbar_ref, keep1_ref, keep2_ref, price0_ref,
+                      p2o_ref, total_ref, conv_ref, rounds_ref, price_ref, *,
+                      eps0, eps_factor, n_scales, max_rounds, rev_every):
+    p2o, total, conv, rounds, price = jax.vmap(functools.partial(
+        auction_solve_collapsed, eps0=eps0, eps_factor=eps_factor,
+        n_scales=n_scales, max_rounds=max_rounds, rev_every=rev_every,
+    ))(cbar_ref[...], keep1_ref[...], keep2_ref[...], price0_ref[...])
+    p2o_ref[...] = p2o.astype(jnp.int32)
+    total_ref[...] = total[:, None]
+    conv_ref[...] = conv[:, None]
+    rounds_ref[...] = rounds[:, None].astype(jnp.int32)
+    price_ref[...] = price
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "eps0", "eps_factor", "n_scales", "max_rounds", "rev_every", "tile_b",
+    "interpret"))
+def auction_lap_collapsed_pallas(cbar: jax.Array, keep1: jax.Array,
+                                 keep2: jax.Array, price0: jax.Array,
+                                 eps0: float = DEFAULT_EPS0,
+                                 eps_factor: float = DEFAULT_EPS_FACTOR,
+                                 n_scales: int = DEFAULT_N_SCALES,
+                                 max_rounds: int | None = None,
+                                 rev_every: int = DEFAULT_REV_EVERY,
+                                 tile_b: int = 1,
+                                 interpret: bool = True):
+    """Batched collapsed forward/reverse auction: (B, K, K) reduced costs.
+
+    Returns ``(p2o (B, K) i32, total (B,) f32, converged (B,) bool,
+    rounds (B,) i32, price (B, K) f32)`` — see
+    :func:`auction_solve_collapsed` for the contract.  ``tile_b`` pairs
+    co-reside in VMEM per grid step exactly like ``auction_lap_pallas``;
+    batch padding uses all-invalid slots, which terminate in zero rounds
+    (every padded person starts at OUT).
+    """
+    b, k, k2 = cbar.shape
+    if k != k2:
+        raise ValueError(f"cbar must be square per pair, got {(k, k2)}")
+    if keep1.shape != (b, k) or keep2.shape != (b, k):
+        raise ValueError(
+            f"keep masks must be {(b, k)}, got {keep1.shape}/{keep2.shape}")
+    if price0.shape != (b, k):
+        raise ValueError(f"price0 must be {(b, k)}, got {price0.shape}")
+    if max_rounds is None:
+        max_rounds = default_max_rounds(k)
+    bp = -(-b // tile_b) * tile_b
+    pad_b = ((0, bp - b),)
+    cbarp = jnp.pad(cbar.astype(jnp.float32), pad_b + ((0, 0), (0, 0)))
+    keep1p = jnp.pad(keep1.astype(jnp.bool_), pad_b + ((0, 0),))
+    keep2p = jnp.pad(keep2.astype(jnp.bool_), pad_b + ((0, 0),))
+    price0p = jnp.pad(price0.astype(jnp.float32), pad_b + ((0, 0),))
+    row_spec = pl.BlockSpec((tile_b, k), lambda i: (i, 0),
+                            memory_space=pltpu.VMEM)
+    one_spec = pl.BlockSpec((tile_b, 1), lambda i: (i, 0),
+                            memory_space=pltpu.VMEM)
+    p2o, total, conv, rounds, price = pl.pallas_call(
+        functools.partial(_collapsed_kernel, eps0=eps0,
+                          eps_factor=eps_factor, n_scales=n_scales,
+                          max_rounds=max_rounds, rev_every=rev_every),
+        grid=(bp // tile_b,),
+        in_specs=[
+            pl.BlockSpec((tile_b, k, k), lambda i: (i, 0, 0),
+                         memory_space=pltpu.VMEM),
+            row_spec, row_spec, row_spec,
+        ],
+        out_specs=[row_spec, one_spec, one_spec, one_spec, row_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bp, 1), jnp.bool_),
+            jax.ShapeDtypeStruct((bp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((bp, k), jnp.float32),
+        ],
+        interpret=interpret,
+        name="auction_lap_collapsed",
+    )(cbarp, keep1p, keep2p, price0p)
+    return (p2o[:b], total[:b, 0], conv[:b, 0], rounds[:b, 0], price[:b])

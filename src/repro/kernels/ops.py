@@ -17,7 +17,10 @@ import jax.numpy as jnp
 
 from repro import obs
 from repro.kernels import tuning
-from repro.kernels.auction_lap import auction_lap_pallas
+from repro.kernels.auction_lap import (
+    auction_lap_collapsed_pallas,
+    auction_lap_pallas,
+)
 from repro.kernels.common_neighbors import common_neighbors_pallas
 from repro.kernels.domination import domination_pallas
 from repro.kernels.gf2_reduce import (
@@ -144,6 +147,34 @@ def auction_lap(cost: jax.Array, n_scales: int = 10,
         return auction_lap_pallas(cost, n_scales=n_scales,
                                   max_rounds=max_rounds, tile_b=tb,
                                   interpret=_interpret())
+
+
+def auction_lap_collapsed(cbar: jax.Array, keep1: jax.Array,
+                          keep2: jax.Array, price0: jax.Array | None = None,
+                          n_scales: int = 10,
+                          max_rounds: int | None = None,
+                          tile_b: int | None = None,
+                          rev_every: int | None = None):
+    """Batched collapsed forward/reverse auction: (B, K, K) reduced costs.
+
+    Returns ``(p2o, total, converged, rounds, price)`` — see
+    ``kernels/auction_lap.py::auction_solve_collapsed`` for the contract.
+    ``price0`` warm-starts the object prices (max-normalized units; any
+    nonnegative vector is safe).  ``tile_b`` and ``rev_every`` (the
+    forward/reverse phase ratio) resolve through the ``auction_collapsed``
+    tuning entry — both are autotuner sweep axes.
+    """
+    cfg = tuning.resolve_tiles("auction_collapsed", tile_b=tile_b,
+                               rev_every=rev_every)
+    if price0 is None:
+        price0 = jnp.zeros(cbar.shape[:-1], jnp.float32)
+    _KCALLS.inc(kernel="auction_lap_collapsed")
+    with obs.span("kernels.auction_lap_collapsed",
+                  shape=f"B{cbar.shape[0]}_K{cbar.shape[1]}"):
+        return auction_lap_collapsed_pallas(
+            cbar, keep1, keep2, price0, n_scales=n_scales,
+            max_rounds=max_rounds, tile_b=cfg["tile_b"],
+            rev_every=int(cfg["rev_every"]), interpret=_interpret())
 
 
 def sinkhorn_lse(xp: jax.Array, yp: jax.Array, dual: jax.Array,

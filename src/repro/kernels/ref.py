@@ -62,6 +62,23 @@ def auction_lap_ref(cost: jax.Array, **kw):
     return auction_solve(cost, **kw)
 
 
+def auction_lap_collapsed_ref(cbar: jax.Array, keep1: jax.Array,
+                              keep2: jax.Array, price0=None, **kw):
+    """Collapsed forward/reverse auction on one (K, K) reduced-cost problem.
+
+    Delegates to
+    :func:`repro.kernels.auction_lap.auction_solve_collapsed` — the same
+    combined forward/reverse solver the collapsed Pallas kernel vmaps per
+    grid step, so kernel-vs-ref parity is semantic.  *Optimality* is
+    asserted separately against the expanded-matrix Hungarian oracle
+    (``repro.metrics.reference``) via
+    ``auction_lap.expand_collapsed_assignment``.
+    """
+    from repro.kernels.auction_lap import auction_solve_collapsed
+
+    return auction_solve_collapsed(cbar, keep1, keep2, price0, **kw)
+
+
 def sinkhorn_lse_ref(xp: jax.Array, yp: jax.Array, dual: jax.Array,
                      logw: jax.Array, e_t: jax.Array) -> jax.Array:
     """Dense reference for the blocked LSE kernel (materializes (M, N)).

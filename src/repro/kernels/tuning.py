@@ -30,6 +30,11 @@ DEFAULT_TILES: dict[str, dict] = {
     "pairwise_gram": {"tile_m": 8, "tile_n": 128, "tile_d": 128},
     "sinkhorn_lse": {"tile": 128},
     "auction_lap": {"tile_b": 1},
+    # the reservoir-collapsed forward/reverse auction: collapse toggles the
+    # exact_w formulation ("on" = K×K reduced problem + OUT pseudo-slot,
+    # "off" = legacy (2K)² expanded matrix), rev_every the forward/reverse
+    # phase ratio (0 = reverse only once forward bidding has drained)
+    "auction_collapsed": {"tile_b": 1, "rev_every": 8, "collapse": "on"},
     "gf2_reduce": {"batch_mode": "vmap"},
     "domination": {"tile": 128},
 }

@@ -71,6 +71,12 @@ class MetricBackend:
       (or the truncation caveat of an exact one);
     * ``cost_class`` — asymptotic cost per pair, in terms of the working
       width (``n_points`` / tensor size S).
+
+    ``info_fn`` (optional) is the diagnostics-carrying variant of ``fn``:
+    same ``(d1, d2, *, k, cap, **params)`` calling convention, but it
+    returns ``(distances, converged, rounds, prices)`` — what serving
+    layers that warm-start the solver (the SimilarityServe price cache)
+    call through :func:`compare_info` instead of ``compare``.
     """
 
     name: str
@@ -81,6 +87,8 @@ class MetricBackend:
     description: str = ""
     defaults: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     params: tuple[str, ...] = ()
+    info_fn: Callable[..., tuple] | None = None
+    info_params: tuple[str, ...] = ()
 
 
 METRIC_REGISTRY: dict[str, MetricBackend] = {}
@@ -105,6 +113,9 @@ def register_metric(backend: MetricBackend,
         raise ValueError(f"metric backend {backend.name!r} already registered")
     if not backend.params:
         backend = dataclasses.replace(backend, params=_fn_params(backend.fn))
+    if backend.info_fn is not None and not backend.info_params:
+        backend = dataclasses.replace(
+            backend, info_params=_fn_params(backend.info_fn))
     bad = set(backend.defaults) - set(backend.params)
     if bad:
         raise ValueError(
@@ -147,6 +158,32 @@ def compare(d1: Diagrams, d2: Diagrams, metric: str = "sw", k: int = 1,
     _CALLS.inc(backend=metric, entry="compare")
     with obs.span("metrics.compare", backend=metric):
         return be.fn(d1, d2, k=k, cap=cap, **kwargs)
+
+
+def compare_info(d1: Diagrams, d2: Diagrams, metric: str = "exact_w",
+                 k: int = 1, cap: float = 64.0, **params) -> tuple:
+    """``compare`` with solver diagnostics: ``(w, converged, rounds, prices)``.
+
+    Routes through the backend's ``info_fn`` — the entry point for callers
+    that feed solver state back in (the serve-level price cache passes
+    ``prices=`` warm starts and stores the returned converged vectors).
+    Only backends registering an ``info_fn`` support it (``exact_w``).
+    """
+    be = get_metric(metric)
+    if be.info_fn is None:
+        raise ValueError(
+            f"metric {metric!r} has no diagnostics entry point (info_fn); "
+            "use compare()")
+    bad = set(params) - set(be.info_params)
+    if bad:
+        raise ValueError(
+            f"metric {metric!r} info_fn does not accept {sorted(bad)}; "
+            f"accepted: {sorted(be.info_params)}")
+    kwargs = {p: v for p, v in be.defaults.items() if p in be.info_params}
+    kwargs.update(params)
+    _CALLS.inc(backend=metric, entry="compare_info")
+    with obs.span("metrics.compare_info", backend=metric):
+        return be.info_fn(d1, d2, k=k, cap=cap, **kwargs)
 
 
 def pairwise(d1: Diagrams, d2: Diagrams | None = None, metric: str = "sw",
@@ -215,12 +252,16 @@ register_metric(MetricBackend(
 register_metric(MetricBackend(
     name="exact_w",
     fn=_exact.exact_w,
+    info_fn=_exact.exact_w_full,
     exact=True,
     error_bound="exact min-cost matching (0 mismatches vs the Hungarian "
                 "oracle; exact up to top-n_points compaction)",
-    cost_class="O(P² · rounds) per pair, P = 2·n_points",
-    description="batched auction-LAP q-Wasserstein on the "
-                "diagonal-augmented clouds (Pallas kernel)",
+    cost_class="O(P² · rounds) per pair; P = n_points collapsed "
+               "(collapse='on'), 2·n_points expanded",
+    description="batched auction-LAP q-Wasserstein: reservoir-collapsed "
+                "forward/reverse auction (warm-startable prices via "
+                "compare_info) or the legacy expanded matrix "
+                "(collapse='off')",
 ))
 register_metric(MetricBackend(
     name="bottleneck_approx",

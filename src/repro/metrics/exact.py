@@ -4,26 +4,37 @@
 diagonal-augmented assignment problem host-side (scipy / Hungarian, one
 small pair at a time).  This module is the batched accelerator-resident
 formulation of the *same* problem: both diagrams are compacted to the
-shared fixed-width top-persistence cloud (``distances.compact_top_k``), the
-(2·n_points)² augmented cost matrix is built with masked arithmetic, and
-the matching is solved by the batched Pallas auction kernel
+shared fixed-width top-persistence cloud (``distances.compact_top_k``) and
+the matching is solved by a batched Pallas auction kernel
 (``kernels/auction_lap.py``) — jit/vmap-able over arbitrary leading pair
 axes, which is what makes exact distances servable (the re-rank stage of
 ``serve/similarity.py``).
 
-Augmented-matrix convention (identical to the host reference): rows are
-the points of D1 followed by diagonal "reservoir" slots, columns the
-points of D2 followed by reservoirs; point↔reservoir costs the point's
-distance to the diagonal (**q), reservoir↔reservoir is free.  Invalid
-compacted slots behave exactly like reservoir slots, so the fixed-width
-problem has the same optimal total as the reference's (n1+n2)² one — the
-extra slots only add free reservoir↔reservoir matches.
+Two equivalent formulations, selected by ``collapse``:
+
+* ``"off"`` — the legacy *expanded* path: rows are the points of D1
+  followed by diagonal "reservoir" slots, columns the points of D2
+  followed by reservoirs; point↔reservoir costs the point's distance to
+  the diagonal (**q), reservoir↔reservoir is free.  Invalid compacted
+  slots behave exactly like reservoir slots, so the fixed-width problem
+  has the same optimal total as the reference's (n1+n2)² one.  The M
+  identical reservoir rows/columns tie-fight, costing ~1.3k bidding
+  rounds per pair.
+* ``"on"`` (default) — the *collapsed* path: the identical reservoir
+  rows/columns are detected by construction and folded into one
+  multi-unit pseudo-slot, leaving the K×K *reduced* cost
+  ``cbar[i, j] = pp[i, j] − diag1[i] − diag2[j]`` plus the constant
+  ``base = Σ diag1 + Σ diag2``; ``W_q^q = base + min partial matching of
+  cbar``, solved by the combined forward/reverse auction
+  (``auction_solve_collapsed``) in ~30 rounds instead of ~1.3k — and it
+  accepts/returns *price vectors* for LSH-bucket warm starts across
+  near-duplicate pairs.
 
 Exactness: ``exact_w`` is exact up to (a) the documented top-``n_points``
 persistence truncation (exact whenever each diagram has ≤ ``n_points``
 dim-``k`` points) and (b) the auction's ``M·ε_final``-suboptimality bound,
 which in float32 practice resolves to the true optimum (0 mismatches vs
-the Hungarian oracle across the test/bench sweeps).
+the Hungarian oracle across the test/bench sweeps, both formulations).
 """
 from __future__ import annotations
 
@@ -34,24 +45,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.persistence_jax import Diagrams
-from repro.kernels import ops
+from repro.kernels import ops, tuning
 from repro.metrics.distances import compact_top_k
 
 GROUNDS = ("l2", "linf")
+COLLAPSE_MODES = ("on", "off")
 
 
-def augmented_cost(b1, e1, keep1, b2, e2, keep2, q: float = 2.0,
-                   ground: str = "l2"):
-    """Batched (…, 2K, 2K) diagonal-augmented assignment costs, entries **q.
+def cloud_costs(b1, e1, keep1, b2, e2, keep2, q: float = 2.0,
+                ground: str = "l2"):
+    """The three cost surfaces of the augmented problem, entries **q.
 
-    ``(b, e, keep)`` per side are fixed-width compacted clouds
-    (``compact_top_k``).  Invalid slots act as extra diagonal reservoirs
-    (zero cost against other reservoirs / invalid slots), preserving the
-    host reference's optimum.
+    Returns ``(pp, diag1, diag2)``: point↔point costs (…, K, K) and each
+    side's point↔diagonal costs (…, K) (zeroed at invalid slots).  Both
+    the expanded matrix (``augmented_cost``) and the collapsed reduced
+    matrix (``collapsed_cost``) are assembled from these — one definition
+    of the ground metric, two solver layouts.
     """
     if ground not in GROUNDS:
         raise ValueError(f"unknown ground metric {ground!r}; want {GROUNDS}")
-    k = b1.shape[-1]
     db = b1[..., :, None] - b2[..., None, :]
     de = e1[..., :, None] - e2[..., None, :]
     if ground == "l2":
@@ -63,12 +75,30 @@ def augmented_cost(b1, e1, keep1, b2, e2, keep2, q: float = 2.0,
         pp = jnp.maximum(jnp.abs(db), jnp.abs(de)) ** q
         diag1 = ((e1 - b1) / 2.0) ** q
         diag2 = ((e2 - b2) / 2.0) ** q
+    diag1 = jnp.where(keep1, diag1, 0.0)
+    diag2 = jnp.where(keep2, diag2, 0.0)
+    return pp, diag1, diag2
 
+
+def augmented_cost(b1, e1, keep1, b2, e2, keep2, q: float = 2.0,
+                   ground: str = "l2"):
+    """Batched (…, 2K, 2K) diagonal-augmented assignment costs, entries **q.
+
+    ``(b, e, keep)`` per side are fixed-width compacted clouds
+    (``compact_top_k``).  Invalid slots act as extra diagonal reservoirs
+    (zero cost against other reservoirs / invalid slots), preserving the
+    host reference's optimum.  This is the ``collapse="off"`` layout; the
+    reservoir rows/columns it pads in are all identical — which is exactly
+    what ``collapsed_cost`` exploits.
+    """
+    k = b1.shape[-1]
+    pp, diag1, diag2 = cloud_costs(b1, e1, keep1, b2, e2, keep2, q=q,
+                                   ground=ground)
     pad_tail = [(0, 0)] * (b1.ndim - 1) + [(0, k)]
     rp = jnp.pad(keep1, pad_tail)            # (…, 2K) row is a real point
     cp = jnp.pad(keep2, pad_tail)
-    d1 = jnp.pad(jnp.where(keep1, diag1, 0.0), pad_tail)
-    d2 = jnp.pad(jnp.where(keep2, diag2, 0.0), pad_tail)
+    d1 = jnp.pad(diag1, pad_tail)
+    d2 = jnp.pad(diag2, pad_tail)
     pp_full = jnp.pad(pp, [(0, 0)] * (pp.ndim - 2) + [(0, k), (0, k)])
     cost = jnp.where(
         rp[..., :, None] & cp[..., None, :], pp_full,
@@ -77,19 +107,39 @@ def augmented_cost(b1, e1, keep1, b2, e2, keep2, q: float = 2.0,
     return cost
 
 
+def collapsed_cost(b1, e1, keep1, b2, e2, keep2, q: float = 2.0,
+                   ground: str = "l2"):
+    """Reservoir-collapsed reduced costs: ``(cbar (…, K, K), base (…,))``.
+
+    Every reservoir row/column of the expanded matrix is identical, so
+    the whole reservoir block collapses into the constant
+    ``base = Σ diag1 + Σ diag2`` (everything goes to the diagonal) plus
+    the reduced cost ``cbar[i, j] = pp[i, j] − diag1[i] − diag2[j]`` of
+    *choosing* to match (i, j) instead:
+    ``W_q^q = base + min over partial matchings Σ cbar`` — a K×K
+    multi-unit (transportation) auction instead of a (2K)² one.
+    """
+    pp, diag1, diag2 = cloud_costs(b1, e1, keep1, b2, e2, keep2, q=q,
+                                   ground=ground)
+    cbar = pp - diag1[..., :, None] - diag2[..., None, :]
+    base = jnp.sum(diag1, axis=-1) + jnp.sum(diag2, axis=-1)
+    return cbar, base
+
+
+def _resolve_collapse(collapse: str | None) -> str:
+    mode = collapse
+    if mode is None:
+        mode = tuning.resolve_tiles("auction_collapsed")["collapse"]
+    if mode not in COLLAPSE_MODES:
+        raise ValueError(
+            f"unknown collapse mode {mode!r}; want {COLLAPSE_MODES}")
+    return mode
+
+
 @partial(jax.jit, static_argnames=("k", "q", "ground", "n_points",
                                    "n_scales"))
-def exact_w_info(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
-                 ground: str = "l2", cap: float = 64.0, n_points: int = 16,
-                 n_scales: int = 10):
-    """``exact_w`` plus per-pair solver diagnostics.
-
-    Returns ``(w, converged, rounds)`` with ``w`` the q-Wasserstein
-    distances, ``converged`` whether the reported matching came from one of
-    the two finest ε rungs (the tight-suboptimality guarantee — see
-    ``kernels/auction_lap.py::auction_solve``), and ``rounds`` the total
-    bidding rounds (the ε-scaling convergence surface the tests probe).
-    """
+def _expanded_info(d1: Diagrams, d2: Diagrams, k: int, q: float,
+                   ground: str, cap: float, n_points: int, n_scales: int):
     b1, e1, k1 = compact_top_k(d1, k, n_points, cap)
     b2, e2, k2 = compact_top_k(d2, k, n_points, cap)
     cost = augmented_cost(b1, e1, k1, b2, e2, k2, q=q, ground=ground)
@@ -100,9 +150,74 @@ def exact_w_info(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
     return w.reshape(lead), conv.reshape(lead), rounds.reshape(lead)
 
 
+@partial(jax.jit, static_argnames=("k", "q", "ground", "n_points",
+                                   "n_scales"))
+def _collapsed_info(d1: Diagrams, d2: Diagrams, prices, k: int, q: float,
+                    ground: str, cap: float, n_points: int, n_scales: int):
+    b1, e1, k1 = compact_top_k(d1, k, n_points, cap)
+    b2, e2, k2 = compact_top_k(d2, k, n_points, cap)
+    cbar, base = collapsed_cost(b1, e1, k1, b2, e2, k2, q=q, ground=ground)
+    lead = cbar.shape[:-2]
+    flat = cbar.reshape((-1, n_points, n_points))
+    k1f = jnp.broadcast_to(k1, lead + (n_points,)).reshape(-1, n_points)
+    k2f = jnp.broadcast_to(k2, lead + (n_points,)).reshape(-1, n_points)
+    pf = jnp.broadcast_to(prices, lead + (n_points,)).reshape(-1, n_points)
+    _, red, conv, rounds, price = ops.auction_lap_collapsed(
+        flat, k1f, k2f, pf, n_scales=n_scales)
+    total = base.reshape(-1) + red
+    w = jnp.maximum(total, 0.0) ** (1.0 / q)
+    return (w.reshape(lead), conv.reshape(lead), rounds.reshape(lead),
+            price.reshape(lead + (n_points,)))
+
+
+def exact_w_full(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
+                 ground: str = "l2", cap: float = 64.0, n_points: int = 16,
+                 n_scales: int = 10, collapse: str | None = None,
+                 prices: jax.Array | None = None):
+    """``exact_w`` plus solver diagnostics *and* warm-startable prices.
+
+    Returns ``(w, converged, rounds, prices_out)``.  ``collapse`` picks
+    the solver layout (``None`` → the pinned/tuned default, normally
+    ``"on"``).  On the collapsed path, ``prices`` is an optional
+    ``lead + (n_points,)`` warm-start price array in the solver's
+    max-normalized units and ``prices_out`` is the converged price vector
+    per pair — cache it keyed by the query's LSH bucket and feed it back
+    for near-duplicate pairs (any nonnegative vector is *safe*; a good
+    one is *fast*).  The expanded path ignores ``prices`` and returns
+    zeros (its price vector lives on the 2K-wide matrix and is not cached).
+    """
+    mode = _resolve_collapse(collapse)
+    lead = jnp.broadcast_shapes(d1.birth.shape[:-1], d2.birth.shape[:-1])
+    if mode == "off":
+        w, conv, rounds = _expanded_info(d1, d2, k, q, ground, cap,
+                                         n_points, n_scales)
+        return w, conv, rounds, jnp.zeros(lead + (n_points,), jnp.float32)
+    if prices is None:
+        prices = jnp.zeros(lead + (n_points,), jnp.float32)
+    return _collapsed_info(d1, d2, prices, k, q, ground, cap, n_points,
+                           n_scales)
+
+
+def exact_w_info(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
+                 ground: str = "l2", cap: float = 64.0, n_points: int = 16,
+                 n_scales: int = 10, collapse: str | None = None):
+    """``exact_w`` plus per-pair solver diagnostics.
+
+    Returns ``(w, converged, rounds)`` with ``w`` the q-Wasserstein
+    distances, ``converged`` whether the reported matching came from one of
+    the two finest ε rungs (the tight-suboptimality guarantee — see
+    ``kernels/auction_lap.py``), and ``rounds`` the total bidding rounds
+    (the ε-scaling convergence surface the tests and PerfGate probe).
+    """
+    w, conv, rounds, _ = exact_w_full(d1, d2, k=k, q=q, ground=ground,
+                                      cap=cap, n_points=n_points,
+                                      n_scales=n_scales, collapse=collapse)
+    return w, conv, rounds
+
+
 def exact_w(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
             ground: str = "l2", cap: float = 64.0, n_points: int = 16,
-            n_scales: int = 10) -> jax.Array:
+            n_scales: int = 10, collapse: str | None = None) -> jax.Array:
     """Exact q-Wasserstein between dim-``k`` diagrams (batched, auction-LAP).
 
     The accelerator-resident equivalent of
@@ -111,7 +226,8 @@ def exact_w(d1: Diagrams, d2: Diagrams, k: int = 1, q: float = 2.0,
     axes (pairs aligned row-wise); returns ``(…,)`` distances.
     """
     w, _, _ = exact_w_info(d1, d2, k=k, q=q, ground=ground, cap=cap,
-                           n_points=n_points, n_scales=n_scales)
+                           n_points=n_points, n_scales=n_scales,
+                           collapse=collapse)
     return w
 
 
@@ -123,36 +239,54 @@ def bottleneck_approx(d1: Diagrams, d2: Diagrams, k: int = 1,
 
     The bottleneck distance is the smallest ``t`` admitting a perfect
     matching that uses only L∞ costs ≤ ``t`` — the same binary search
-    ``reference.bottleneck_exact`` runs host-side, except the feasibility
-    oracle here is the batched auction kernel on a 0/1 cost matrix
-    (``c ≤ t`` → 0, else 1): a zero-total assignment exists iff ``t`` is
-    feasible, and 0/1 auctions converge in a handful of rounds.  ``n_iters``
-    midpoint bisections bound the answer within ``max_cost · 2^-n_iters``
-    of the exact bottleneck on the compacted clouds (≈1e-7 relative at the
-    default), so the only structural approximation left is the documented
-    top-``n_points`` compaction — the registry records both.
+    ``reference.bottleneck_exact`` runs host-side.  The feasibility oracle
+    here is the *collapsed* 0/1 problem: thresholding each cost surface
+    gives per-slot diagonal violations ``out1 = diag1 > t`` /
+    ``out2 = diag2 > t`` and pair violations ``pp > t``, and ``t`` is
+    feasible iff ``Σ out1 + Σ out2 + min matching of
+    (pp>t) − out1 − out2`` is 0 — the same collapsed solve ``exact_w``
+    uses, so each probe pays ~tens of bidding rounds instead of
+    re-fighting the full reservoir tie blowup ~``n_iters`` times.
+    ``n_iters`` midpoint bisections bound the answer within
+    ``max_cost · 2^-n_iters`` of the exact bottleneck on the compacted
+    clouds (≈1e-7 relative at the default), so the only structural
+    approximation left is the documented top-``n_points`` compaction —
+    the registry records both.
     """
     b1, e1, k1 = compact_top_k(d1, k, n_points, cap)
     b2, e2, k2 = compact_top_k(d2, k, n_points, cap)
-    c1 = augmented_cost(b1, e1, k1, b2, e2, k2, q=1.0, ground="linf")
-    lead = c1.shape[:-2]
-    flat = c1.reshape((-1,) + c1.shape[-2:])
-    hi = jnp.max(flat, axis=(-1, -2))
+    pp, diag1, diag2 = cloud_costs(b1, e1, k1, b2, e2, k2, q=1.0,
+                                   ground="linf")
+    lead = pp.shape[:-2]
+    kk = n_points
+    ppf = jnp.broadcast_to(pp, lead + (kk, kk)).reshape(-1, kk, kk)
+    d1f = jnp.broadcast_to(diag1, lead + (kk,)).reshape(-1, kk)
+    d2f = jnp.broadcast_to(diag2, lead + (kk,)).reshape(-1, kk)
+    k1f = jnp.broadcast_to(k1, lead + (kk,)).reshape(-1, kk)
+    k2f = jnp.broadcast_to(k2, lead + (kk,)).reshape(-1, kk)
+    validf = k1f[:, :, None] & k2f[:, None, :]
+    hi = jnp.maximum(
+        jnp.max(jnp.where(validf, ppf, 0.0), axis=(-1, -2)),
+        jnp.maximum(jnp.max(d1f, axis=-1), jnp.max(d2f, axis=-1)))
     lo = jnp.zeros_like(hi)
-    # the 0/1 feasibility read (total < 0.5) is only sound if the auction's
-    # M·ε_final suboptimality stays below ½ a unit cost — deepen the ε
-    # ladder with the matrix size (M = 2·n_points) so it always does
-    m = 2 * n_points
-    n_scales = max(4, int(np.ceil(np.log(4.0 * m) / np.log(5.0))) + 1)
+    # the 0/1 feasibility read (< 0.5 violations) is only sound if the
+    # auction's K·ε_final suboptimality stays below ½ a unit cost —
+    # deepen the ε ladder with the collapsed matrix size accordingly
+    n_scales = max(4, int(np.ceil(np.log(4.0 * kk) / np.log(5.0))) + 1)
 
     def bisect(_, bounds):
         lo, hi = bounds
         t = (lo + hi) / 2.0
-        cost01 = jnp.where(flat <= t[:, None, None], 0.0, 1.0)
-        _, total, conv, _ = ops.auction_lap(cost01, n_scales=n_scales)
+        out1 = jnp.where(k1f & (d1f > t[:, None]), 1.0, 0.0)
+        out2 = jnp.where(k2f & (d2f > t[:, None]), 1.0, 0.0)
+        c01 = jnp.where(ppf > t[:, None, None], 1.0, 0.0)
+        cbar01 = c01 - out1[:, :, None] - out2[:, None, :]
+        base01 = jnp.sum(out1, axis=-1) + jnp.sum(out2, axis=-1)
+        _, red, conv, _, _ = ops.auction_lap_collapsed(
+            cbar01, k1f, k2f, None, n_scales=n_scales)
         # an unconverged solve is untrusted: treat as infeasible, which can
         # only push the (upper-bound) answer up, never below W∞
-        feasible = (total < 0.5) & conv
+        feasible = (base01 + red < 0.5) & conv
         return jnp.where(feasible, lo, t), jnp.where(feasible, t, hi)
 
     lo, hi = jax.lax.fori_loop(0, n_iters, bisect, (lo, hi))

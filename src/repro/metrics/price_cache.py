@@ -1,0 +1,117 @@
+"""PriceCache: LRU of converged auction price vectors for warm starts.
+
+The collapsed forward/reverse auction (``kernels/auction_lap.py``) returns
+its converged object-price vector in max-normalized units (cost / c_scale),
+and accepts **any** nonnegative price vector as a warm start — the reverse
+phase re-grounds stale prices, so a warm start can only save rounds, never
+break optimality (the ε-CS argument is in the kernel module docstring).
+
+This module keys those vectors by ``(query LSH bucket code, candidate
+row)``: two queries landing in the same hyperplane bucket of
+``TopoIndex._lsh_codes`` are near-duplicates in the embedding metric, so
+their reduced-cost matrices against a fixed stored candidate are close and
+the converged prices of one start the other near equilibrium.  The serve
+layer (``serve/similarity.py``) looks a batch up before every exact_w
+drain and stores the converged vectors back after.
+
+Only *converged* price vectors are stored — an unconverged solve's prices
+are mid-ladder and would seed later queries with a cold ε-scale.  Misses
+return zeros, which is exactly the cold-start the solver uses anyway.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import numpy as np
+
+from repro import obs
+
+_C_HITS = obs.counter(
+    "auction.warm_start_hits",
+    help="price-cache lookups that returned a stored warm-start vector")
+_C_MISSES = obs.counter(
+    "auction.warm_start_misses",
+    help="price-cache lookups that fell back to a zero cold start")
+
+
+class PriceCache:
+    """LRU ``(bucket code bytes, candidate row) -> (n_points,) f32 prices``.
+
+    ``capacity`` bounds the number of stored vectors (LRU eviction).  The
+    cache is not thread-safe on its own; the serve layer calls it under
+    its drain lock.  ``instance`` labels the TopoScope hit/miss counters
+    so multiple servers in one process report separately.
+    """
+
+    def __init__(self, capacity: int = 4096, instance: str = ""):
+        if capacity <= 0:
+            raise ValueError(f"capacity must be positive, got {capacity}")
+        self.capacity = int(capacity)
+        self.instance = instance
+        self._store: OrderedDict[tuple[bytes, int], np.ndarray] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def lookup(self, codes: np.ndarray, rows: np.ndarray,
+               n_points: int) -> tuple[np.ndarray, int, int]:
+        """Warm-start prices for a (Q, C) batch of query×candidate pairs.
+
+        ``codes``: (Q, code_bytes) u8 packed bucket codes (one per query);
+        ``rows``: (Q, C) int candidate index rows.  Returns
+        ``(prices (Q, C, n_points) f32, hits, misses)`` — missed pairs are
+        zero rows (the solver's own cold start).
+        """
+        codes = np.asarray(codes)
+        rows = np.asarray(rows)
+        q, c = rows.shape
+        out = np.zeros((q, c, n_points), np.float32)
+        hits = 0
+        for i in range(q):
+            key_q = codes[i].tobytes()
+            for j in range(c):
+                v = self._store.get((key_q, int(rows[i, j])))
+                if v is not None and v.shape[0] == n_points:
+                    out[i, j] = v
+                    self._store.move_to_end((key_q, int(rows[i, j])))
+                    hits += 1
+        misses = q * c - hits
+        if hits:
+            _C_HITS.inc(hits, instance=self.instance)
+        if misses:
+            _C_MISSES.inc(misses, instance=self.instance)
+        return out, hits, misses
+
+    def store(self, codes: np.ndarray, rows: np.ndarray,
+              prices: np.ndarray, converged: np.ndarray) -> int:
+        """Store the converged price vectors of a finished (Q, C) batch.
+
+        ``prices``: (Q, C, n_points) f32 from ``compare_info``;
+        ``converged``: (Q, C) bool — unconverged solves are skipped (their
+        prices are mid-ε-ladder).  Returns the number of vectors stored.
+        """
+        codes = np.asarray(codes)
+        rows = np.asarray(rows)
+        prices = np.asarray(prices, np.float32)
+        converged = np.asarray(converged)
+        q, c = rows.shape
+        stored = 0
+        for i in range(q):
+            key_q = codes[i].tobytes()
+            for j in range(c):
+                if not converged[i, j]:
+                    continue
+                self._store[(key_q, int(rows[i, j]))] = prices[i, j].copy()
+                self._store.move_to_end((key_q, int(rows[i, j])))
+                stored += 1
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+        return stored
+
+    @property
+    def hits(self) -> int:
+        return int(_C_HITS.value(instance=self.instance))
+
+    @property
+    def misses(self) -> int:
+        return int(_C_MISSES.value(instance=self.instance))

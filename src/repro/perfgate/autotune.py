@@ -25,7 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, tuning
-from repro.kernels.auction_lap import auction_lap_pallas
+from repro.kernels.auction_lap import (
+    auction_lap_collapsed_pallas,
+    auction_lap_pallas,
+)
 from repro.kernels.gf2_reduce import gf2_reduce_batch_pallas
 from repro.kernels.pairwise_gram import pairwise_l1_pallas
 from repro.kernels.sinkhorn_lse import sinkhorn_lse_pallas
@@ -194,6 +197,70 @@ register_tunable(KernelTunable(
         auction_lap_pallas, c3, tile_b=c["tile_b"], interpret=_interp(),
         repeats=r),
     workload_desc=lambda q: "B8_M16" if q else "B32_M16",
+))
+
+
+def _collapsed_workload(quick: bool):
+    # random reduced-cost problems (cbar = pp − diag1 − diag2 over valid
+    # slots) plus the equivalent expanded (2K)² matrices, so the sweep can
+    # time the collapse="on"/"off" formulations on the same instances.
+    # Half the point costs are quantized to a handful of levels: graph
+    # persistence diagrams are tie-heavy (integer filtration values), and
+    # ties are what make an over-eager fwd/rev interleave ping-pong — a
+    # config must survive them to win the sweep
+    b, k = (8, 16) if quick else (32, 16)
+    ks = jax.random.split(jax.random.PRNGKey(21), 4)
+    pp = jax.random.uniform(ks[0], (b, k, k), jnp.float32, 0.0, 4.0)
+    pp = pp.at[b // 2:].set(jnp.round(pp[b // 2:] * 2.0) / 2.0)
+    d1 = jax.random.uniform(ks[1], (b, k), jnp.float32, 0.0, 2.0)
+    d2 = jax.random.uniform(ks[2], (b, k), jnp.float32, 0.0, 2.0)
+    nreal = jax.random.randint(ks[3], (b, 2), k // 2, k + 1)
+    idx = jnp.arange(k)
+    keep1 = idx[None, :] < nreal[:, :1]
+    keep2 = idx[None, :] < nreal[:, 1:]
+    valid = keep1[:, :, None] & keep2[:, None, :]
+    cbar = jnp.where(valid, pp - d1[:, :, None] - d2[:, None, :], 0.0)
+    big = 1e6
+    eye = jnp.eye(k, dtype=bool)[None]
+    tl = jnp.where(valid, pp, big)
+    tr = jnp.where(eye, jnp.where(keep1, d1, 0.0)[:, :, None], big)
+    bl = jnp.where(eye, jnp.where(keep2, d2, 0.0)[:, None, :], big)
+    br = jnp.zeros((b, k, k), jnp.float32)
+    expanded = jnp.concatenate(
+        [jnp.concatenate([tl, tr], axis=-1),
+         jnp.concatenate([bl, br], axis=-1)], axis=-2)
+    return cbar, keep1, keep2, expanded
+
+
+def _time_collapsed(w, config, repeats):
+    cbar, keep1, keep2, expanded = w
+    if config["collapse"] == "off":
+        # the legacy expanded path ignores rev_every (forward-only solver)
+        return _timed(auction_lap_pallas, expanded, tile_b=config["tile_b"],
+                      interpret=_interp(), repeats=repeats)
+    t = _timed(
+        auction_lap_collapsed_pallas, cbar, keep1, keep2,
+        jnp.zeros_like(cbar[..., 0]), tile_b=config["tile_b"],
+        rev_every=config["rev_every"], interpret=_interp(), repeats=repeats)
+    # a config that trades convergence for wall time is disqualified — an
+    # unconverged lane means uncertified (possibly wrong) distances and a
+    # price the serve-level warm-start cache must refuse to store
+    _, _, conv, _, _ = auction_lap_collapsed_pallas(
+        cbar, keep1, keep2, jnp.zeros_like(cbar[..., 0]),
+        tile_b=config["tile_b"], rev_every=config["rev_every"],
+        interpret=_interp())
+    if not bool(jnp.all(conv)):
+        return float("inf")
+    return t
+
+
+register_tunable(KernelTunable(
+    name="auction_collapsed",
+    space={"tile_b": (1, 2, 4), "rev_every": (0, 2, 8),
+           "collapse": ("on", "off")},
+    make_workload=_collapsed_workload,
+    time_config=_time_collapsed,
+    workload_desc=lambda q: "B8_K16" if q else "B32_K16",
 ))
 
 

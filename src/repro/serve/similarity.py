@@ -14,14 +14,26 @@ drain() ──► TopoServe.drain()                         (diagrams computed)
         ──► stage 2 (re-rank, ``rerank="exact_w"``): batched auction-LAP
             exact Wasserstein between each query diagram and its
             candidates' stored compacted clouds, one MetricEngine
-            ``compare`` per shape group
+            ``compare_info`` per shape group
         ──► resolve SimilarityFuture(ids, distances, backends, diagrams)
 ```
 
+``stage1_backend="exact_w"`` replaces the retrieve funnel entirely: stage 1
+scores every query against **every** stored cloud with the exact metric —
+recall 1.0 by construction, no overfetch/re-rank — which the
+reservoir-collapsed forward/reverse auction plus the **price cache** makes
+viable.  Every exact solve (stage-1 exact or stage-2 re-rank) routes
+through one ``_exact_pairs`` helper that warm-starts the solver from an
+LRU of converged price vectors keyed by ``(query LSH bucket code,
+candidate row)`` (``repro.metrics.price_cache``): near-duplicate queries
+land in the same hyperplane bucket and inherit each other's equilibrium
+prices across drains.
+
 ``stats`` reports the stages separately (``stage1_candidates``,
-``stage2_pairs``, per-stage wall seconds), and every resolved distance
-carries its backend label (``"gram"`` vs ``"exact_w"``) so clients never
-mix the coarse and exact distance scales silently.
+``stage2_pairs``, per-stage wall seconds), plus the auction telemetry
+(``auction_rounds``, ``warm_start_hits``/``misses``), and every resolved
+distance carries its backend label (``"gram"`` vs ``"exact_w"``) so
+clients never mix the coarse and exact distance scales silently.
 
 Indexing goes through the same diagram path (``add`` submits to the inner
 server and indexes at drain), so corpus and queries share compiled plans
@@ -52,11 +64,13 @@ from repro import obs
 from repro.obs import flight as _flight
 from repro.obs.context import DeadlineExceeded, resolve_submit
 from repro.index.topo_index import TopoIndex, TopoIndexConfig
-from repro.metrics.engine import compare
+from repro.metrics.engine import compare_info
+from repro.metrics.price_cache import PriceCache
 from repro.serve.futures import ServeFuture
 from repro.serve.topo_serve import TopoFuture, TopoServe, TopoServeConfig
 
 RERANKS = ("off", "exact_w")
+STAGE1_BACKENDS = ("gram", "exact_w")
 
 # TopoScope instruments (one series per server instance); ``stats`` is a
 # dict-shaped view over these.  stage1/stage2 wall-seconds are float
@@ -69,6 +83,16 @@ _C_STAGE = obs.counter(
     help="stage1 candidates fetched, stage2 exact pairs, per-stage seconds")
 _H_STAGE_S = obs.histogram(
     "similarity.stage_seconds", help="per-drain stage wall time")
+
+# auction solver telemetry for the exact_w paths (stage-1 exact backend and
+# the stage-2 re-rank both route through _exact_pairs); the warm-start
+# hit/miss counters live with the cache itself (metrics/price_cache.py)
+_C_ROUNDS = obs.counter(
+    "auction.rounds",
+    help="total bidding rounds spent by serve-side exact_w solves")
+_H_ROUNDS = obs.histogram(
+    "auction.rounds_per_pair",
+    help="mean auction rounds per pair, one observation per exact batch")
 
 # TopoWatch request-outcome instruments shared with the other frontends
 # (bucket="query"), plus the liveness/readiness gauges for /healthz//readyz.
@@ -150,9 +174,14 @@ class SimilarityServe:
                  index_config: TopoIndexConfig | None = None,
                  default_k: int = 5, mesh=None,
                  repack: str | None = None,
-                 rerank: str = "off", overfetch: int = 4):
+                 rerank: str = "off", overfetch: int = 4,
+                 stage1_backend: str = "gram",
+                 price_cache_size: int = 4096):
         if rerank not in RERANKS:
             raise ValueError(f"unknown rerank {rerank!r}; want {RERANKS}")
+        if stage1_backend not in STAGE1_BACKENDS:
+            raise ValueError(f"unknown stage1_backend {stage1_backend!r}; "
+                             f"want {STAGE1_BACKENDS}")
         self.index = index if index is not None else TopoIndex(index_config)
         if repack is not None:
             config = dataclasses.replace(config or TopoServeConfig(),
@@ -163,6 +192,7 @@ class SimilarityServe:
         self.server = TopoServe(config, mesh=mesh)
         self.default_k = int(default_k)
         self.rerank = rerank
+        self.stage1_backend = stage1_backend
         self.overfetch = max(int(overfetch), 1)
         self._lock = threading.Lock()
         # serializes drains: the TopoIndex is not internally synchronized, so
@@ -172,6 +202,10 @@ class SimilarityServe:
         self._pending_adds: list[tuple[TopoFuture, Optional[str]]] = []
         self._stopped = threading.Event()
         self._obs_instance = obs.next_instance("sim")
+        # converged price vectors for exact_w warm starts, keyed by
+        # (query LSH bucket code, candidate row); used by _exact_pairs
+        self._price_cache = PriceCache(price_cache_size,
+                                       instance=self._obs_instance)
 
     @property
     def stats(self) -> dict:
@@ -194,6 +228,9 @@ class SimilarityServe:
                                              stage="2")),
             "cancelled": int(_C_CANCELLED.total(instance=inst)),
             "deadline_exceeded": int(_C_DEADLINE.total(instance=inst)),
+            "auction_rounds": int(_C_ROUNDS.value(instance=inst)),
+            "warm_start_hits": self._price_cache.hits,
+            "warm_start_misses": self._price_cache.misses,
         }
 
     # ------------------------------------------------------------- ingest
@@ -327,29 +364,37 @@ class SimilarityServe:
                 sims = [ready[i][1] for i in idxs]
                 try:
                     k_max = max(sim.k for sim in sims)
-                    k_fetch = (k_max * self.overfetch
-                               if self.rerank != "off" else k_max)
-                    t0 = time.perf_counter()
-                    with obs.span("similarity.stage1", frontend="similarity",
-                                  k=k_fetch) as sp1:
-                        res = self.index.query(batch, k=k_fetch)
-                        n_cand = sum(len(row) for row in res.ids)
-                        sp1.set(candidates=n_cand)
-                    dt1 = time.perf_counter() - t0
-                    inst = self._obs_instance
-                    _C_STAGE.inc(dt1, instance=inst, what="seconds",
-                                 stage="1")
-                    _C_STAGE.inc(n_cand, instance=inst, what="candidates",
-                                 stage="1")
-                    _H_STAGE_S.observe(dt1, instance=inst, stage="1")
-                    ids, dists, backends = res.ids, res.distances, res.backends
-                    if self.rerank == "exact_w":
-                        with obs.span("similarity.stage2",
-                                      frontend="similarity") as sp2:
-                            ids, dists, backends = self._rerank_exact(
-                                batch, res)
-                            sp2.set(pairs=res.rows.shape[0]
-                                    * res.rows.shape[1])
+                    if self.stage1_backend == "exact_w":
+                        # exact stage 1: no retrieve funnel, no stage 2 —
+                        # every corpus entry is scored exactly already
+                        ids, dists, backends = self._stage1_exact(
+                            batch, k_max)
+                    else:
+                        k_fetch = (k_max * self.overfetch
+                                   if self.rerank != "off" else k_max)
+                        t0 = time.perf_counter()
+                        with obs.span("similarity.stage1",
+                                      frontend="similarity",
+                                      k=k_fetch) as sp1:
+                            res = self.index.query(batch, k=k_fetch)
+                            n_cand = sum(len(row) for row in res.ids)
+                            sp1.set(candidates=n_cand)
+                        dt1 = time.perf_counter() - t0
+                        inst = self._obs_instance
+                        _C_STAGE.inc(dt1, instance=inst, what="seconds",
+                                     stage="1")
+                        _C_STAGE.inc(n_cand, instance=inst,
+                                     what="candidates", stage="1")
+                        _H_STAGE_S.observe(dt1, instance=inst, stage="1")
+                        ids, dists, backends = (res.ids, res.distances,
+                                                res.backends)
+                        if self.rerank == "exact_w":
+                            with obs.span("similarity.stage2",
+                                          frontend="similarity") as sp2:
+                                ids, dists, backends = self._rerank_exact(
+                                    batch, res)
+                                sp2.set(pairs=res.rows.shape[0]
+                                        * res.rows.shape[1])
                 except Exception as e:  # resolve, never wedge waiting clients
                     for sim in sims:
                         sim._fail(e)
@@ -408,24 +453,27 @@ class SimilarityServe:
     def stop(self) -> None:
         self._stopped.set()
 
-    # ------------------------------------------------------------- rerank
+    # -------------------------------------------------------- exact solves
 
-    def _rerank_exact(self, batch, res):
-        """Stage 2: exact re-rank of the stage-1 candidates.
+    def _exact_pairs(self, batch, rows):
+        """exact_w distances for row-aligned (Q, C) query×candidate pairs.
 
-        One batched MetricEngine ``compare(metric="exact_w")`` between the
-        query diagrams (broadcast per candidate) and the candidates' stored
-        compacted clouds; the pair count is padded to the next power of two
-        so the auction kernel sees a bounded ladder of batch shapes.
-        Returns ``(ids, dists, backends)`` reordered by exact distance.
+        The one exact-solve path the stage-1 exact backend and the stage-2
+        re-rank share: gathers the candidates' stored compacted clouds,
+        warm-starts the collapsed auction from the price cache (keyed by
+        query LSH bucket code × candidate row), pads the pair count to the
+        next power of two (bounded ladder of compiled batch shapes), and
+        stores the converged price vectors back for later drains.  Returns
+        the (Q, C) float32 distance matrix.
         """
-        rows = res.rows                             # (Q, C) index rows
         q, c = rows.shape
-        t0 = time.perf_counter()
+        cfg = self.index.config
         cand = self.index.clouds(rows)        # leaves (Q, C, n_points)
         left = jax.tree.map(
             lambda x: jnp.broadcast_to(x[:, None], (q, c) + x.shape[1:]),
             batch)
+        codes = self.index.query_codes(batch)
+        prices0, _, _ = self._price_cache.lookup(codes, rows, cfg.n_points)
         qc = q * c
         r = 1 << (qc - 1).bit_length()
 
@@ -438,14 +486,68 @@ class SimilarityServe:
                 return jnp.concatenate([x, fill], axis=0)
             return jax.tree.map(one, t)
 
-        cfg = self.index.config
-        d = np.asarray(compare(flat_pad(left), flat_pad(cand),
-                               metric="exact_w", k=cfg.k, cap=cfg.cap,
-                               n_points=cfg.n_points))[:qc].reshape(q, c)
+        w, conv, rounds, prices = compare_info(
+            flat_pad(left), flat_pad(cand), metric="exact_w", k=cfg.k,
+            cap=cfg.cap, n_points=cfg.n_points,
+            prices=flat_pad(jnp.asarray(prices0)))
+        rounds = np.asarray(rounds)[:qc]
+        inst = self._obs_instance
+        _C_ROUNDS.inc(int(rounds.sum()), instance=inst)
+        _H_ROUNDS.observe(float(rounds.mean()), instance=inst)
+        self._price_cache.store(
+            codes, rows, np.asarray(prices)[:qc].reshape(q, c, -1),
+            np.asarray(conv)[:qc].reshape(q, c))
+        return np.asarray(w)[:qc].reshape(q, c)
+
+    def _stage1_exact(self, batch, k_max):
+        """Stage 1 with ``stage1_backend="exact_w"``: score the whole corpus.
+
+        Every query is matched exactly against **every** stored cloud — no
+        retrieve funnel, so recall is 1.0 by construction and there is no
+        stage 2.  Q·N auction solves per drain, made viable by the
+        collapsed solver and the price-cache warm starts; reported under
+        ``stage="1"`` so ``stats`` separates it from the gram stage.
+        """
+        q = batch.birth.shape[0]
+        n = len(self.index)
+        rows = np.broadcast_to(np.arange(n), (q, n))
+        t0 = time.perf_counter()
+        with obs.span("similarity.stage1", frontend="similarity",
+                      backend="exact_w", k=k_max) as sp1:
+            d = self._exact_pairs(batch, rows)
+            sp1.set(candidates=q * n)
+        dt1 = time.perf_counter() - t0
+        inst = self._obs_instance
+        _C_STAGE.inc(dt1, instance=inst, what="seconds", stage="1")
+        _C_STAGE.inc(q * n, instance=inst, what="candidates", stage="1")
+        _H_STAGE_S.observe(dt1, instance=inst, stage="1")
+        kk = min(int(k_max), n)
+        order = np.argsort(d, axis=-1, kind="stable")[:, :kk]
+        ids_all = self.index.ids
+        ids = [[ids_all[j] for j in row] for row in order]
+        dists = np.take_along_axis(d, order, axis=-1).astype(np.float32)
+        backends = [["exact_w"] * kk for _ in range(q)]
+        return ids, dists, backends
+
+    # ------------------------------------------------------------- rerank
+
+    def _rerank_exact(self, batch, res):
+        """Stage 2: exact re-rank of the stage-1 candidates.
+
+        One batched ``compare_info(metric="exact_w")`` (via
+        :meth:`_exact_pairs`, so re-rank solves share the price-cache warm
+        starts) between the query diagrams and the candidates' stored
+        clouds.  Returns ``(ids, dists, backends)`` reordered by exact
+        distance.
+        """
+        rows = res.rows                             # (Q, C) index rows
+        q, c = rows.shape
+        t0 = time.perf_counter()
+        d = self._exact_pairs(batch, np.asarray(rows))
         order = np.argsort(d, axis=-1, kind="stable")
         dt2 = time.perf_counter() - t0
         inst = self._obs_instance
-        _C_STAGE.inc(qc, instance=inst, what="pairs", stage="2")
+        _C_STAGE.inc(q * c, instance=inst, what="pairs", stage="2")
         _C_STAGE.inc(dt2, instance=inst, what="seconds", stage="2")
         _H_STAGE_S.observe(dt2, instance=inst, stage="2")
         ids = [[res.ids[i][j] for j in order[i]] for i in range(q)]

@@ -1,0 +1,320 @@
+"""Collapsed forward/reverse auction solver + price cache (ISSUE 9).
+
+The tentpole contracts:
+
+* the reservoir-collapsed K×K formulation reaches the same optimum as the
+  expanded (2K)² matrix — **bit-for-bit** on the named degenerate inputs
+  (empty diagrams, all-on-diagonal, single point vs large diagram), where
+  the optimum is unique, and within f32 tolerance on random inputs (both
+  matchings are ε-optimal; tie-breaks may differ by an ulp);
+* ``expand_collapsed_assignment`` always produces a valid permutation
+  whose expanded-matrix cost equals the collapsed total;
+* warm-starting from *any* nonnegative price vector preserves optimality
+  (the reverse phase re-grounds stale prices);
+* the f32 price-resolution stall detector terminates the per-scale loop
+  (regression pin for the PR 5 livelock);
+* the serve-level price cache LRU round-trips converged vectors and the
+  ``stage1_backend="exact_w"`` drain resolves with exact backends.
+
+Rides the conftest ``hypothesis_or_stub`` shim: without hypothesis the
+property test skips cleanly and the plain tests still run.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from tests.conftest import hypothesis_or_stub
+
+from repro.kernels import ops, ref as kref, tuning
+from repro.kernels.auction_lap import (
+    auction_solve,
+    auction_solve_collapsed,
+    expand_collapsed_assignment,
+)
+from repro.metrics import reference as mref
+from repro.metrics.engine import compare, compare_info
+from repro.metrics.exact import (
+    augmented_cost,
+    collapsed_cost,
+    exact_w,
+    exact_w_info,
+)
+from repro.metrics.price_cache import PriceCache
+from repro.metrics.testing import diagram_points, random_diagram
+
+given, settings, st = hypothesis_or_stub()
+
+CAP = 64.0
+
+
+def _solve_both(b1, e1, k1, b2, e2, k2, ground="l2"):
+    """Solve one cloud pair both ways; return totals + the expanded
+    evaluation of the collapsed assignment (all plain floats)."""
+    b1, e1, b2, e2 = (jnp.asarray(x, jnp.float32) for x in (b1, e1, b2, e2))
+    k1 = jnp.asarray(k1, bool)
+    k2 = jnp.asarray(k2, bool)
+    cbar, base = collapsed_cost(b1, e1, k1, b2, e2, k2, ground=ground)
+    p2o, red, conv, _, _ = auction_solve_collapsed(cbar, k1, k2)
+    assert bool(conv)
+    cost = augmented_cost(b1, e1, k1, b2, e2, k2, ground=ground)
+    _, tot_exp, conv_e, _ = auction_solve(cost)
+    assert bool(conv_e)
+    perm = np.asarray(expand_collapsed_assignment(p2o, k1, k2))
+    assert sorted(perm.tolist()) == list(range(perm.shape[0]))
+    evaluated = float(jnp.sum(cost[jnp.arange(perm.shape[0]), perm]))
+    return float(base + red), float(tot_exp), evaluated
+
+
+def test_degenerate_bitforbit_empty():
+    k = 8
+    z = np.zeros(k, np.float32)
+    none = np.zeros(k, bool)
+    tot_c, tot_e, ev = _solve_both(z, z, none, z, z, none)
+    assert tot_c == tot_e == ev == 0.0
+
+
+def test_degenerate_bitforbit_all_on_diagonal():
+    # every point has zero persistence: diag costs 0, everything drops to
+    # the reservoir at exactly 0 in both formulations
+    k = 8
+    b1 = np.linspace(0.0, 2.0, k).astype(np.float32)
+    b2 = np.linspace(0.5, 3.0, k).astype(np.float32)
+    all_k = np.ones(k, bool)
+    tot_c, tot_e, ev = _solve_both(b1, b1, all_k, b2, b2, all_k)
+    assert tot_c == tot_e == ev == 0.0
+
+
+def test_degenerate_bitforbit_single_vs_large():
+    # one real point vs a full diagram, dyadic coordinates under the linf
+    # ground metric (diag = pers/2, no √2): every cost entry and every
+    # partial sum is exact in f32 and the optimum is unique, so the
+    # collapsed total, the expanded optimum, and the expanded evaluation
+    # of the reconstructed assignment must agree bit-for-bit
+    k = 8
+    b1 = np.zeros(k, np.float32)
+    e1 = np.zeros(k, np.float32)
+    b1[0], e1[0] = 1.0, 3.0
+    k1 = np.zeros(k, bool)
+    k1[0] = True
+    b2 = np.asarray([1.0, 4.0, 0.5, 2.0, 8.0, 1.5, 0.25, 6.0], np.float32)
+    e2 = b2 + np.asarray([2.5, 1.0, 0.5, 4.0, 2.0, 0.75, 0.25, 1.0],
+                         np.float32)
+    k2 = np.ones(k, bool)
+    tot_c, tot_e, ev = _solve_both(b1, e1, k1, b2, e2, k2, ground="linf")
+    assert tot_c == ev, (tot_c, ev)
+    assert tot_c == tot_e, (tot_c, tot_e)
+    # and it is the true optimum
+    want = mref.wasserstein_exact([(1.0, 3.0)], list(zip(b2, e2)), q=2.0,
+                                  ground="linf")
+    assert abs(tot_c ** 0.5 - want) <= 1e-5
+
+
+def test_collapsed_matches_expanded_random():
+    rng = np.random.default_rng(23)
+    for _ in range(20):
+        k = 10
+        n1, n2 = int(rng.integers(0, k + 1)), int(rng.integers(0, k + 1))
+        b1 = rng.uniform(0, 3, k).astype(np.float32)
+        e1 = (b1 + rng.uniform(0.01, 3, k)).astype(np.float32)
+        b2 = rng.uniform(0, 3, k).astype(np.float32)
+        e2 = (b2 + rng.uniform(0.01, 3, k)).astype(np.float32)
+        k1 = np.arange(k) < n1
+        k2 = np.arange(k) < n2
+        tot_c, tot_e, ev = _solve_both(b1, e1, k1, b2, e2, k2)
+        # the reconstructed assignment must evaluate to the collapsed
+        # total exactly; the two independent solves agree to f32 roundoff
+        assert tot_c == pytest.approx(ev, abs=1e-5)
+        assert tot_c == pytest.approx(tot_e, abs=1e-4)
+
+
+def test_warm_start_any_nonneg_prices_stays_optimal():
+    rng = np.random.default_rng(29)
+    k = 12
+    cbar = jnp.asarray(rng.uniform(-2, 2, (k, k)).astype(np.float32))
+    k1 = jnp.asarray(np.arange(k) < 9)
+    k2 = jnp.asarray(np.arange(k) < 7)
+    _, red0, conv0, _, price = auction_solve_collapsed(cbar, k1, k2)
+    assert bool(conv0)
+    for price0 in (price,                                     # converged
+                   jnp.asarray(rng.uniform(0, 5, k), jnp.float32),  # junk
+                   jnp.full((k,), 100.0, jnp.float32)):       # stale-high
+        _, red, conv, _, _ = auction_solve_collapsed(cbar, k1, k2, price0)
+        assert bool(conv)
+        assert float(red) == pytest.approx(float(red0), abs=1e-5)
+
+
+def test_stall_detector_terminates_f32_livelock():
+    # regression pin for the PR 5 f32 price-resolution livelock: an ε far
+    # below the f32 resolution of the prices means bids can stop moving
+    # the price vector entirely; the stall detector must still terminate
+    # the scale loop and return a feasible matching
+    rng = np.random.default_rng(31)
+    k = 8
+    cbar = jnp.asarray((rng.uniform(-1, 1, (k, k)) * 1e6).astype(np.float32))
+    k1 = jnp.asarray(np.ones(k, bool))
+    k2 = jnp.asarray(np.ones(k, bool))
+    p2o, red, conv, rounds, _ = auction_solve_collapsed(
+        cbar, k1, k2, eps0=1e-12, eps_factor=1.0, n_scales=1)
+    assert int(rounds) > 0  # it ran…
+    p2o = np.asarray(p2o)
+    owned = p2o[p2o >= 0]
+    assert len(set(owned.tolist())) == len(owned)  # …to a feasible matching
+    assert np.isfinite(float(red))
+
+
+def test_collapsed_kernel_matches_jnp_oracle():
+    rng = np.random.default_rng(17)
+    b, k = 12, 16
+    cbar = jnp.asarray(rng.uniform(-3, 3, (b, k, k)).astype(np.float32))
+    k1 = jnp.asarray(np.arange(k)[None, :] < rng.integers(0, k + 1, (b, 1)))
+    k2 = jnp.asarray(np.arange(k)[None, :] < rng.integers(0, k + 1, (b, 1)))
+    p_k, tot_k, conv_k, _, price_k = ops.auction_lap_collapsed(cbar, k1, k2)
+    # the ops wrapper resolves rev_every through the tuning registry (an
+    # autotune sweep axis) — the oracle must solve the same phase schedule
+    # for bit-equality to be meaningful
+    rev = int(tuning.resolve_tiles("auction_collapsed")["rev_every"])
+    p_r, tot_r, conv_r, _, price_r = jax.vmap(
+        functools.partial(kref.auction_lap_collapsed_ref,
+                          rev_every=rev))(cbar, k1, k2)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_r))
+    np.testing.assert_array_equal(np.asarray(tot_k), np.asarray(tot_r))
+    np.testing.assert_array_equal(np.asarray(conv_k), np.asarray(conv_r))
+    np.testing.assert_array_equal(np.asarray(price_k), np.asarray(price_r))
+
+
+def test_exact_w_collapse_modes_agree_and_validate():
+    rng = np.random.default_rng(19)
+    pairs = [(random_diagram(rng, essential=int(rng.integers(0, 3))),
+              random_diagram(rng)) for _ in range(12)]
+    d1 = jax.tree.map(lambda *xs: jnp.stack(xs), *[a for a, _ in pairs])
+    d2 = jax.tree.map(lambda *xs: jnp.stack(xs), *[b for _, b in pairs])
+    w_on, conv_on, r_on = exact_w_info(d1, d2, k=1, n_points=16,
+                                       collapse="on")
+    w_off, conv_off, r_off = exact_w_info(d1, d2, k=1, n_points=16,
+                                          collapse="off")
+    assert bool(np.asarray(conv_on).all() and np.asarray(conv_off).all())
+    np.testing.assert_allclose(np.asarray(w_on), np.asarray(w_off),
+                               atol=1e-5)
+    # the perf_opt point: far fewer bidding rounds on the collapsed path
+    assert np.asarray(r_on).mean() * 5 < np.asarray(r_off).mean()
+    for i, (a, b) in enumerate(pairs):
+        want = mref.wasserstein_exact(diagram_points(a, 1, CAP),
+                                      diagram_points(b, 1, CAP), q=2.0)
+        assert abs(float(np.asarray(w_on)[i]) - want) <= 1e-5
+    with pytest.raises(ValueError, match="unknown collapse"):
+        exact_w(d1, d2, k=1, collapse="bogus")
+
+
+def test_compare_info_entry_and_warm_start_roundtrip():
+    rng = np.random.default_rng(41)
+    pairs = [(random_diagram(rng), random_diagram(rng)) for _ in range(4)]
+    d1 = jax.tree.map(lambda *xs: jnp.stack(xs), *[a for a, _ in pairs])
+    d2 = jax.tree.map(lambda *xs: jnp.stack(xs), *[b for _, b in pairs])
+    w, conv, rounds, prices = compare_info(d1, d2, metric="exact_w", k=1,
+                                           cap=CAP, n_points=16)
+    assert prices.shape == (4, 16) and bool(np.asarray(conv).all())
+    w2, conv2, _, _ = compare_info(d1, d2, metric="exact_w", k=1, cap=CAP,
+                                   n_points=16, prices=prices)
+    np.testing.assert_allclose(np.asarray(w2), np.asarray(w), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(w),
+        np.asarray(compare(d1, d2, metric="exact_w", k=1, cap=CAP,
+                           n_points=16)), atol=1e-6)
+    with pytest.raises(ValueError, match="no diagnostics"):
+        compare_info(d1, d2, metric="sw")
+    with pytest.raises(ValueError, match="does not accept"):
+        compare_info(d1, d2, metric="exact_w", n_dirs=4)
+
+
+def test_price_cache_lru_roundtrip():
+    cache = PriceCache(capacity=3, instance="test-pc")
+    codes = np.asarray([[1, 2], [3, 4]], np.uint8)       # 2 queries
+    rows = np.asarray([[0, 1], [0, 2]])                  # 2 candidates each
+    p0, hits, misses = cache.lookup(codes, rows, 4)
+    assert p0.shape == (2, 2, 4) and hits == 0 and misses == 4
+    prices = np.arange(16, dtype=np.float32).reshape(2, 2, 4)
+    conv = np.asarray([[True, True], [True, False]])
+    assert cache.store(codes, rows, prices, conv) == 3   # unconverged skipped
+    p1, hits, misses = cache.lookup(codes, rows, 4)
+    assert hits == 3 and misses == 1
+    np.testing.assert_array_equal(p1[0], prices[0])
+    np.testing.assert_array_equal(p1[1, 0], prices[1, 0])
+    np.testing.assert_array_equal(p1[1, 1], 0.0)         # never stored
+    # capacity eviction: a fourth distinct key evicts the LRU entry
+    cache.store(np.asarray([[9, 9]], np.uint8), np.asarray([[7]]),
+                np.ones((1, 1, 4), np.float32), np.asarray([[True]]))
+    assert len(cache) == 3
+    with pytest.raises(ValueError, match="capacity"):
+        PriceCache(capacity=0)
+
+
+def test_stage1_backend_exact_w_serve():
+    from repro.serve.similarity import SimilarityServe
+
+    rng = np.random.default_rng(43)
+
+    def graph(seed):
+        r = np.random.default_rng(seed)
+        n = 10
+        edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+                 if r.uniform() < 0.35]
+        return dict(edges=edges, n_vertices=n, f=r.uniform(0, 1, n).tolist())
+
+    with pytest.raises(ValueError, match="unknown stage1_backend"):
+        SimilarityServe(stage1_backend="bogus")
+    srv = SimilarityServe(stage1_backend="exact_w", rerank="off")
+    gs = [graph(s) for s in range(5)]
+    for i, g in enumerate(gs):
+        srv.add(gid=f"g{i}", **g)
+    srv.drain()
+    fut = srv.submit(k=3, **gs[2])
+    srv.drain()
+    res = fut.result(timeout=30)
+    assert res.ids[0] == "g2" and abs(res.distances[0]) < 1e-6
+    assert res.backends == ("exact_w",) * 3
+    st1 = srv.stats
+    assert st1["stage1_candidates"] == 5 and st1["auction_rounds"] > 0
+    # same bucket second time around: the price cache warm-starts
+    fut2 = srv.submit(k=3, **gs[2])
+    srv.drain()
+    assert fut2.result(timeout=30).ids == res.ids
+    assert srv.stats["warm_start_hits"] >= 5
+
+
+def _cloud_strategy(st):
+    f32 = st.floats(0.0, 4.0, width=32, allow_nan=False)
+    return st.lists(st.tuples(f32, st.floats(0.01, 4.0, width=32)),
+                    min_size=0, max_size=8)
+
+
+@given(hypothesis_or_stub()[2].data())
+@settings(max_examples=25, deadline=None)
+def test_property_collapsed_equals_expanded(data):
+    """Property: collapsed and expanded optima agree on arbitrary clouds."""
+    st_ = hypothesis_or_stub()[2]
+    pts1 = data.draw(_cloud_strategy(st_), label="pts1")
+    pts2 = data.draw(_cloud_strategy(st_), label="pts2")
+    k = 8
+
+    def pack(pts):
+        b = np.zeros(k, np.float32)
+        e = np.zeros(k, np.float32)
+        m = np.zeros(k, bool)
+        for i, (birth, pers) in enumerate(pts[:k]):
+            b[i], e[i], m[i] = birth, birth + pers, True
+        return b, e, m
+    b1, e1, k1 = pack(pts1)
+    b2, e2, k2 = pack(pts2)
+    tot_c, tot_e, ev = _solve_both(b1, e1, k1, b2, e2, k2)
+    scale = max(abs(tot_e), 1.0)
+    assert tot_c == pytest.approx(ev, abs=1e-4 * scale)
+    assert tot_c == pytest.approx(tot_e, abs=1e-4 * scale)
+    want = mref.wasserstein_exact(list(zip(b1[k1], e1[k1])),
+                                  list(zip(b2[k2], e2[k2])), q=2.0) ** 2.0
+    assert tot_c == pytest.approx(want, abs=1e-3 * scale)

@@ -113,7 +113,9 @@ def test_auction_eps_scaling_converges(random_pairs):
     d2 = stack([b for _, b in random_pairs[:16]])
     w, conv, rounds = exact_w_info(d1, d2, k=1, n_points=16)
     assert bool(np.asarray(conv).all())
-    assert (np.asarray(rounds) > 0).all()
+    # collapsed pairs with no real bidders finish in 0 rounds, so only the
+    # batch as a whole must show bidding work
+    assert (np.asarray(rounds) >= 0).all() and np.asarray(rounds).sum() > 0
     # a coarse ladder still yields a valid (if looser) matching: the total
     # can only be >= the optimum, within the documented M·ε bound
     w2 = np.asarray(exact_w(d1, d2, k=1, n_points=16, n_scales=3))
