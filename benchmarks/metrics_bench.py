@@ -27,6 +27,11 @@ Seven panels (docs/ARCHITECTURE.md §MetricEngine):
   re-rank, the SimilarityServe stage-2 code path) vs an exhaustive exact
   re-rank over a ≥10k-diagram synthetic corpus: recall@10 ≥ 0.95 required,
   with per-stage candidate counts and wall times;
+* **recall vs probes** — the multi-probe LSH trade-off at a deliberately
+  tight overfetch (2): coarse recall@10 against the exhaustive
+  embedding-metric ground truth as the ``probes`` budget sweeps 1/4/16 on
+  *one* index (the per-query ``probes=`` override — same stored codes,
+  wider masked scan);
 * **drift** — the change-detection demo: a ``community_churn_stream`` whose
   churn schedule is quiet except for injected rewiring bursts, replayed
   through a drift-scoring ``TopoStream``; the bench asserts every burst is
@@ -52,6 +57,7 @@ from repro.core.persistence_jax import Diagrams
 from repro.data import graphs as gdata
 from repro.data.temporal import community_churn_stream
 from repro.index import TopoIndex, TopoIndexConfig
+from repro.kernels import ops
 from repro.metrics import (
     bottleneck_approx,
     compare,
@@ -320,6 +326,58 @@ def _bench_rerank_recall(report: Report, quick: bool) -> float:
     return recall
 
 
+def _bench_probes_recall(report: Report, quick: bool) -> None:
+    """Coarse recall@10 vs the multi-probe budget at tight overfetch.
+
+    One LSH index with ``lsh_overfetch=2`` (too tight for single-probe to
+    saturate recall) answers the same query batch at ``probes`` 1/4/16 via
+    the per-query override — no re-index between points, and each probe
+    budget still costs one (masked) scan over the codes.  Ground truth is
+    the exhaustive embedding-L1 top-10, i.e. what ``coarse="none"`` would
+    return, so the panel isolates what the coarse stage loses and what
+    probing buys back.
+    """
+    corpus_n = 1024 if quick else 4096
+    q_n = 8 if quick else 16
+    k = 10
+    rng = np.random.default_rng(38)
+    seeds = seed_diagram_arrays(rng, n_seeds=32, s=16)
+    corpus = noisy_copies(seeds, rng, corpus_n, 0.02, 0.4)
+    queries = noisy_copies(seeds, rng, q_n, 0.03, 0.08)
+
+    index = TopoIndex(TopoIndexConfig(
+        embedding="sw", n_points=8, n_dirs=8,
+        coarse="lsh", lsh_bits=128, lsh_overfetch=2))
+    for s0 in range(0, corpus_n, 1024):
+        index.add(jax.tree.map(lambda x: x[s0:s0 + 1024], corpus))
+
+    emb_q = np.asarray(index.embed(queries))
+    g = np.asarray(ops.pairwise_l1(jnp.asarray(emb_q),
+                                   jnp.asarray(index._emb)))
+    gt = np.argsort(g, axis=-1, kind="stable")[:, :k]
+
+    first = last = None
+    for probes in (1, 4, 16):
+        res, t_q = timed(index.query, queries, k=k, probes=probes,
+                         repeats=2)
+        assert res.stats["probes"] == probes
+        hits = sum(len(set(gt[i]) & {int(r) for r in res.rows[i]})
+                   for i in range(q_n))
+        recall = hits / (k * q_n)
+        report.add("metrics_probes", f"p{probes}_recall_at_10", recall)
+        report.add("metrics_probes", f"p{probes}_candidates",
+                   res.stats["coarse_candidates"])
+        report.add("metrics_probes", f"p{probes}_query_s", t_q)
+        assert last is None or recall >= last - 0.05, (
+            f"recall fell from {last:.3f} to {recall:.3f} as probes "
+            f"rose to {probes}")
+        first = recall if first is None else first
+        last = recall
+    assert last > first, (
+        f"probing bought no recall: p1 {first:.3f} vs p16 {last:.3f} — "
+        "the overfetch=2 funnel should be visibly unsaturated")
+
+
 def _bench_stage1_exact(report: Report, quick: bool) -> None:
     """``stage1_backend="exact_w"`` vs LSH+Gram+re-rank on one corpus.
 
@@ -484,6 +542,7 @@ def run(report: Report, quick: bool = False) -> None:
     a_checked, a_failed = _bench_auction_parity(report, quick)
     _bench_blocked_sinkhorn(report, quick)   # asserts internally
     recall = _bench_rerank_recall(report, quick)
+    _bench_probes_recall(report, quick)      # asserts internally
     _bench_stage1_exact(report, quick)       # asserts internally
     _bench_two_stage_serve(report, quick)    # asserts internally
     bursts, hits, false_pos = _bench_drift(report, quick)

@@ -121,6 +121,26 @@ SUITES = {
                     note="two-stage vs exhaustive ratio"),
         ),
     ),
+    "index": Suite(
+        "benchmarks.index_bench",
+        "ShardedIndex scaling + Hamming kernel + retrieval recall",
+        references=(
+            RefSpec("*.scan_throughput", "higher", rel_band=0.60,
+                    note="critical-path coarse-scan rate; host timing "
+                         "jitter compounds with interpret-mode overhead"),
+            RefSpec("*.recall_at_10", "higher", rel_band=0.02,
+                    note="sharded two-stage retrieval quality "
+                         "(in-bench assert >= 0.98)"),
+            RefSpec("*.merge_seconds", "lower", rel_band=0.60,
+                    note="host merge of per-shard top-m survivors — the "
+                         "only serial stage of the sharded scan"),
+            RefSpec("*.kernel_speedup", "higher", rel_band=0.60,
+                    note="Pallas-vs-host ratio compounds two timings"),
+            RefSpec("*_scan_speedup", "higher", rel_band=0.30,
+                    note="4-shard critical-path scaling (>= 3x asserted "
+                         "in-bench on a >= 4-device mesh)"),
+        ),
+    ),
     "reduction": Suite(
         "benchmarks.reduction_bench",
         "ReductionEngine two-phase repack win + reduction ratio + parity",

@@ -1,2 +1,2 @@
 """TopoPipe: CoralTDA/PrunIT exact TDA reductions + multi-pod JAX LM stack."""
-__version__ = "1.6.0"
+__version__ = "1.7.0"

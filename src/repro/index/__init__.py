@@ -1,5 +1,7 @@
 """TopoIndex: retrieve→re-rank persistence-diagram similarity index over
-SW/feature embeddings (docs/ARCHITECTURE.md §TopoIndex)."""
+SW/feature embeddings, plus its mesh-sharded flavor
+(docs/ARCHITECTURE.md §TopoIndex / §ShardedIndex)."""
+from repro.index.sharded_index import ShardedIndex
 from repro.index.topo_index import QueryResult, TopoIndex, TopoIndexConfig
 
-__all__ = ["QueryResult", "TopoIndex", "TopoIndexConfig"]
+__all__ = ["QueryResult", "ShardedIndex", "TopoIndex", "TopoIndexConfig"]

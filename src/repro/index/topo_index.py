@@ -57,6 +57,20 @@ COARSE = ("none", "lsh")
 _POPCOUNT = np.array([bin(i).count("1") for i in range(256)], np.uint8)
 
 
+def clouds_to_diagrams(cl: np.ndarray, k: int) -> Diagrams:
+    """Diagrams rebuilt from stored compacted clouds ``(..., 3, n_points)``.
+
+    Shared by :meth:`TopoIndex.clouds` and the ShardedIndex shard-owner
+    gather — one definition of the cloud → Diagrams layout.
+    """
+    keep = cl[..., 2, :] > 0
+    return Diagrams(
+        birth=jnp.asarray(cl[..., 0, :]),
+        death=jnp.asarray(cl[..., 1, :]),
+        dim=jnp.where(jnp.asarray(keep), k, -1),
+        valid=jnp.asarray(keep))
+
+
 @dataclasses.dataclass(frozen=True)
 class TopoIndexConfig:
     """Embedding + query policy (fully determines the embedding space)."""
@@ -73,6 +87,7 @@ class TopoIndexConfig:
     lsh_bits: int = 128        # hyperplane code width (multiple of 8)
     lsh_seed: int = 7          # projection seed (defines the code space)
     lsh_overfetch: int = 8     # coarse candidates per query = k · overfetch
+    probes: int = 1            # multi-probe LSH budget (1 = single probe)
 
     def __post_init__(self):
         if self.embedding not in EMBEDDINGS:
@@ -86,6 +101,24 @@ class TopoIndexConfig:
             raise ValueError(
                 f"lsh_bits must be a positive multiple of 8, "
                 f"got {self.lsh_bits}")
+        if self.probes < 1:
+            raise ValueError(f"probes must be >= 1, got {self.probes}")
+        if (self.probes - 1).bit_length() >= self.lsh_bits:
+            raise ValueError(
+                f"probes={self.probes} would mask {self.flip_bits} of "
+                f"{self.lsh_bits} code bits — the coarse stage would stop "
+                "discriminating")
+
+    @property
+    def flip_bits(self) -> int:
+        """Low-margin query bits masked per query: smallest t with 2^t >= probes.
+
+        Masking the t least-confident bits of a query code out of the
+        Hamming distance equals taking the min over all 2^t flip-probe
+        codes — so a ``probes`` budget costs one masked scan, not
+        ``probes`` scans.
+        """
+        return (self.probes - 1).bit_length()
 
     @property
     def width(self) -> int:
@@ -196,17 +229,44 @@ class TopoIndex:
                 (self.config.width, self.config.lsh_bits)).astype(np.float32)
         return self._proj
 
-    def _lsh_codes(self, emb: np.ndarray) -> np.ndarray:
-        """(B, lsh_bits/8) packed hyperplane codes of (B, width) embeddings.
+    def _lsh_margins(self, emb: np.ndarray) -> np.ndarray:
+        """(B, lsh_bits) signed hyperplane margins of (B, width) embeddings.
 
         Embeddings are row-centered first: SW embeddings share a large
         positive common component (sorted nonnegative projections), and
         hyperplane signs only discriminate after that shared direction is
-        projected out.
+        projected out.  ``margin > 0`` is the code bit; ``|margin|`` is
+        the bit's confidence (what multi-probe masks by).
         """
         centered = emb - emb.mean(axis=-1, keepdims=True)
-        bits = (centered @ self._projection()) > 0
-        return np.packbits(bits, axis=-1)
+        return centered @ self._projection()
+
+    def _lsh_codes(self, emb: np.ndarray) -> np.ndarray:
+        """(B, lsh_bits/8) packed hyperplane codes of (B, width) embeddings."""
+        return np.packbits(self._lsh_margins(emb) > 0, axis=-1)
+
+    def _query_bit_masks(self, margins: np.ndarray,
+                         probes: int | None = None) -> Optional[np.ndarray]:
+        """(B, lsh_bits/8) packed query masks for multi-probe, or ``None``.
+
+        Clears the ``flip_bits`` lowest-``|margin|`` bits per query —
+        equivalent to the min over all ``2^flip_bits`` flip-probe codes
+        (see :attr:`TopoIndexConfig.flip_bits`).  ``None`` when the probe
+        budget is 1 (plain Hamming, no mask needed).
+        """
+        p = self.config.probes if probes is None else int(probes)
+        if p < 1:
+            raise ValueError(f"probes must be >= 1, got {p}")
+        t = (p - 1).bit_length()
+        if t == 0:
+            return None
+        if t >= self.config.lsh_bits:
+            raise ValueError(
+                f"probes={p} would mask {t} of {self.config.lsh_bits} bits")
+        keep = np.ones(margins.shape, bool)
+        flip = np.argpartition(np.abs(margins), t - 1, axis=-1)[:, :t]
+        np.put_along_axis(keep, flip, False, axis=-1)
+        return np.packbits(keep, axis=-1)
 
     def query_codes(self, d: Diagrams) -> np.ndarray:
         """(B, lsh_bits/8) packed LSH bucket codes of a query batch.
@@ -263,61 +323,93 @@ class TopoIndex:
                 "index was loaded from a save without stored clouds "
                 "(pre-1.4 format); re-add the diagrams to enable the "
                 "exact re-rank stage")
-        cl = self._clouds[rows]
-        keep = cl[..., 2, :] > 0
-        return Diagrams(
-            birth=jnp.asarray(cl[..., 0, :]),
-            death=jnp.asarray(cl[..., 1, :]),
-            dim=jnp.where(jnp.asarray(keep), self.config.k, -1),
-            valid=jnp.asarray(keep))
+        return clouds_to_diagrams(self._clouds[rows], self.config.k)
 
-    def _coarse_candidates(self, emb_q: np.ndarray, m: int) -> np.ndarray:
-        """(Q, m) Hamming-nearest row indices (coarse LSH stage)."""
-        codes_q = self._lsh_codes(emb_q)
-        # XOR + popcount over the packed axis: (Q, N) Hamming distances.
-        # Chunked over N so the (Q, chunk, bits/8) byte temporaries stay
-        # bounded however large the index grows (the whole point of the
-        # coarse stage is to be cheap at >10⁶ entries).
+    def _coarse_candidates(self, emb_q: np.ndarray, m: int,
+                           probes: int | None = None,
+                           chunk: int = 1 << 16) -> np.ndarray:
+        """(Q, m) Hamming-nearest row indices (coarse LSH stage).
+
+        XOR + popcount over the packed axis, streamed in ``chunk``-row
+        blocks with a running per-query top-``m`` merge — peak memory is
+        O(Q·(chunk·bits/8 + m)), never the full (Q, N) distance matrix,
+        so the host fallback stays bounded at 10⁷ entries.  With a
+        ``probes`` budget > 1 the ``flip_bits`` lowest-margin query bits
+        are masked out of the distance (one masked scan == min over all
+        flip-probe codes).  Ties break toward the lower row index, so the
+        result is deterministic and independent of chunking — the same
+        rule the sharded per-shard top-m merge uses.
+        """
+        margins = self._lsh_margins(emb_q)
+        codes_q = np.packbits(margins > 0, axis=-1)
+        mask_q = self._query_bit_masks(margins, probes)
         n = self._codes.shape[0]
-        chunk = 1 << 16
-        ham = np.empty((codes_q.shape[0], n), np.int32)
+        nq = codes_q.shape[0]
+        # running top-m on the composite key dist·N + row: boundary ties
+        # resolve to the lower row index *exactly*, whatever the chunking
+        best = np.zeros((nq, 0), np.int64)
         for s in range(0, n, chunk):
-            ham[:, s:s + chunk] = _POPCOUNT[
-                codes_q[:, None, :] ^ self._codes[None, s:s + chunk, :]
-            ].sum(axis=-1, dtype=np.int32)
-        part = np.argpartition(ham, m - 1, axis=-1)[:, :m]
-        order = np.take_along_axis(ham, part, axis=-1).argsort(
-            axis=-1, kind="stable")
-        return np.take_along_axis(part, order, axis=-1)
+            x = codes_q[:, None, :] ^ self._codes[None, s:s + chunk, :]
+            if mask_q is not None:
+                x &= mask_q[:, None, :]
+            d = _POPCOUNT[x].sum(axis=-1, dtype=np.int64)
+            key = d * n + np.arange(s, s + d.shape[1], dtype=np.int64)
+            cat = np.concatenate([best, key], axis=1)
+            if cat.shape[1] > m:
+                cat = np.take_along_axis(
+                    cat, np.argpartition(cat, m - 1, axis=-1)[:, :m], -1)
+            best = cat
+        best.sort(axis=-1)
+        return best % n
 
-    def query(self, d: Diagrams, k: int = 5) -> QueryResult:
+    def _rank_candidates(self, emb_q, cand: np.ndarray,
+                         kk: int) -> tuple[np.ndarray, np.ndarray]:
+        """Gram-rank (Q, m) candidate rows → top-``kk`` (dists, rows).
+
+        One Pallas L1 Gram call over the candidate union; shared with the
+        ShardedIndex re-rank (its host-merged coarse candidates land here
+        too, so both index flavors rank with bit-identical arithmetic).
+        """
+        union, inv = np.unique(cand, return_inverse=True)
+        inv = inv.reshape(cand.shape)
+        gram_u = np.asarray(ops.pairwise_l1(
+            emb_q, jnp.asarray(self._emb[union])))
+        # per query: distances to its own candidates only
+        q_idx = np.arange(cand.shape[0])[:, None]
+        cand_d = gram_u[q_idx, inv]                       # (Q, m)
+        order = np.argsort(cand_d, axis=-1, kind="stable")[:, :kk]
+        dists = np.take_along_axis(cand_d, order, axis=-1)
+        idx = np.take_along_axis(cand, order, axis=-1)
+        return dists, idx
+
+    def query(self, d: Diagrams, k: int = 5,
+              probes: int | None = None) -> QueryResult:
         """Batched kNN: nearest first, with per-distance backend labels.
 
         ``coarse="none"`` (or a small index): one (Q, N) Pallas Gram call.
-        ``coarse="lsh"``: Hamming top ``k·lsh_overfetch`` per query, then
-        the Gram kernel over the candidate union — distances returned are
-        always the embedding-L1 metric (backend ``"gram"``), never raw
-        Hamming counts.
+        ``coarse="lsh"``: Hamming top ``k·lsh_overfetch·probes`` per
+        query, then the Gram kernel over the candidate union — distances
+        returned are always the embedding-L1 metric (backend ``"gram"``),
+        never raw Hamming counts.  ``probes`` overrides the config's
+        multi-probe budget for this query batch: as in bucketed
+        multi-probe LSH, a ``probes`` budget examines ``probes``× the
+        candidates (one bucket's worth each), and the margin-masked scan
+        (min over all flip-probe codes) admits exactly the rows those
+        probed buckets would — still in one pass over the codes.
         """
         if not self._ids:
             raise ValueError("query on an empty TopoIndex")
         emb_q = self.embed(d)
         c = self.config
         kk = min(int(k), len(self._ids))
-        n_coarse = min(max(kk, 1) * c.lsh_overfetch, len(self._ids))
+        p = max(int(c.probes if probes is None else probes), 1)
+        n_coarse = min(max(kk, 1) * c.lsh_overfetch * p, len(self._ids))
         if c.coarse == "lsh" and n_coarse < len(self._ids):
-            cand = self._coarse_candidates(np.asarray(emb_q), n_coarse)
-            union, inv = np.unique(cand, return_inverse=True)
-            inv = inv.reshape(cand.shape)
-            gram_u = np.asarray(ops.pairwise_l1(
-                emb_q, jnp.asarray(self._emb[union])))
-            # per query: distances to its own candidates only
-            q_idx = np.arange(cand.shape[0])[:, None]
-            cand_d = gram_u[q_idx, inv]                       # (Q, m)
-            order = np.argsort(cand_d, axis=-1, kind="stable")[:, :kk]
-            dists = np.take_along_axis(cand_d, order, axis=-1)
-            idx = np.take_along_axis(cand, order, axis=-1)
-            stats = {"stage": "lsh+gram", "coarse_candidates": int(n_coarse)}
+            cand = self._coarse_candidates(np.asarray(emb_q), n_coarse,
+                                           probes=probes)
+            dists, idx = self._rank_candidates(emb_q, cand, kk)
+            stats = {"stage": "lsh+gram", "coarse_candidates": int(n_coarse),
+                     "probes": int(c.probes if probes is None else probes)}
         else:
             gram = ops.pairwise_l1(emb_q, self._device_emb())
             neg, idx = jax.lax.top_k(-gram, kk)
@@ -341,8 +433,10 @@ class TopoIndex:
 
         Writes to ``path`` verbatim (via a file handle — ``np.savez`` on a
         bare path would append ``.npz`` and break the save/load round-trip).
-        LSH codes are not stored: they are a pure function of the config
-        and the embeddings and are rebuilt on load.  An index loaded from a
+        Packed LSH codes are stored when the coarse stage is on, so a load
+        (and the ShardedIndex re-shard after it) skips the O(N·bits)
+        code rebuild; they stay a pure function of config + embeddings, so
+        pre-codes saves simply rebuild on load.  An index loaded from a
         pre-clouds save re-saves *without* a clouds array (its placeholder
         is all-zero), so a later load keeps the re-rank stage disabled
         instead of silently matching against garbage.
@@ -354,6 +448,8 @@ class TopoIndex:
         )
         if self._has_clouds:
             payload["clouds"] = self._clouds
+        if self.config.coarse == "lsh":
+            payload["codes"] = self._codes
         with open(path, "wb") as fh:
             np.savez(fh, **payload)
 
@@ -376,5 +472,11 @@ class TopoIndex:
                     (len(index._ids), 3, config.n_points), np.float32)
                 index._has_clouds = False
             if config.coarse == "lsh":
-                index._codes = index._lsh_codes(emb)
+                codes = (np.asarray(z["codes"], np.uint8)
+                         if "codes" in z.files else None)
+                if codes is not None and codes.shape == (
+                        emb.shape[0], config.lsh_bits // 8):
+                    index._codes = codes
+                else:  # pre-1.7 save (or width drift): rebuild from emb
+                    index._codes = index._lsh_codes(emb)
         return index

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.kernels import tuning
@@ -27,6 +28,7 @@ from repro.kernels.gf2_reduce import (
     gf2_reduce_batch_pallas,
     gf2_reduce_pallas,
 )
+from repro.kernels.hamming import hamming_scan_pallas, pack_codes_u32
 from repro.kernels.kcore_peel import kcore_peel_pallas
 from repro.kernels.pairwise_gram import pairwise_l1_pallas
 from repro.kernels.sinkhorn_lse import (
@@ -128,6 +130,38 @@ def pairwise_l1(x: jax.Array, y: jax.Array, tile_m: int | None = None,
                   shape=f"G{max(x.shape[0], y.shape[0])}_D{x.shape[1]}"):
         return pairwise_l1_pallas(
             x, y, tile_m=t["tile_m"], tile_n=t["tile_n"], tile_d=t["tile_d"],
+            interpret=_interpret())
+
+
+def hamming_scan(codes_q, codes_db, mask_q=None,
+                 tile_q: int | None = None,
+                 tile_n: int | None = None) -> jax.Array:
+    """(Q, N) int32 masked Hamming distances over packed LSH codes.
+
+    Accepts codes either as uint8 packed bytes (the TopoIndex storage
+    layout — repacked to uint32 words host-side via
+    :func:`repro.kernels.hamming.pack_codes_u32`) or as ready uint32
+    words.  ``mask_q`` (same packing as ``codes_q``) clears query bits
+    from the distance — the multi-probe LSH trick; ``None`` means plain
+    Hamming.
+    """
+    def as_words(a):
+        a = np.asarray(a) if not isinstance(a, jax.Array) else a
+        if a.dtype == jnp.uint32:
+            return a
+        return pack_codes_u32(np.asarray(a))
+
+    cq = as_words(codes_q)
+    cd = as_words(codes_db)
+    mq = (jnp.full(np.shape(cq), 0xFFFFFFFF, jnp.uint32)
+          if mask_q is None else as_words(mask_q))
+    t = tuning.resolve_tiles("hamming", tile_q=tile_q, tile_n=tile_n)
+    _KCALLS.inc(kernel="hamming_scan")
+    with obs.span("kernels.hamming_scan",
+                  shape=f"Q{cq.shape[0]}_N{cd.shape[0]}_W{cq.shape[1]}"):
+        return hamming_scan_pallas(
+            jnp.asarray(cq), jnp.asarray(mq), jnp.asarray(cd),
+            tile_q=t["tile_q"], tile_n=t["tile_n"],
             interpret=_interpret())
 
 

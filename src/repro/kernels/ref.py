@@ -49,6 +49,19 @@ def pairwise_l1_ref(x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), axis=-1)
 
 
+def hamming_scan_ref(codes_q: jax.Array, mask_q: jax.Array,
+                     codes_db: jax.Array) -> jax.Array:
+    """dist[i, j] = popcount((q[i] ^ c[j]) & mask[i]).
+
+    (Q, W) × (N, W) packed uint32 codes → (Q, N) int32.  Materializes the
+    full (Q, N, W) broadcast — fine as an oracle; the Pallas kernel tiles
+    the same reduction through VMEM.
+    """
+    x = jnp.bitwise_xor(codes_q[:, None, :], codes_db[None, :, :])
+    x = x & mask_q[:, None, :]
+    return jnp.sum(jax.lax.population_count(x).astype(jnp.int32), axis=-1)
+
+
 def auction_lap_ref(cost: jax.Array, **kw):
     """ε-scaled Jacobi auction on one (M, M) cost matrix (pure jnp).
 

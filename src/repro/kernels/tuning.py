@@ -37,6 +37,10 @@ DEFAULT_TILES: dict[str, dict] = {
     "auction_collapsed": {"tile_b": 1, "rev_every": 8, "collapse": "on"},
     "gf2_reduce": {"batch_mode": "vmap"},
     "domination": {"tile": 128},
+    # packed-code Hamming scan (TopoIndex coarse stage / ShardedIndex
+    # per-shard scan): the word axis rides inside a block, so only the
+    # (query, corpus) tile shape is sweepable
+    "hamming": {"tile_q": 8, "tile_n": 128},
 }
 
 _lock = threading.Lock()

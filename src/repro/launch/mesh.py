@@ -5,6 +5,7 @@ any jax import; tests/benches see the single real device).
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,6 +28,34 @@ def make_serve_mesh(n_devices: int | None = None, *, multi_pod: bool = False):
         assert n % 2 == 0, f"multi_pod serve mesh needs even device count, got {n}"
         return jax.make_mesh((2, n // 2), ("pod", "data"))
     return jax.make_mesh((n,), ("data",))
+
+
+def make_index_mesh(n_devices: int | None = None, rows: int | None = None):
+    """2D ("row", "col") mesh for ShardedIndex retrieval.
+
+    Corpus rows (embeddings, packed LSH codes, stored clouds) shard over
+    the *flattened* ("row", "col") axes for the coarse Hamming scan, while
+    the SUMMA-style distributed Gram streams query blocks along "row" with
+    partial L1 sums reduced over "col" (docs/ARCHITECTURE.md
+    §ShardedIndex).  ``rows`` defaults to the largest divisor of the
+    device count <= sqrt(n), so 4 devices give the square (2, 2) mesh and
+    one device degenerates to (1, 1).  Built from ``jax.devices()[:n]``
+    directly so benches can stand up smaller submeshes next to the full
+    one.
+    """
+    n = n_devices if n_devices is not None else len(jax.devices())
+    if rows is None:
+        rows = 1
+        r = int(n ** 0.5)
+        while r > 1:
+            if n % r == 0:
+                rows = r
+                break
+            r -= 1
+    if n < 1 or n % rows:
+        raise ValueError(f"rows={rows} does not divide device count {n}")
+    devs = np.asarray(jax.devices()[:n]).reshape(rows, n // rows)
+    return jax.sharding.Mesh(devs, ("row", "col"))
 
 
 def make_test_mesh(shape=(1, 1), axes=("data", "model")):

@@ -146,6 +146,28 @@ def cache_specs(caches, cfg, mesh: Mesh, batch: int) -> Any:
     return jax.tree_util.tree_map_with_path(leaf_spec, caches)
 
 
+def index_row_spec() -> P:
+    """Row-partition spec for ShardedIndex stores (codes / clouds / ids).
+
+    One contiguous block of corpus rows per device of the flattened
+    ("row", "col") index mesh — shard ``p`` owns rows
+    ``[p·per, (p+1)·per)``, which is also the owner rule the serve-level
+    re-rank uses to scatter cloud gathers back to shards.
+    """
+    return P(("row", "col"), None)
+
+
+def index_gram_specs() -> tuple[P, P, P]:
+    """(corpus, queries, out) specs of the SUMMA distributed Gram.
+
+    Corpus rows shard over "row" and the embedding width over "col";
+    query blocks start "row"-sharded and ring-stream via ``ppermute``;
+    the (Q, N) output is row-group sharded over "row" and replicated over
+    "col" (each column already holds the full-width ``psum``).
+    """
+    return P("row", "col"), P("row", "col"), P(None, "row")
+
+
 def to_shardings(spec_tree, mesh: Mesh):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -30,6 +30,7 @@ from repro.kernels.auction_lap import (
     auction_lap_pallas,
 )
 from repro.kernels.gf2_reduce import gf2_reduce_batch_pallas
+from repro.kernels.hamming import hamming_scan_pallas
 from repro.kernels.pairwise_gram import pairwise_l1_pallas
 from repro.kernels.sinkhorn_lse import sinkhorn_lse_pallas
 
@@ -154,6 +155,27 @@ register_tunable(KernelTunable(
     time_config=lambda x, c, r: _timed(
         pairwise_l1_pallas, x, x, interpret=_interp(), repeats=r, **c),
     workload_desc=lambda q: "G64_D256" if q else "G256_D512",
+))
+
+
+def _hamming_workload(quick: bool):
+    # packed 128-bit codes (W=4 words): the TopoIndex default; corpus size
+    # is the axis that matters — the scan is O(N·W) per query row
+    q, n = (16, 4096) if quick else (16, 32768)
+    ks = jax.random.split(jax.random.PRNGKey(17), 2)
+    cq = jax.random.randint(ks[0], (q, 4), 0, 1 << 30).astype(jnp.uint32)
+    cd = jax.random.randint(ks[1], (n, 4), 0, 1 << 30).astype(jnp.uint32)
+    mq = jnp.full((q, 4), 0xFFFFFFFF, jnp.uint32)
+    return cq, mq, cd
+
+
+register_tunable(KernelTunable(
+    name="hamming",
+    space={"tile_q": (8, 16, 32), "tile_n": (128, 256, 512)},
+    make_workload=_hamming_workload,
+    time_config=lambda w, c, r: _timed(
+        hamming_scan_pallas, *w, interpret=_interp(), repeats=r, **c),
+    workload_desc=lambda q: "Q16_N4096_W4" if q else "Q16_N32768_W4",
 ))
 
 

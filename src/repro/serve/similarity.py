@@ -63,6 +63,7 @@ import numpy as np
 from repro import obs
 from repro.obs import flight as _flight
 from repro.obs.context import DeadlineExceeded, resolve_submit
+from repro.index.sharded_index import ShardedIndex
 from repro.index.topo_index import TopoIndex, TopoIndexConfig
 from repro.metrics.engine import compare_info
 from repro.metrics.price_cache import PriceCache
@@ -176,13 +177,26 @@ class SimilarityServe:
                  repack: str | None = None,
                  rerank: str = "off", overfetch: int = 4,
                  stage1_backend: str = "gram",
-                 price_cache_size: int = 4096):
+                 price_cache_size: int = 4096,
+                 sharded: bool = False, index_mesh=None):
         if rerank not in RERANKS:
             raise ValueError(f"unknown rerank {rerank!r}; want {RERANKS}")
         if stage1_backend not in STAGE1_BACKENDS:
             raise ValueError(f"unknown stage1_backend {stage1_backend!r}; "
                              f"want {STAGE1_BACKENDS}")
-        self.index = index if index is not None else TopoIndex(index_config)
+        # sharded=True swaps in the mesh-sharded index flavor; every drain
+        # path below only touches the shared TopoIndex query surface
+        # (add/query/clouds/query_codes/ids/config), so stage-1 retrieval,
+        # the stage-2 exact re-rank (shard-owner cloud gathers), stats and
+        # obs counters all ride the sharded index transparently
+        if index is not None:
+            self.index = (ShardedIndex.from_index(index, mesh=index_mesh)
+                          if sharded and not isinstance(index, ShardedIndex)
+                          else index)
+        elif sharded:
+            self.index = ShardedIndex(index_config, mesh=index_mesh)
+        else:
+            self.index = TopoIndex(index_config)
         if repack is not None:
             config = dataclasses.replace(config or TopoServeConfig(),
                                          repack=repack)

@@ -83,3 +83,36 @@ def test_domination_kernel_drives_prunit():
         dom_fn=lambda a, m: ops.domination(a, m, tile=8),
     )
     assert (np.asarray(m1) == np.asarray(m2)).all()
+
+
+_POP8 = np.array([bin(i).count("1") for i in range(256)], np.uint8)
+
+
+@pytest.mark.parametrize("q,n,nbytes,tq,tn", [
+    (5, 37, 16, 8, 128),   # 128-bit codes, ragged rows
+    (16, 300, 8, 4, 64),   # 64-bit codes, multiple query tiles
+    (3, 9, 5, 8, 32),      # odd byte count: word padding path
+])
+def test_hamming_scan_matches_popcount_oracle(q, n, nbytes, tq, tn):
+    from repro.kernels.hamming import hamming_scan_pallas, pack_codes_u32
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(q * n)
+    q8 = rng.integers(0, 256, (q, nbytes), dtype=np.uint8)
+    c8 = rng.integers(0, 256, (n, nbytes), dtype=np.uint8)
+    m8 = rng.integers(0, 256, (q, nbytes), dtype=np.uint8)
+
+    want_plain = _POP8[q8[:, None, :] ^ c8[None, :, :]].sum(-1)
+    want_mask = _POP8[(q8[:, None, :] ^ c8[None, :, :])
+                      & m8[:, None, :]].sum(-1)
+
+    # ops wrapper accepts the u8 packed-byte storage layout directly
+    assert (np.asarray(ops.hamming_scan(q8, c8)) == want_plain).all()
+    assert (np.asarray(ops.hamming_scan(q8, c8, mask_q=m8))
+            == want_mask).all()
+    # raw kernel + jnp oracle on the u32 word layout, explicit tiles
+    qu, cu, mu = (jnp.asarray(pack_codes_u32(a)) for a in (q8, c8, m8))
+    got = hamming_scan_pallas(qu, mu, cu, tile_q=tq, tile_n=tn,
+                              interpret=True)
+    assert (np.asarray(got) == want_mask).all()
+    assert (np.asarray(ref.hamming_scan_ref(qu, mu, cu)) == want_mask).all()

@@ -1,0 +1,201 @@
+"""ShardedIndex: single-host parity, shard-owner gathers, save/load, serving.
+
+Everything here runs on however many devices exist (CI: one, so the mesh
+degenerates to (1, 1) and the tests pin the *logic* — padding, host merge,
+owner gather, re-shard-on-add).  The slow subprocess test at the bottom
+re-runs the parity checks on a simulated 4-device mesh
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4``), which cannot be
+done in-process because device count is fixed at first jax use.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.index import ShardedIndex, TopoIndex, TopoIndexConfig
+from repro.launch.mesh import make_index_mesh
+from repro.metrics.testing import noisy_copies, seed_diagram_arrays
+from repro.serve import SimilarityServe
+
+CFG_LSH = dict(embedding="sw", n_points=8, n_dirs=8, coarse="lsh",
+               lsh_bits=64, lsh_overfetch=4)
+CFG_DENSE = dict(embedding="sw", n_points=8, n_dirs=8, coarse="none")
+
+
+def _corpus(n=96, seed=11):
+    rng = np.random.default_rng(seed)
+    return noisy_copies(seed_diagram_arrays(rng, 6, 16), rng, n, 0.05, 0.6)
+
+
+def _pair(n=96, **cfg_kw):
+    """(single-host index, sharded wrap of the SAME store, corpus)."""
+    corpus = _corpus(n)
+    base = TopoIndex(TopoIndexConfig(**cfg_kw))
+    base.add(corpus)
+    return base, ShardedIndex.from_index(base), corpus
+
+
+def _slice(d, sl):
+    return jax.tree.map(lambda x: x[sl], d)
+
+
+def test_sharded_lsh_query_matches_single_host():
+    base, sharded, corpus = _pair(**CFG_LSH)
+    q = _slice(corpus, slice(0, 7))
+    want = base.query(q, k=5)
+    got = sharded.query(q, k=5)
+    assert got.ids == want.ids
+    # identical candidate sets feed the same _rank_candidates, so the
+    # distances agree to float32 exactness, not just loosely
+    np.testing.assert_allclose(got.distances, want.distances, atol=1e-6)
+    assert got.stats["stage"] == "sharded_lsh+gram"
+    assert got.stats["shards"] == sharded.n_shards
+    assert set(got.stats["mesh"]) == {"row", "col"}
+
+
+def test_sharded_dense_query_and_gram_match_single_host():
+    base, sharded, corpus = _pair(**CFG_DENSE)
+    q = _slice(corpus, slice(0, 5))
+    want = base.query(q, k=4)
+    got = sharded.query(q, k=4)
+    assert got.ids == want.ids
+    np.testing.assert_allclose(got.distances, want.distances,
+                               rtol=1e-5, atol=1e-5)
+    assert got.stats["stage"] == "sharded_gram"
+    np.testing.assert_allclose(sharded.gram(), base.gram(),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_probes_override_threads_through():
+    _, sharded, corpus = _pair(**CFG_LSH)
+    q = _slice(corpus, slice(0, 3))
+    assert sharded.query(q, k=3).stats["probes"] == 1
+    res = sharded.query(q, k=3, probes=4)
+    assert res.stats["probes"] == 4
+    np.testing.assert_allclose(res.distances[:, 0], 0.0, atol=1e-5)
+
+
+def test_sharded_clouds_owner_gather_matches_base():
+    base, sharded, _ = _pair(**CFG_LSH)
+    rows = np.array([[0, 17, 5], [95, 3, 42]])
+    want, got = base.clouds(rows), sharded.clouds(rows)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharded_save_load_roundtrip_and_reshard_on_add(tmp_path):
+    base, sharded, corpus = _pair(n=64, **CFG_LSH)
+    path = str(tmp_path / "index.npz")
+    sharded.save(path)
+    loaded = ShardedIndex.load(path)
+    q = _slice(corpus, slice(0, 4))
+    want = sharded.query(q, k=3)
+    got = loaded.query(q, k=3)
+    assert got.ids == want.ids
+    np.testing.assert_allclose(got.distances, want.distances, atol=1e-6)
+    # append after load: device state re-shards lazily and the new rows
+    # are queryable (self-match at distance ~0)
+    extra = _corpus(n=8, seed=99)
+    new_ids = loaded.add(extra, ids=[f"new{i}" for i in range(8)])
+    assert len(loaded) == 72
+    res = loaded.query(_slice(extra, slice(0, 2)), k=1)
+    assert [r[0] for r in res.ids] == new_ids[:2]
+    np.testing.assert_allclose(res.distances[:, 0], 0.0, atol=1e-5)
+
+
+def test_sharded_legacy_load_keeps_rerank_disabled(tmp_path):
+    _, sharded, corpus = _pair(n=16, **CFG_LSH)
+    path = str(tmp_path / "legacy.npz")
+    sharded.save(path)
+    with np.load(path, allow_pickle=False) as z:
+        payload = {k: z[k] for k in z.files if k not in ("clouds", "codes")}
+    with open(path, "wb") as fh:
+        np.savez(fh, **payload)
+    loaded = ShardedIndex.load(path)
+    with pytest.raises(ValueError, match="pre-1.4"):
+        loaded.clouds(np.arange(3))  # delegates to base: same contract
+    ids, dists = loaded.query(_slice(corpus, slice(0, 2)), k=3)
+    assert len(ids) == 2  # coarse+gram stages still work without clouds
+
+
+def test_similarity_serve_sharded_end_to_end():
+    srv = SimilarityServe(
+        index_config=TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8),
+        default_k=2, rerank="exact_w", overfetch=2, sharded=True)
+    assert isinstance(srv.index, ShardedIndex)
+    srv.add(edges=[(0, 1), (1, 2), (2, 0)], n_vertices=3, gid="tri")
+    srv.add(edges=[(0, 1), (1, 2), (2, 3), (3, 0)], n_vertices=4, gid="sq")
+    srv.add(edges=[(0, 1), (1, 2)], n_vertices=3, gid="path")
+    fut = srv.submit(edges=[(0, 1), (1, 2), (2, 0)], n_vertices=3)
+    assert srv.drain() == 1
+    r = fut.result(timeout=10)
+    # the serve re-rank gathers clouds through the shard-owner path
+    assert r.ids[0] == "tri" and r.distances[0] == pytest.approx(0.0)
+    assert r.backends == ("exact_w",) * len(r.ids)
+    assert srv.stats["stage2_pairs"] >= 2
+
+
+def test_sharded_wrap_of_existing_serve_index():
+    index = TopoIndex(TopoIndexConfig(**CFG_LSH))
+    index.add(_corpus(n=32))
+    srv = SimilarityServe(index=index, sharded=True, default_k=1)
+    assert isinstance(srv.index, ShardedIndex)
+    assert srv.index.base is index  # store of record is the passed index
+
+
+_MESH_SMOKE = textwrap.dedent("""
+    import numpy as np, jax
+    from repro.index import ShardedIndex, TopoIndex, TopoIndexConfig
+    from repro.launch.mesh import make_index_mesh
+    from repro.metrics.testing import noisy_copies, seed_diagram_arrays
+
+    assert jax.device_count() == 4, jax.device_count()
+    rng = np.random.default_rng(7)
+    corpus = noisy_copies(seed_diagram_arrays(rng, 6, 16), rng, 96,
+                          0.05, 0.6)
+    q = jax.tree.map(lambda x: x[:5], corpus)
+    for cfg in (dict(embedding="sw", n_points=8, n_dirs=8, coarse="lsh",
+                     lsh_bits=64, lsh_overfetch=4),
+                dict(embedding="sw", n_points=8, n_dirs=8, coarse="none")):
+        base = TopoIndex(TopoIndexConfig(**cfg))
+        base.add(corpus)
+        sharded = ShardedIndex.from_index(base)
+        assert sharded.n_shards == 4
+        assert dict(zip(sharded.mesh.axis_names,
+                        sharded.mesh.devices.shape)) == \\
+            {"row": 2, "col": 2}
+        want, got = base.query(q, k=5), sharded.query(q, k=5)
+        assert got.ids == want.ids, (cfg["coarse"], got.ids, want.ids)
+        np.testing.assert_allclose(got.distances, want.distances,
+                                   rtol=1e-5, atol=1e-5)
+        rows = np.array([0, 17, 95, 48])
+        for a, b in zip(jax.tree.leaves(base.clouds(rows)),
+                        jax.tree.leaves(sharded.clouds(rows))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # non-square submesh: 2 of the 4 devices on one row
+    p2 = ShardedIndex.from_index(base, mesh=make_index_mesh(2))
+    assert p2.n_shards == 2
+    got2 = p2.query(q, k=5)
+    assert got2.ids == want.ids
+    print("MESH_SMOKE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_four_device_mesh_parity_subprocess():
+    """End-to-end parity on a simulated 4-device mesh (fresh process —
+    XLA's host device count is fixed at first jax use)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", _MESH_SMOKE],
+                          capture_output=True, text=True, timeout=600,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))), env=env)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "MESH_SMOKE_OK" in proc.stdout

@@ -253,3 +253,122 @@ def test_similarity_serve_mixed_buckets_in_one_drain():
     assert f_big.result(timeout=5).ids == ("big",)
     assert f_small.result().diagrams.birth.shape != \
         f_big.result().diagrams.birth.shape
+
+
+def _noisy_lsh_index(n=256, seed=23, **cfg_kw):
+    from repro.metrics.testing import noisy_copies, seed_diagram_arrays
+
+    rng = np.random.default_rng(seed)
+    corpus = noisy_copies(seed_diagram_arrays(rng, n_seeds=8, s=16),
+                          rng, n, 0.02, 0.32)
+    cfg = TopoIndexConfig(embedding="sw", n_points=8, n_dirs=8,
+                          coarse="lsh", lsh_bits=64, lsh_overfetch=8,
+                          **cfg_kw)
+    index = TopoIndex(cfg)
+    index.add(corpus)
+    return index, corpus
+
+
+def test_coarse_candidates_chunked_merge_is_chunk_invariant():
+    # the running top-m merge must return the same candidates (same order)
+    # whatever the streaming chunk size — boundary ties resolve by row
+    index, _ = _noisy_lsh_index()
+    emb_q = index._emb[:6]
+    want = index._coarse_candidates(emb_q, 20)
+    for chunk in (1, 7, 20, 100, 256, 1000):
+        got = index._coarse_candidates(emb_q, 20, chunk=chunk)
+        np.testing.assert_array_equal(got, want, err_msg=f"chunk={chunk}")
+
+
+def test_multi_probe_mask_equals_min_over_flip_codes():
+    # masking the t lowest-margin query bits == min Hamming over all 2^t
+    # flip-probe codes: check the identity exhaustively against the corpus
+    index, _ = _noisy_lsh_index()
+    emb_q = index._emb[:4]
+    margins = index._lsh_margins(emb_q)
+    probes, t = 4, 2
+    mask = index._query_bit_masks(margins, probes)
+    bits = index.config.lsh_bits
+    assert mask.shape == (4, bits // 8)
+    pop = np.array([bin(i).count("1") for i in range(256)], np.uint8)
+    assert (pop[mask].sum(-1) == bits - t).all()  # exactly t bits cleared
+
+    codes_db = index._codes
+    masked = pop[(np.packbits(margins > 0, axis=-1)[:, None, :]
+                  ^ codes_db[None]) & mask[:, None, :]].sum(-1)
+    flip_pos = np.argpartition(np.abs(margins), t - 1, axis=-1)[:, :t]
+    best = None
+    for assign in range(1 << t):
+        b = margins > 0
+        for j in range(t):
+            b[np.arange(4), flip_pos[:, j]] = bool((assign >> j) & 1)
+        d = pop[np.packbits(b, axis=-1)[:, None, :] ^ codes_db[None]].sum(-1)
+        best = d if best is None else np.minimum(best, d)
+    np.testing.assert_array_equal(masked, best)
+
+
+def test_probes_config_validation_and_flip_bits():
+    for probes, t in [(1, 0), (2, 1), (3, 2), (4, 2), (5, 3), (8, 3),
+                      (9, 4)]:
+        assert TopoIndexConfig(probes=probes).flip_bits == t
+    with pytest.raises(ValueError, match="probes"):
+        TopoIndexConfig(probes=0)
+    with pytest.raises(ValueError, match="discriminating"):
+        TopoIndexConfig(lsh_bits=8, probes=1 << 9)
+    index, corpus = _noisy_lsh_index(probes=4)
+    q = jax.tree.map(lambda x: x[:4], corpus)
+    res = index.query(q, k=5)
+    assert res.stats["probes"] == 4
+    assert index.query(q, k=5, probes=1).stats["probes"] == 1  # override
+    np.testing.assert_allclose(res.distances[:, 0], 0.0, atol=1e-5)
+
+
+def test_save_load_persists_packed_codes(tmp_path):
+    index, corpus = _noisy_lsh_index(n=32)
+    path = str(tmp_path / "index.npz")
+    index.save(path)
+    with np.load(path, allow_pickle=False) as z:
+        assert "codes" in z.files  # persisted since 1.7, not rebuilt
+        payload = {k: z[k] for k in z.files}
+    # loads must trust the stored codes: plant a distinctive byte pattern
+    # and check it comes back verbatim instead of a recompute
+    payload["codes"] = payload["codes"] ^ np.uint8(0xAA)
+    with open(path, "wb") as fh:
+        np.savez(fh, **payload)
+    loaded = TopoIndex.load(path)
+    np.testing.assert_array_equal(loaded._codes, index._codes ^ 0xAA)
+    # a pre-1.7 save (no codes key) rebuilds them from the embeddings
+    del payload["codes"]
+    with open(path, "wb") as fh:
+        np.savez(fh, **payload)
+    rebuilt = TopoIndex.load(path)
+    np.testing.assert_array_equal(rebuilt._codes, index._codes)
+
+
+def test_legacy_load_keeps_rerank_disabled_across_resave(tmp_path):
+    index, corpus = _noisy_lsh_index(n=16)
+    path = str(tmp_path / "legacy.npz")
+    index.save(path)
+    with np.load(path, allow_pickle=False) as z:
+        payload = {k: z[k] for k in z.files}
+    del payload["clouds"]  # pre-1.4 format: no stored clouds
+    del payload["codes"]
+    with open(path, "wb") as fh:
+        np.savez(fh, **payload)
+    loaded = TopoIndex.load(path)
+    assert not loaded._has_clouds
+    with pytest.raises(ValueError, match="pre-1.4"):
+        loaded.clouds(np.arange(3))
+    ids, dists = loaded.query(jax.tree.map(lambda x: x[:2], corpus), k=3)
+    assert len(ids) == 2  # queries still work without the re-rank stage
+    # a re-save of the legacy load must NOT resurrect the clouds array —
+    # the placeholder is all-zero garbage, not the real diagrams
+    path2 = str(tmp_path / "resaved.npz")
+    loaded.save(path2)
+    with np.load(path2, allow_pickle=False) as z:
+        assert "clouds" not in z.files
+        assert "codes" in z.files  # codes ARE pure config·emb: safe to save
+    again = TopoIndex.load(path2)
+    assert not again._has_clouds
+    with pytest.raises(ValueError, match="pre-1.4"):
+        again.clouds(np.arange(3))
